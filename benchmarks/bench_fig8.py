@@ -1,0 +1,35 @@
+"""Paper Fig. 8 — per-token latency is linear in the number of layers,
+which justifies the paper's reduced-layer evaluation methodology (and
+ours: smoke models are reduced the same way)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, csv_row, timeit
+from repro.core.hetero import ColocatedEngine
+
+
+def run(print_fn=print):
+    lat = {}
+    for layers in (1, 2, 4, 8):
+        cfg, params = bench_model(layers=layers, d_model=128)
+        eng = ColocatedEngine(params, cfg, batch=8, cache_len=96)
+        eng.load_prefill(jnp.ones((8, 32), jnp.int32), jnp.full((8,), 32))
+        tok = jnp.ones((8, 1), jnp.int32)
+        t = timeit(lambda: eng.decode_step(tok), warmup=2, iters=8)
+        lat[layers] = t
+        print_fn(csv_row(f"fig8_layers_{layers}", t * 1e6, ""))
+    xs = np.asarray(sorted(lat))
+    ys = np.asarray([lat[x] for x in xs])
+    slope, intercept = np.polyfit(xs, ys, 1)
+    pred = slope * xs + intercept
+    r2 = 1 - np.sum((ys - pred) ** 2) / np.sum((ys - ys.mean()) ** 2)
+    print_fn(csv_row("fig8_linearity", slope * 1e6,
+                     f"R2={r2:.4f} (paper: 'almost linearly related')"))
+    return {"r2": float(r2)}
+
+
+if __name__ == "__main__":
+    run()

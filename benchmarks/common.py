@@ -1,0 +1,30 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def bench_model(arch="granite-3-8b", layers=2, d_model=128, vocab=512):
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.core.config import get_arch
+    from repro.models import model as M
+    cfg = get_arch(arch).reduced(layers=layers, d_model=d_model, vocab=vocab)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def timeit(fn, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,191 @@
+"""Roofline term derivation per (arch x shape x mesh) from the dry-run
+artifacts + analytic workload model.
+
+Three terms (seconds per step, per chip):
+    compute    = FLOPs / (chips * peak_flops)
+    memory     = bytes / (chips * hbm_bw)
+    collective = wire_bytes / (chips * link_bw)
+
+FLOPs/bytes use the exact analytic workload model below (the paper's
+quantities); the compiled artifact supplies (a) the collective schedule
+(kinds/sizes parsed from optimized HLO) and (b) a cost_analysis
+cross-check.  NOTE XLA's cost_analysis counts a while-loop body ONCE; the
+layer scan's static trip count (periods) is known per arch, so the
+cross-check column scales the raw number by it (decode has no inner
+scans; train/prefill add chunk-scan factors — see EXPERIMENTS §Roofline
+methodology).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.config import SHAPES, ModelConfig, get_arch
+
+# v5e chip constants (per brief)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _bytes_el(cfg):
+    return 2  # bf16 storage everywhere
+
+
+def attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for k in cfg.pattern if k in ("attn", "enc_attn",
+                                               "dec_xattn"))
+
+
+def xattn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for k in cfg.pattern if k in ("xattn", "dec_xattn"))
+
+
+# ---------------------------------------------------------------------------
+# analytic workload per global step
+# ---------------------------------------------------------------------------
+def workload(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:
+    sc = SHAPES[shape_name]
+    b, s = sc.global_batch, sc.seq_len
+    be = _bytes_el(cfg)
+    p_active = cfg.active_param_count()
+    p_total = cfg.param_count()
+    kv_per_tok_layer = 2 * cfg.num_kv_heads * cfg.head_dim * be
+    n_attn = attn_layers(cfg)
+    n_x = xattn_layers(cfg)
+    hd, hq = cfg.head_dim, cfg.num_heads
+
+    if sc.mode == "decode":
+        kv_len = min(s, cfg.window) if cfg.window else s
+        tokens = b                      # one new token per sequence
+        flops_dense = 2.0 * p_active * tokens
+        flops_attn = 4.0 * hq * hd * kv_len * tokens * n_attn \
+            + 4.0 * hq * hd * cfg.encoder_seq * tokens * n_x
+        if cfg.layer_pattern == ("ssd",):
+            # state update/readout: ~6*H*P*N per token per layer
+            flops_attn = 6.0 * cfg.ssd_heads * cfg.ssd_head_dim * \
+                cfg.ssm_state * tokens * cfg.num_layers
+        # bytes: every weight read once + KV streamed + state
+        bytes_w = p_total * be
+        bytes_kv = tokens * kv_len * kv_per_tok_layer * n_attn \
+            + tokens * cfg.encoder_seq * kv_per_tok_layer * n_x
+        if cfg.layer_pattern == ("ssd",):
+            bytes_kv = tokens * cfg.ssd_heads * cfg.ssd_head_dim * \
+                cfg.ssm_state * 4 * cfg.num_layers * 2
+        flops = flops_dense + flops_attn
+        byts = bytes_w + bytes_kv
+    elif sc.mode == "prefill":
+        tokens = b * s
+        kv_len = min(s, cfg.window) if cfg.window else s
+        flops_dense = 2.0 * p_active * tokens
+        flops_attn = 4.0 * hq * hd * (kv_len / 2) * tokens * n_attn
+        flops = flops_dense + flops_attn
+        byts = p_total * be + tokens * kv_per_tok_layer * n_attn \
+            + tokens * cfg.d_model * be * 2 * cfg.num_layers
+    else:  # train: fwd+bwd (3x) + remat recompute (+1 fwd) = 4x fwd
+        tokens = b * s
+        flops_dense = 2.0 * p_active * tokens * 4.0
+        flops_attn = 4.0 * hq * hd * (s / 2) * tokens * n_attn * 4.0
+        flops = flops_dense + flops_attn
+        byts = (p_total * be * 3              # w read fwd+recompute+bwd
+                + p_total * (4 + 4 + 4 + 2)   # adam mu/nu rw + param write
+                + tokens * cfg.d_model * be * 4 * cfg.num_layers)
+    model_flops = (6.0 if sc.mode == "train" else 2.0) * p_active * tokens
+    return {"flops": flops, "bytes": byts, "tokens": tokens,
+            "model_flops": model_flops}
+
+
+# ---------------------------------------------------------------------------
+# combine with dry-run record
+# ---------------------------------------------------------------------------
+def scan_trip_count(cfg: ModelConfig) -> int:
+    return cfg.num_layers // len(cfg.layer_pattern)
+
+
+def load_record(arch: str, shape: str, mesh: str, strategy: str
+                ) -> Optional[dict]:
+    p = os.path.join(RESULTS_DIR,
+                     f"{arch.replace('.', '_')}__{shape}__{mesh}__{strategy}.json")
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "single",
+                 strategy: str = "fastdecode") -> Optional[dict]:
+    rec = load_record(arch, shape, mesh, strategy)
+    if rec is None or not rec.get("ok"):
+        return rec
+    from repro.launch.dryrun import variant_for_shape
+    cfg = variant_for_shape(get_arch(arch), shape)
+    w = workload(cfg, shape)
+    chips = rec["devices"]
+    trips = scan_trip_count(cfg)
+    cc = rec["collectives"]
+    if "wire_loop_bytes" in cc:
+        # loop-resident collectives execute once per layer-scan trip;
+        # stacked (gradient/optimizer) collectives execute once
+        coll_wire = cc["wire_loop_bytes"] * trips + cc["wire_stacked_bytes"]
+    else:
+        coll_wire = cc["wire_bytes"] * trips
+    t_comp = w["flops"] / (chips * PEAK_FLOPS)
+    t_mem = w["bytes"] / (chips * HBM_BW)
+    t_coll = coll_wire / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    hlo_flops_scaled = rec["flops"] * trips * chips
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "strategy": strategy,
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": w["model_flops"],
+        "useful_ratio": w["model_flops"] / max(w["flops"], 1.0),
+        "hlo_flops_raw_dev": rec["flops"],
+        "hlo_vs_analytic": hlo_flops_scaled / max(w["flops"], 1.0),
+        "coll_wire_bytes_dev": coll_wire,
+        "temp_bytes_dev": rec.get("temp_size_in_bytes", 0),
+        "arg_bytes_dev": rec.get("argument_size_in_bytes", 0),
+        "fits_hbm": (rec.get("temp_size_in_bytes", 0)
+                     + rec.get("argument_size_in_bytes", 0)) < HBM_BYTES,
+        "tokens": w["tokens"],
+        "step_s": max(t_comp, t_mem, t_coll),
+        "tok_per_s": w["tokens"] / max(t_comp, t_mem, t_coll),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def full_table(mesh: str = "single", strategy: str = "fastdecode"):
+    from repro.core.config import ASSIGNED_ARCHS, SKIPS
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            if (arch, shape) in SKIPS:
+                continue
+            r = roofline_row(arch, shape, mesh, strategy)
+            if r is not None:
+                rows.append(r)
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | dominant | compute s | memory s | collective s "
+           "| useful | fits | tok/s (roofline) |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if not r.get("ok", True):
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} | {r['tok_per_s']:,.0f} |")
+    return "\n".join(out)

@@ -1,0 +1,53 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+BENCHES = [
+    ("perfmodel", "benchmarks.bench_perfmodel", "Tables 1/2/3 + eq.7-11"),
+    ("sls", "benchmarks.bench_sls", "Fig. 6/7/11/12 SLS schedule"),
+    ("throughput", "benchmarks.bench_throughput", "Fig. 9 throughput"),
+    ("latency", "benchmarks.bench_latency", "Fig. 10 latency"),
+    ("scalability", "benchmarks.bench_scalability", "Fig. 13/14 scaling"),
+    ("fig8", "benchmarks.bench_fig8", "Fig. 8 layer-count linearity"),
+    ("kernels", "benchmarks.bench_kernels", "§5.1/5.2 R-Part kernels"),
+    ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
+    ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod, what in BENCHES:
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name}: {what}", flush=True)
+        t0 = time.time()
+        try:
+            import importlib
+            importlib.import_module(mod).run()
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,{traceback.format_exc(limit=3)!r}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == '__main__':
+    main()

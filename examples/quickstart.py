@@ -1,0 +1,68 @@
+"""Quickstart: the FastDecode decomposition and engine in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. builds a reduced llama-family model,
+2. shows the S-Part / R-Part split of one block (paper eq. 1-4),
+3. generates text through the heterogeneous S-/R-worker pipeline and
+   checks it against the plain single-device decode loop.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decompose as D
+from repro.core.config import get_arch
+from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
+from repro.models import model as M
+
+cfg = get_arch("granite-3-8b").reduced(layers=4, d_model=128, vocab=512)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+print(f"model: {cfg.name}, {sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params")
+
+# --- 1. the decomposition -------------------------------------------------
+from repro.core.hetero import per_layer_params
+kind, p0 = per_layer_params(params, cfg)[0]
+h = jnp.ones((2, 1, cfg.d_model), jnp.float32) * 0.1
+lengths = jnp.asarray([5, 5], jnp.int32)
+ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths, None, 0)
+po = D.s_pre(kind, p0, h, ctx)                    # S-Part: QKV projections
+print("S->R payload (activations only):",
+      {k: tuple(v.shape) for k, v in po.r_in.items()})
+st = M.init_decode_state(cfg, 2, 32)
+st0 = jax.tree.map(lambda x: x[0], st["stack"]["s0"])
+r_state, _ = D.split_block_state(kind, st0)
+r_out, r_state = D.r_dispatch(kind, 0, po.r_in, r_state, cfg)  # R-Part
+print("R->S payload:", {k: tuple(v.shape) for k, v in r_out.items()},
+      "(KV-cache never moved)")
+
+# --- 2. generate through the heterogeneous pipeline ------------------------
+prompt = np.asarray([7, 42, 99, 12], np.int32)
+B, S, GEN = 2, len(prompt), 12
+tokens = jnp.asarray(np.stack([prompt, prompt[::-1]]))
+
+ref = ColocatedEngine(params, cfg, batch=B, cache_len=S + GEN + 1)
+ref.load_prefill(tokens, jnp.full((B,), S))
+eng = HeteroPipelineEngine(params, cfg, batch=B, cache_len=S + GEN + 1,
+                           num_r_workers=2, num_microbatches=2, kv_chunk=64)
+eng.load_prefill(0, tokens[:1], jnp.asarray([S]))
+eng.load_prefill(1, tokens[1:], jnp.asarray([S]))
+
+tok_ref = tok_fd = tokens[:, -1:]
+out_ref, out_fd = [], []
+for _ in range(GEN):
+    lr = ref.decode_step(tok_ref)
+    tok_ref = jnp.argmax(lr, -1)[:, None].astype(jnp.int32)
+    out_ref.append(np.asarray(tok_ref[:, 0]))
+    l0, l1 = eng.decode_step([tok_fd[:1], tok_fd[1:]])
+    tok_fd = jnp.argmax(jnp.concatenate([l0, l1]), -1)[:, None].astype(jnp.int32)
+    out_fd.append(np.asarray(tok_fd[:, 0]))
+eng.close()
+
+print("colocated :", np.stack(out_ref).T.tolist())
+print("fastdecode:", np.stack(out_fd).T.tolist())
+assert np.array_equal(np.stack(out_ref), np.stack(out_fd))
+print("OK — heterogeneous pipeline reproduces the single-device output.")

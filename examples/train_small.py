@@ -1,0 +1,31 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model on the
+synthetic LM stream for a few hundred steps (use --quick on slow hosts).
+
+    PYTHONPATH=src python examples/train_small.py            # ~100M, 300 steps
+    PYTHONPATH=src python examples/train_small.py --quick    # ~10M, 60 steps
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch import train as T
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true")
+ap.add_argument("--steps", type=int, default=0)
+args = ap.parse_args()
+
+if args.quick:
+    argv = ["--arch", "granite-3-8b", "--reduced", "--layers", "4",
+            "--d-model", "256", "--steps", str(args.steps or 60),
+            "--batch", "8", "--seq", "128", "--lr", "6e-3",
+            "--log-every", "10"]
+else:
+    # ~100M params: 12 layers x d_model 768 (llama-family reduced)
+    argv = ["--arch", "granite-3-8b", "--reduced", "--layers", "12",
+            "--d-model", "768", "--steps", str(args.steps or 300),
+            "--batch", "8", "--seq", "256", "--lr", "3e-3", "--remat",
+            "--log-every", "10", "--save", "/tmp/fastdecode_100m.npz"]
+
+T.main(argv)

@@ -1,0 +1,6 @@
+"""Architecture configs. Each module registers one ModelConfig.
+
+Assigned pool (see repo brief): 10 architectures spanning dense / moe /
+hybrid / ssm / vlm / audio, plus the paper's own evaluation models
+(llama-7b, llama-13b, opt-175b).
+"""

@@ -1,0 +1,18 @@
+"""Granite-3.0-8B — dense GQA [hf:ibm-granite/granite-3.0-2b-base family]."""
+from repro.core.config import ModelConfig, register_arch, ATTN, FFN_SWIGLU
+
+CONFIG = register_arch(ModelConfig(
+    name="granite-3-8b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49155,
+    layer_pattern=(ATTN,),
+    ffn_kind=FFN_SWIGLU,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-2b-base",
+))

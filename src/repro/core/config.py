@@ -1,0 +1,258 @@
+"""Model / shape / run configuration for the FastDecode-JAX framework.
+
+Every assigned architecture is a ``ModelConfig``; reduced smoke variants are
+derived with ``ModelConfig.reduced()``.  Input shapes are ``ShapeConfig``
+entries in ``SHAPES``.  Architectures register themselves via
+``register_arch`` (see ``repro.configs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds (mixer part of a block).  The ffn part is configured separately.
+# ---------------------------------------------------------------------------
+ATTN = "attn"          # causal self attention (GQA, optional qk_norm / window)
+XATTN = "xattn"        # cross attention to static (image / encoder) states
+RGLRU = "rglru"        # RG-LRU recurrent block (recurrentgemma)
+SSD = "ssd"            # Mamba-2 state-space-duality block (no separate ffn)
+ENC_ATTN = "enc_attn"  # non-causal encoder self attention (whisper encoder)
+DEC_XATTN = "dec_xattn"  # decoder block with self-attn AND cross-attn (whisper)
+
+MIXER_KINDS = (ATTN, XATTN, RGLRU, SSD, ENC_ATTN, DEC_XATTN)
+
+FFN_MLP = "mlp"        # gelu MLP (whisper)
+FFN_SWIGLU = "swiglu"  # llama-family gated MLP
+FFN_MOE = "moe"        # top-k routed experts (swiglu experts)
+FFN_NONE = "none"      # mamba2: the SSD block is the whole layer
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                     # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    # --- mixer pattern -----------------------------------------------------
+    layer_pattern: Tuple[str, ...] = (ATTN,)   # repeated cyclically over layers
+    ffn_kind: str = FFN_SWIGLU
+    # --- attention options --------------------------------------------------
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    window: int = 0                    # 0 = full causal; >0 = sliding window
+    attn_logit_softcap: float = 0.0    # grok-style tanh soft-capping (0 = off)
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    router_aux_loss: float = 0.0       # load-balance aux loss coefficient
+    moe_capacity: float = 2.0          # expert capacity factor (>=E: no drops)
+    # --- recurrent / ssm ----------------------------------------------------
+    rnn_width: int = 0                 # RG-LRU recurrence width (0 -> d_model)
+    conv_width: int = 4                # short conv kernel for rglru/ssd
+    ssm_state: int = 0                 # mamba2 N (state dim per head)
+    ssd_head_dim: int = 64             # mamba2 P (head dim); heads = d_inner/P
+    ssd_expand: int = 2                # d_inner = expand * d_model
+    ssd_chunk: int = 256               # SSD chunk length
+    # --- enc-dec / multimodal ------------------------------------------------
+    encoder_layers: int = 0            # whisper encoder depth
+    encoder_seq: int = 0               # # of frames/patches from the stub frontend
+    encoder_d_model: int = 0           # 0 -> d_model
+    frontend: str = "none"             # none | audio_stub | vision_stub
+    # --- misc ----------------------------------------------------------------
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""                   # citation
+
+    # --------------------------------------------------------------------- #
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.rnn_width == 0:
+            object.__setattr__(self, "rnn_width", self.d_model)
+        if self.encoder_d_model == 0:
+            object.__setattr__(self, "encoder_d_model", self.d_model)
+        assert self.ffn_kind in (FFN_MLP, FFN_SWIGLU, FFN_MOE, FFN_NONE)
+        for k in self.layer_pattern:
+            assert k in MIXER_KINDS, k
+
+    # --------------------------------------------------------------------- #
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        """Full per-layer mixer kinds, length == num_layers."""
+        p = self.layer_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    @property
+    def d_inner(self) -> int:          # mamba2
+        return self.ssd_expand * self.d_model
+
+    @property
+    def ssd_heads(self) -> int:
+        return self.d_inner // self.ssd_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def kv_bytes_per_token_per_layer(self, bytes_per_el: int = 2) -> int:
+        return 2 * self.num_kv_heads * self.head_dim * bytes_per_el
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS=6ND)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd, nh, nkv = self.head_dim, self.num_heads, self.num_kv_heads
+        total = v * d                                   # embed
+        if not self.tie_embeddings:
+            total += v * d                              # lm head
+        for kind in self.pattern:
+            if kind in (ATTN, ENC_ATTN):
+                total += d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+            elif kind == XATTN:
+                total += d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+            elif kind == DEC_XATTN:
+                total += 2 * (d * nh * hd + 2 * d * nkv * hd + nh * hd * d)
+            elif kind == RGLRU:
+                w = self.rnn_width
+                total += 2 * d * w + w * d + self.conv_width * w + 2 * w * w + 2 * w
+            elif kind == SSD:
+                di, n, h = self.d_inner, self.ssm_state, self.ssd_heads
+                total += d * (2 * di + 2 * n + h) + di * d + self.conv_width * (di + 2 * n)
+            # ffn
+            if kind == SSD or self.ffn_kind == FFN_NONE:
+                continue
+            if self.ffn_kind == FFN_SWIGLU:
+                total += 3 * d * f
+            elif self.ffn_kind == FFN_MLP:
+                total += 2 * d * f
+            elif self.ffn_kind == FFN_MOE:
+                total += self.num_experts * 3 * d * f + d * self.num_experts
+        if self.encoder_layers:
+            ed = self.encoder_d_model
+            total += self.encoder_layers * (4 * ed * ed + 2 * ed * self.d_ff)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE uses top_k of num_experts)."""
+        if self.ffn_kind != FFN_MOE:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense = self.param_count() - self.num_layers * self.num_experts * 3 * d * f
+        return dense + self.num_layers * self.top_k * 3 * d * f
+
+    # --------------------------------------------------------------------- #
+    def reduced(self, layers: int = 2, d_model: int = 256,
+                experts: int = 4, vocab: int = 512) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        ratio = d_model / self.d_model
+        nh = max(2, min(self.num_heads, 4))
+        nkv = max(1, min(self.num_kv_heads, nh))
+        while nh % nkv:
+            nkv -= 1
+        hd = d_model // nh
+        # keep pattern structure: at least one full pattern period
+        layers = max(layers, len(self.layer_pattern))
+        kw: Dict = dict(
+            name=self.name + "-smoke",
+            num_layers=layers,
+            d_model=d_model,
+            num_heads=nh,
+            num_kv_heads=nkv,
+            head_dim=hd,
+            d_ff=max(64, int(self.d_ff * ratio)) if self.d_ff else 0,
+            vocab_size=vocab,
+            rnn_width=d_model,
+            window=min(self.window, 64) if self.window else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssd_head_dim=min(self.ssd_head_dim, 32),
+            ssd_chunk=16,
+            num_experts=min(self.num_experts, experts) if self.num_experts else 0,
+            top_k=min(self.top_k, min(self.num_experts, experts)) if self.top_k else 0,
+            moe_capacity=float(max(1, min(self.num_experts, experts))),  # no drops
+
+            encoder_layers=min(self.encoder_layers, 2) if self.encoder_layers else 0,
+            encoder_seq=min(self.encoder_seq, 16) if self.encoder_seq else 0,
+            encoder_d_model=d_model if self.encoder_layers else 0,
+            dtype="float32",   # CPU smoke tests want clean numerics
+        )
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_ARCHS: Dict[str, ModelConfig] = {}
+
+_ARCH_MODULES = [
+    "deepseek_67b", "granite_3_8b", "deepseek_coder_33b", "llama_3_2_vision_90b",
+    "qwen3_8b", "grok_1_314b", "recurrentgemma_2b", "mamba2_2_7b",
+    "llama4_scout_17b_a16e", "whisper_medium",
+    # the paper's own evaluation models
+    "llama_7b", "llama_13b", "opt_175b",
+]
+
+
+def register_arch(cfg: ModelConfig) -> ModelConfig:
+    _ARCHS[cfg.name] = cfg
+    return cfg
+
+
+def _ensure_loaded() -> None:
+    if _ARCHS:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_ARCHS)}")
+    return _ARCHS[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_ARCHS)
+
+
+ASSIGNED_ARCHS = [
+    "deepseek-67b", "granite-3-8b", "deepseek-coder-33b", "llama-3.2-vision-90b",
+    "qwen3-8b", "grok-1-314b", "recurrentgemma-2b", "mamba2-2.7b",
+    "llama4-scout-17b-a16e", "whisper-medium",
+]
+
+# (arch, shape) pairs skipped in the dry-run, with reason (see DESIGN.md §5).
+SKIPS: Dict[Tuple[str, str], str] = {
+    ("whisper-medium", "long_500k"):
+        "enc-dec full-attention decoder; 524k generated tokens is semantically "
+        "void for ASR (see DESIGN.md §5)",
+}

@@ -1,0 +1,283 @@
+"""The paper's model decomposition (FastDecode §3.1), as an explicit API.
+
+Every block kind is split into
+
+    S-Part  (``s_pre`` / intermediate ``s_adv`` / final ``s_post``):
+        shared-*parameter* compute — norms, QKV/O projections, gates,
+        convs, MLP/MoE.  Batch-friendly; runs on the S-worker (GPU/TPU).
+    R-Part  (``r_op``):
+        the auto-regressive, *parameter-free* readout of per-sequence
+        state — attention against the KV-cache (eq. 2–3), the RG-LRU
+        recurrence h_t = a·h_{t-1} + b, or the SSD state update.
+        Memory-bandwidth-bound; runs on R-workers near the state.
+
+Only activation-sized tensors cross the S↔R boundary (q,k,v -> o for
+attention; (a,b) -> h for RG-LRU; (x,dt,B,C) -> y for SSD), never the
+cached state itself — the paper's key insight.
+
+A block executes as a chain of *phases*; each phase is
+(S-side advance) -> (R-side op).  Plain blocks have 1 phase; whisper's
+DEC_XATTN has 2 (self-attention then cross-attention).  The invariant
+
+    model.apply_block(kind, p, h, st, ctx) ==
+        run_decomposed(kind, p, h, st, ctx)
+
+is enforced in tests/test_decompose.py.
+
+Everything here is decode-mode (one token per sequence) — that is the
+regime the paper targets; prefill runs as a normal batched forward on the
+S-worker.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import (ATTN, DEC_XATTN, RGLRU, SSD, XATTN,
+                               ModelConfig)
+from repro.models import layers as L
+from repro.models.model import Ctx, _ffn, _qkv_proj
+
+F32 = jnp.float32
+
+
+def num_phases(kind: str) -> int:
+    return 2 if kind == DEC_XATTN else 1
+
+
+# ---------------------------------------------------------------------------
+# R-Part ops — PARAMETER-FREE.  r_state is the per-sequence state owned by
+# an R-worker; r_in are the activation tensors shipped from the S-worker.
+# ---------------------------------------------------------------------------
+def r_attention(r_in: Dict[str, jnp.ndarray], r_state, *, window: int,
+                softcap: float, kv_chunk: int = 1024):
+    """Append (k,v) at ``lengths`` and attend with q.  The KV never leaves.
+
+    r_in: q [B,1,Hq,Dh] (rope'd), k,v [B,1,Hkv,Dh] (k rope'd),
+          lengths [B].  r_state: {k,v,pos} caches.
+    """
+    q, k, v, lengths = r_in["q"], r_in["k"], r_in["v"], r_in["lengths"]
+    cache_n = r_state["k"].shape[1]
+    b = q.shape[0]
+    slot = (lengths % cache_n).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    kc = r_state["k"].at[bidx, slot].set(k[:, 0])
+    vc = r_state["v"].at[bidx, slot].set(v[:, 0])
+    pc = r_state["pos"].at[bidx, slot].set(lengths)
+    o = L.flash_attention(q, kc, vc, lengths[:, None], pc, causal=True,
+                          window=window, softcap=softcap,
+                          kv_chunk=max(cache_n, kv_chunk))
+    new_state = dict(r_state)          # preserve e.g. static cross-KV (xk/xv)
+    new_state.update({"k": kc, "v": vc, "pos": pc})
+    return {"o": o}, new_state
+
+
+def r_cross_attention(r_in, r_state, *, kv_chunk: int = 1024):
+    """Attend q against the static (image/encoder) KV held R-side."""
+    q = r_in["q"]
+    xk, xv = r_state["xk"], r_state["xv"]
+    b = q.shape[0]
+    kpos = jnp.zeros((b, xk.shape[1]), jnp.int32)
+    o = L.flash_attention(q, xk, xv, r_in["lengths"][:, None], kpos,
+                          causal=False, kv_chunk=kv_chunk)
+    return {"o": o}, r_state
+
+
+def r_rglru(r_in, r_state):
+    """h_t = a ⊙ h_{t-1} + b — the parameter-free LRU recurrence."""
+    a, b_ = r_in["a"], r_in["b"]
+    h = a * r_state["h"] + b_
+    return {"h": h}, {"h": h}
+
+
+def r_ssd(r_in, r_state):
+    """SSD state update + readout (parameter-free given x,dt,B,C)."""
+    y, h = L.ssd_step(r_in["x"], r_in["dt"], r_in["A_log"], r_in["B"],
+                      r_in["C"], r_in["D"], r_state["h"])
+    return {"y": y}, {"h": h}
+
+
+# r_in entries for SSD include A_log/D which ARE (tiny, per-head) parameters;
+# they are broadcast constants of size [H] — shipped once, not per token, in
+# a real deployment.  We keep them in r_in for functional purity.
+
+
+# ---------------------------------------------------------------------------
+# S-Part phases
+# ---------------------------------------------------------------------------
+class PhaseOut(NamedTuple):
+    carry: Any                 # S-side residual/carry pytree
+    r_in: Optional[Dict]       # payload for the R-worker (None if finished)
+
+
+def s_pre(kind: str, p, h, ctx: Ctx) -> PhaseOut:
+    """Phase 0 S-side: from block input to the first R payload."""
+    cfg = ctx.cfg
+    hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    lengths = ctx.lengths
+    if kind in (ATTN, DEC_XATTN):
+        q, k, v = _qkv_proj(p, hn, cfg)
+        q = L.rope(q, ctx.qpos, cfg.rope_theta)
+        k = L.rope(k, ctx.qpos, cfg.rope_theta)
+        return PhaseOut({"h": h}, {"q": q, "k": k, "v": v, "lengths": lengths})
+    if kind == XATTN:
+        hq, hd = cfg.num_heads, cfg.head_dim
+        b, s, _ = hn.shape
+        q = jnp.einsum("bsd,dh->bsh", hn, p["wq"]).reshape(b, s, hq, hd)
+        return PhaseOut({"h": h}, {"q": q, "lengths": lengths})
+    if kind == RGLRU:
+        gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", hn, p["w_in_gate"])
+                           .astype(F32)).astype(h.dtype)
+        r = jnp.einsum("bsd,dw->bsw", hn, p["w_in_rnn"])
+        # conv state is S-side (constant-size, parameterized conv)
+        return PhaseOut({"h": h, "gate": gate, "r": r}, None)  # finished in s_adv
+    if kind == SSD:
+        return PhaseOut({"h": h, "hn": hn}, None)
+    raise ValueError(kind)
+
+
+def s_pre_stateful(kind: str, p, h, s_state, ctx: Ctx):
+    """Like s_pre but for kinds whose S-side holds a small conv state.
+
+    Returns (PhaseOut, new_s_state).  s_state: {"conv": ...} or None.
+    """
+    cfg = ctx.cfg
+    if kind == RGLRU:
+        out = s_pre(kind, p, h, ctx)
+        r, new_conv = L.causal_conv1d(p["conv"], out.carry["r"],
+                                      s_state["conv"])
+        a, b_ = L._rglru_gates(p, r[:, 0])
+        carry = {"h": out.carry["h"], "gate": out.carry["gate"]}
+        return PhaseOut(carry, {"a": a, "b": b_}), {"conv": new_conv}
+    if kind == SSD:
+        di, n = cfg.d_inner, cfg.ssm_state
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("bsd,de->bse", hn, p["w_in"])
+        z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+        xbc, new_conv = L.causal_conv1d(
+            p["conv"], jax.nn.silu(xbc.astype(F32)).astype(h.dtype),
+            s_state["conv"])
+        xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+        b = h.shape[0]
+        xs = xs.reshape(b, 1, cfg.ssd_heads, cfg.ssd_head_dim)
+        dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :])
+        r_in = {"x": xs[:, 0], "dt": dt[:, 0], "B": Bm[:, 0], "C": Cm[:, 0],
+                "A_log": p["A_log"], "D": p["Dskip"]}
+        return PhaseOut({"h": h, "z": z}, r_in), {"conv": new_conv}
+    out = s_pre(kind, p, h, ctx)
+    return out, s_state
+
+
+def s_advance(kind: str, phase: int, p, carry, r_out, ctx: Ctx):
+    """Consume an R result; emit either the next phase payload or the
+    final block output.  Returns (PhaseOut | h_final)."""
+    cfg = ctx.cfg
+    h = carry["h"]
+    if kind == ATTN:
+        o = r_out["o"]
+        b, s, hq, hd = o.shape
+        mix = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, hq * hd), p["wo"])
+        return _finish(p, h + mix, cfg)
+    if kind == XATTN:
+        o = r_out["o"]
+        b, s, hq, hd = o.shape
+        mix = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, hq * hd), p["wo"])
+        mix = mix * jnp.tanh(p["gate_attn"].astype(mix.dtype))
+        h = h + mix
+        hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        f, _ = _ffn(p, hn, cfg)
+        return h + f * jnp.tanh(p["gate_ffn"].astype(f.dtype))
+    if kind == DEC_XATTN:
+        if phase == 0:
+            o = r_out["o"]
+            b, s, hq, hd = o.shape
+            mix = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, hq * hd), p["wo"])
+            h = h + mix
+            hx = L.rms_norm(h, p["lnx"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", hx, p["x_wq"]).reshape(
+                b, s, cfg.num_heads, cfg.head_dim)
+            return PhaseOut({"h": h}, {"q": q, "lengths": ctx.lengths})
+        o = r_out["o"]
+        b, s, hq, hd = o.shape
+        mix = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, hq * hd), p["x_wo"])
+        return _finish(p, h + mix, cfg)
+    if kind == RGLRU:
+        hr = r_out["h"]                                   # [B, W] fp32
+        out = jnp.einsum("bsw,wd->bsd",
+                         hr[:, None, :].astype(h.dtype) * carry["gate"],
+                         p["w_out"])
+        return _finish(p, h + out, cfg)
+    if kind == SSD:
+        y = r_out["y"]                                    # [B,H,P]
+        b = y.shape[0]
+        y = y.reshape(b, 1, cfg.d_inner).astype(h.dtype)
+        z = carry["z"]
+        y = L.rms_norm(y * jax.nn.silu(z.astype(F32)).astype(h.dtype),
+                       p["gate_norm"], cfg.norm_eps)
+        out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+        return h + out          # SSD blocks have no separate FFN
+    raise ValueError(kind)
+
+
+def _finish(p, h, cfg):
+    if cfg.ffn_kind == "none" or "ln2" not in p:
+        return h
+    hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    f, _ = _ffn(p, hn, cfg)
+    return h + f
+
+
+# ---------------------------------------------------------------------------
+# R dispatch + single-process reference executor
+# ---------------------------------------------------------------------------
+def r_dispatch(kind: str, phase: int, r_in, r_state, cfg: ModelConfig,
+               kv_chunk: int = 1024):
+    if kind == ATTN or (kind == DEC_XATTN and phase == 0):
+        return r_attention(r_in, r_state, window=cfg.window,
+                           softcap=cfg.attn_logit_softcap, kv_chunk=kv_chunk)
+    if kind == XATTN or (kind == DEC_XATTN and phase == 1):
+        return r_cross_attention(r_in, r_state, kv_chunk=kv_chunk)
+    if kind == RGLRU:
+        return r_rglru(r_in, r_state)
+    if kind == SSD:
+        return r_ssd(r_in, r_state)
+    raise ValueError((kind, phase))
+
+
+def split_block_state(kind: str, st: Dict):
+    """Split a model block state into (r_state, s_state)."""
+    if kind in (ATTN, XATTN):
+        return st, {}
+    if kind == DEC_XATTN:
+        return st, {}
+    if kind == RGLRU:
+        return {"h": st["h"]}, {"conv": st["conv"]}
+    if kind == SSD:
+        return {"h": st["h"]}, {"conv": st["conv"]}
+    raise ValueError(kind)
+
+
+def merge_block_state(kind: str, r_state: Dict, s_state: Dict):
+    out = dict(r_state)
+    out.update(s_state)
+    return out
+
+
+def run_decomposed(kind: str, p, h, st, ctx: Ctx, kv_chunk: int = 1024):
+    """Single-process reference: chain the phases.  Mirrors
+    model.apply_block for decode (tested equal)."""
+    r_state, s_state = split_block_state(kind, st)
+    po, s_state = s_pre_stateful(kind, p, h, s_state, ctx)
+    phase = 0
+    while po.r_in is not None:
+        r_out, r_state = r_dispatch(kind, phase, po.r_in, r_state, ctx.cfg,
+                                    kv_chunk)
+        res = s_advance(kind, phase, p, po.carry, r_out, ctx)
+        if isinstance(res, PhaseOut):
+            po = res
+            phase += 1
+        else:
+            return res, merge_block_state(kind, r_state, s_state)
+    raise AssertionError("block produced no output")

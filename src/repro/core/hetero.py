@@ -1,0 +1,366 @@
+"""The FastDecode heterogeneous runtime (§4.1, Fig. 4–5).
+
+One **S-worker** (the accelerator: owns all weights, computes S-Part for a
+large batch) drives ``num_r_workers`` **R-workers** (own the per-sequence
+state — KV caches / recurrent states — for a contiguous slice of the
+batch, compute the parameter-free R-Part near that state).  Per layer and
+token step, only activation vectors cross the boundary.
+
+Two (or more) micro-batches are kept in flight (the basic two-stage
+token-level pipeline of Fig. 5): while the R-workers chew on micro-batch
+A's layer-l attention, the S-worker advances micro-batch B.  The
+interleaving falls out of the dispatch order, not timers, so it is
+correct regardless of relative speeds (bubbles appear exactly when the
+paper says they do; benchmarks measure them).
+
+On this CPU-only container the R-workers are host threads with their own
+jitted R-Part; on a real deployment they are processes on remote CPU
+nodes (the payload protocol is already activation-only and
+pytree-serializable).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decompose as D
+from repro.core.config import DEC_XATTN, ModelConfig
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# params / state layout helpers
+# ---------------------------------------------------------------------------
+def per_layer_params(params, cfg: ModelConfig) -> List[Tuple[str, Any]]:
+    """[(kind, layer_params)] in layer order, unstacked."""
+    pattern = cfg.layer_pattern
+    period = len(pattern)
+    n_full = cfg.num_layers // period
+    out = []
+    for li in range(cfg.num_layers):
+        per, slot = divmod(li, period)
+        kind = pattern[slot]
+        if per < n_full:
+            p = jax.tree.map(lambda x: x[per], params["stack"][f"s{slot}"])
+        else:
+            p = params["rem"][li - n_full * period]
+        out.append((kind, p))
+    return out
+
+
+def per_layer_state(state, cfg: ModelConfig) -> List[Any]:
+    pattern = cfg.layer_pattern
+    period = len(pattern)
+    n_full = cfg.num_layers // period
+    out = []
+    for li in range(cfg.num_layers):
+        per, slot = divmod(li, period)
+        if per < n_full:
+            st = jax.tree.map(lambda x: x[per], state["stack"][f"s{slot}"])
+        else:
+            st = state["rem"][li - n_full * period]
+        out.append(st)
+    return out
+
+
+def batch_slice(tree, lo: int, hi: int):
+    return jax.tree.map(lambda x: x[lo:hi], tree)
+
+
+# r_in payload entries that are per-head constants, NOT per-sequence data —
+# they go to every R-worker whole (see decompose.r_ssd)
+_RIN_BROADCAST = ("A_log", "D")
+
+
+def rin_slice(r_in: dict, lo: int, hi: int) -> dict:
+    return {k: (v if k in _RIN_BROADCAST else v[lo:hi])
+            for k, v in r_in.items()}
+
+
+def batch_concat(trees: Sequence[Any]):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+# ---------------------------------------------------------------------------
+# R-worker
+# ---------------------------------------------------------------------------
+class RWorker(threading.Thread):
+    """Owns the R-Part state of batch rows [lo, hi) for every layer.
+
+    ``quantized=True`` stores self-attention KV as int8 + per-(token,head)
+    scales (paper §5.2): ~4x less R-side memory traffic, attention still
+    accumulated in fp32 (repro.serving.kv_cache.r_attention_int8).
+    """
+
+    def __init__(self, wid: int, cfg: ModelConfig, lo: int, hi: int,
+                 kv_chunk: int = 1024, quantized: bool = False):
+        super().__init__(daemon=True, name=f"r-worker-{wid}")
+        self.wid, self.cfg, self.lo, self.hi = wid, cfg, lo, hi
+        self.kv_chunk = kv_chunk
+        self.quantized = quantized
+        self.state: Dict[int, Any] = {}          # layer -> r_state slice
+        self.inq: "queue.Queue" = queue.Queue()
+        self.outq: "queue.Queue" = queue.Queue()
+        self._jit_cache: Dict[Tuple[str, int], Any] = {}
+        self.busy_time = 0.0
+
+    def load_state(self, layer: int, r_state_slice) -> None:
+        if self.quantized and "k" in r_state_slice:
+            from repro.serving.kv_cache import quantize_attn_state
+            r_state_slice = quantize_attn_state(r_state_slice)
+        self.state[layer] = r_state_slice
+
+    def write_rows(self, layer: int, rows: np.ndarray, r_state_rows) -> None:
+        """Continuous batching: replace finished rows with fresh prefixes."""
+        if self.quantized and "k" in r_state_rows:
+            from repro.serving.kv_cache import quantize_attn_state
+            r_state_rows = quantize_attn_state(r_state_rows)
+        self.state[layer] = jax.tree.map(
+            lambda c, n: c.at[rows].set(n), self.state[layer], r_state_rows)
+
+    def _fn(self, kind: str, phase: int):
+        key = (kind, phase)
+        if key not in self._jit_cache:
+            from repro.core.config import ATTN
+            if self.quantized and kind == ATTN:
+                from repro.serving.kv_cache import r_attention_int8
+                f = partial(r_attention_int8, window=self.cfg.window,
+                            softcap=self.cfg.attn_logit_softcap)
+            else:
+                f = partial(D.r_dispatch, kind, phase, cfg=self.cfg,
+                            kv_chunk=self.kv_chunk)
+            self._jit_cache[key] = jax.jit(
+                lambda r_in, r_state: f(r_in, r_state))
+        return self._jit_cache[key]
+
+    def run(self) -> None:
+        import time
+        while True:
+            item = self.inq.get()
+            if item is None:
+                return
+            tag, layer, kind, phase, r_in = item
+            try:
+                t0 = time.perf_counter()
+                r_out, new_state = self._fn(kind, phase)(r_in,
+                                                         self.state[layer])
+                jax.block_until_ready(r_out)
+                self.busy_time += time.perf_counter() - t0
+                self.state[layer] = new_state
+                self.outq.put((tag, r_out))
+            except Exception as e:  # surface to the S-worker, don't deadlock
+                self.outq.put((tag, e))
+
+    def stop(self) -> None:
+        self.inq.put(None)
+
+
+# ---------------------------------------------------------------------------
+# the pipelined engine
+# ---------------------------------------------------------------------------
+@dataclass
+class _MbState:
+    h: Any = None
+    carry: Any = None
+    lengths: Optional[jnp.ndarray] = None
+    done: bool = False
+
+
+class HeteroPipelineEngine:
+    """S-worker + R-workers, ``num_microbatches`` in flight (Fig. 5b)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, batch: int,
+                 cache_len: int, num_r_workers: int = 2,
+                 num_microbatches: int = 2, kv_chunk: int = 1024,
+                 quantized_kv: bool = False):
+        assert batch % num_microbatches == 0
+        self.params, self.cfg = params, cfg
+        self.batch = batch
+        self.mb_size = batch // num_microbatches
+        self.num_mb = num_microbatches
+        self.cache_len = cache_len
+        self.layers = per_layer_params(params, cfg)
+        self.num_layers = cfg.num_layers
+        # contiguous batch slices per worker WITHIN a micro-batch
+        bounds = np.linspace(0, self.mb_size, num_r_workers + 1).astype(int)
+        self.slices = [(int(bounds[i]), int(bounds[i + 1]))
+                       for i in range(num_r_workers)
+                       if bounds[i + 1] > bounds[i]]
+        self.workers = [RWorker(w, cfg, lo, hi, kv_chunk,
+                                quantized=quantized_kv)
+                        for w, (lo, hi) in enumerate(self.slices)]
+        for w in self.workers:
+            w.start()
+        # S-side per-layer state (small convs), per micro-batch
+        self.s_states: List[List[Any]] = [
+            [None] * self.num_layers for _ in range(self.num_mb)]
+        self.mb_lengths = [jnp.zeros((self.mb_size,), jnp.int32)
+                           for _ in range(self.num_mb)]
+        self._jit_pre: Dict[int, Any] = {}
+        self._jit_adv: Dict[Tuple[int, int], Any] = {}
+        self._jit_prefill = None
+        self._embed = jax.jit(lambda p, t: p["embed"][t])
+        self._logits = jax.jit(partial(M._logits, cfg=cfg))
+
+    # -- state loading ------------------------------------------------------
+    def load_prefill(self, mb: int, tokens, prompt_lens, enc_feats=None):
+        """Run prefill for micro-batch ``mb`` on the S-worker and ship each
+        layer's R-state slice to its R-worker (done once per admission —
+        the steady state never moves KV again)."""
+        if self._jit_prefill is None:
+            self._jit_prefill = jax.jit(
+                partial(M.prefill, cfg=self.cfg, cache_len=self.cache_len))
+        _, state = self._jit_prefill(self.params, tokens=tokens,
+                                     prompt_lens=prompt_lens,
+                                     enc_feats=enc_feats)
+        layer_states = per_layer_state(state, self.cfg)
+        for li, (kind, _) in enumerate(self.layers):
+            r_st, s_st = D.split_block_state(kind, layer_states[li])
+            for w in self.workers:
+                w.load_state(self._lkey(mb, li), batch_slice(r_st, w.lo, w.hi))
+            self.s_states[mb][li] = s_st
+        self.mb_lengths[mb] = prompt_lens.astype(jnp.int32)
+
+    def _lkey(self, mb: int, layer: int) -> int:
+        return mb * self.num_layers + layer
+
+    # -- jitted S-side pieces -----------------------------------------------
+    def _pre(self, li: int):
+        if li not in self._jit_pre:
+            kind, p = self.layers[li]
+            cfg = self.cfg
+
+            def f(p, h, s_state, lengths):
+                ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths, None, 0)
+                return D.s_pre_stateful(kind, p, h, s_state, ctx)
+
+            self._jit_pre[li] = jax.jit(f)
+        return self._jit_pre[li]
+
+    def _adv(self, li: int, phase: int):
+        key = (li, phase)
+        if key not in self._jit_adv:
+            kind, p = self.layers[li]
+            cfg = self.cfg
+
+            def f(p, carry, r_out, lengths):
+                ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths, None, 0)
+                return D.s_advance(kind, phase, p, carry, r_out, ctx)
+
+            self._jit_adv[key] = jax.jit(f)
+        return self._jit_adv[key]
+
+    # -- the pipelined decode step -------------------------------------------
+    def _dispatch(self, mb: int, li: int, phase: int, r_in) -> None:
+        kind, _ = self.layers[li]
+        for w in self.workers:
+            w.inq.put(((mb, li, phase), self._lkey(mb, li), kind, phase,
+                       rin_slice(r_in, w.lo, w.hi)))
+
+    def _collect(self, mb: int, li: int, phase: int):
+        parts = []
+        for w in self.workers:
+            tag, r_out = w.outq.get(timeout=600)
+            assert tag == (mb, li, phase), (tag, (mb, li, phase))
+            if isinstance(r_out, Exception):
+                raise RuntimeError(
+                    f"R-worker {w.wid} failed at layer {li}") from r_out
+            parts.append(r_out)
+        return batch_concat(parts)
+
+    def decode_step(self, tokens_per_mb: Sequence[jnp.ndarray]):
+        """One new token for every sequence of every micro-batch.
+
+        tokens_per_mb: list of [mb_size, 1] int32.
+        Returns list of logits [mb_size, vocab].
+        """
+        assert len(tokens_per_mb) == self.num_mb
+        mbs = [_MbState() for _ in range(self.num_mb)]
+        order: List[Tuple[int, int, int]] = []
+
+        def start_layer(mb: int, li: int) -> None:
+            st = mbs[mb]
+            kind, p = self.layers[li]
+            po, new_s = self._pre(li)(p, st.h, self.s_states[mb][li],
+                                      self.mb_lengths[mb])
+            self.s_states[mb][li] = new_s
+            st.carry = po.carry
+            self._dispatch(mb, li, 0, po.r_in)
+            order.append((mb, li, 0))
+
+        for mb in range(self.num_mb):
+            mbs[mb].h = self._embed(self.params, tokens_per_mb[mb])
+            start_layer(mb, 0)
+
+        qi = 0
+        while qi < len(order):
+            mb, li, phase = order[qi]
+            qi += 1
+            kind, p = self.layers[li]
+            r_out = self._collect(mb, li, phase)
+            res = self._adv(li, phase)(p, mbs[mb].carry, r_out,
+                                       self.mb_lengths[mb])
+            if isinstance(res, tuple) and len(res) == 2 and res[1] is not None \
+                    and isinstance(res[1], dict):
+                # next phase of the same block (DEC_XATTN)
+                mbs[mb].carry = res[0]
+                self._dispatch(mb, li, phase + 1, res[1])
+                order.append((mb, li, phase + 1))
+            else:
+                h = res[0] if isinstance(res, tuple) else res
+                mbs[mb].h = h
+                if li + 1 < self.num_layers:
+                    start_layer(mb, li + 1)
+                else:
+                    mbs[mb].done = True
+
+        outs = []
+        for mb in range(self.num_mb):
+            logits = self._logits(self.params, h=mbs[mb].h)[:, 0]
+            outs.append(logits)
+            self.mb_lengths[mb] = self.mb_lengths[mb] + 1
+        return outs
+
+    # -- bookkeeping ----------------------------------------------------------
+    def worker_busy_times(self) -> List[float]:
+        return [w.busy_time for w in self.workers]
+
+    def close(self) -> None:
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# single-device colocated reference (the "vanilla" baseline of Fig. 9/11)
+# ---------------------------------------------------------------------------
+class ColocatedEngine:
+    """R-Part and S-Part both on the S-device — the paper's vanilla
+    baseline.  Also the correctness oracle for the pipelined engine."""
+
+    def __init__(self, params, cfg: ModelConfig, *, batch: int,
+                 cache_len: int):
+        self.params, self.cfg = params, cfg
+        self.cache_len = cache_len
+        self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
+                                        cache_len=cache_len))
+        self._step = jax.jit(partial(M.decode_step, cfg=cfg))
+        self.state = None
+
+    def load_prefill(self, tokens, prompt_lens, enc_feats=None):
+        _, self.state = self._prefill(self.params, tokens=tokens,
+                                      prompt_lens=prompt_lens,
+                                      enc_feats=enc_feats)
+
+    def decode_step(self, tokens):
+        logits, self.state = self._step(self.params, state=self.state,
+                                        tokens=tokens)
+        return logits

@@ -1,0 +1,202 @@
+"""FastDecode's quantitative hardware-orchestration model (§4.3, eq. 7–11),
+plus the TPU re-derivation used by the roofline analysis.
+
+Given a model and hardware, pick the two key parameters:
+    𝓑  — batch size (from the S-Part latency curve 𝕋(𝓑) and the SLO, eq. 7–8)
+    𝓟  — number of R-workers (eq. 10–11: R-Part latency ≈ S-Part latency)
+
+𝕋(𝓑) and R can come from (a) the analytic roofline (compute vs weight-
+bandwidth bound) or (b) a measured micro-benchmark (benchmarks/
+bench_perfmodel.py measures both on this host and checks eq. 11's
+prediction against the simulator).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+from repro.core.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# hardware catalog (paper Table 1 + our TPU target)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops: float          # peak FLOP/s (usable precision)
+    mem_bw: float         # HBM/DRAM bandwidth, bytes/s
+    mem_cap: float        # bytes
+    link_bw: float        # interconnect bytes/s (per direction)
+    tdp_w: float = 0.0
+
+
+CPU_XEON = Hardware("xeon-5218", 1.3e12, 128e9, 256e9, 12.5e9, 125)   # paper
+CPU_EPYC = Hardware("epyc-7452", 1.2e12, 205e9, 256e9, 12.5e9, 155)   # paper
+GPU_A10 = Hardware("a10", 125e12, 600e9, 24e9, 32e9, 150)             # paper
+GPU_V100 = Hardware("v100", 112e12, 900e9, 32e9, 32e9, 250)           # paper
+TPU_V5E = Hardware("tpu-v5e", 197e12, 819e9, 16e9, 50e9, 200)         # target
+
+HW = {h.name: h for h in (CPU_XEON, CPU_EPYC, GPU_A10, GPU_V100, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# per-block workload terms
+# ---------------------------------------------------------------------------
+def s_part_params_per_block(cfg: ModelConfig) -> float:
+    """Weight elements touched per token in one block's S-Part
+    (MoE counts activated experts only)."""
+    d, f = cfg.d_model, cfg.d_ff
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = d * hq * hd + 2 * d * hkv * hd + hq * hd * d     # qkvo
+    if cfg.ffn_kind == "swiglu":
+        p += 3 * d * f
+    elif cfg.ffn_kind == "mlp":
+        p += 2 * d * f
+    elif cfg.ffn_kind == "moe":
+        p += cfg.top_k * 3 * d * f + d * cfg.num_experts
+    return float(p)
+
+
+def s_part_flops_per_token(cfg: ModelConfig) -> float:
+    return 2.0 * s_part_params_per_block(cfg)
+
+
+def r_part_bytes_per_cached_token(cfg: ModelConfig,
+                                  bytes_per_el: int = 2) -> float:
+    """Bytes the R-Part must stream per cached token per new token, one
+    block (read K + read V)."""
+    return 2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
+
+
+def r_part_flops_per_cached_token(cfg: ModelConfig) -> float:
+    """FLOPs of eq. 2–3 per cached token per new token per block."""
+    return 2.0 * cfg.num_heads * cfg.head_dim * 2.0      # q·k and a·v
+
+
+# ---------------------------------------------------------------------------
+# 𝕋(𝓑), R, 𝔼(𝓑)  (analytic roofline forms)
+# ---------------------------------------------------------------------------
+def t_of_b(cfg: ModelConfig, hw: Hardware, b: int,
+           bytes_per_el: int = 2) -> float:
+    """Latency of one block's S-Part at batch b: max(compute, weight-BW)."""
+    comp = b * s_part_flops_per_token(cfg) / hw.flops
+    mem = s_part_params_per_block(cfg) * bytes_per_el / hw.mem_bw
+    return max(comp, mem)
+
+
+def r_per_token(cfg: ModelConfig, hw: Hardware,
+                bytes_per_el: int = 2) -> float:
+    """R: one worker's latency to process ONE cached token of ONE new
+    token's R-Part, one block (bandwidth-bound)."""
+    bw = r_part_bytes_per_cached_token(cfg, bytes_per_el) / hw.mem_bw
+    fl = r_part_flops_per_cached_token(cfg) / hw.flops
+    return max(bw, fl)
+
+
+def e_of_b(cfg: ModelConfig, hw: Hardware, b: int) -> float:
+    """eq. (8): 𝔼(𝓑) = 𝓑 / 𝕋(𝓑) — proportional to S-Part throughput."""
+    return b / t_of_b(cfg, hw, b)
+
+
+# ---------------------------------------------------------------------------
+# the orchestration decisions
+# ---------------------------------------------------------------------------
+def max_batch_for_slo(cfg: ModelConfig, hw: Hardware, seq_len: int,
+                      latency_slo: float, b_max: int = 1 << 20) -> int:
+    """eq. (7): largest 𝓑 with 2·N·S·𝕋(𝓑) <= L  (pipeline-perfect)."""
+    n = cfg.num_layers
+    lo, hi = 1, b_max
+    if 2 * n * seq_len * t_of_b(cfg, hw, 1) > latency_slo:
+        return 0
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if 2 * n * seq_len * t_of_b(cfg, hw, mid) <= latency_slo:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def knee_batch(cfg: ModelConfig, hw: Hardware, rel_gain: float = 0.05,
+               b_max: int = 1 << 20) -> int:
+    """eq. (8) guidance: smallest 𝓑 where doubling it improves 𝔼(𝓑) by
+    less than ``rel_gain``."""
+    b = 1
+    while b < b_max:
+        if e_of_b(cfg, hw, 2 * b) / e_of_b(cfg, hw, b) < 1.0 + rel_gain:
+            return b
+        b *= 2
+    return b_max
+
+
+def min_workers_memory(cfg: ModelConfig, b: int, seq_len: int,
+                       worker_mem: float, bytes_per_el: int = 2) -> int:
+    """eq. (9): ½·𝓑·S <= C·𝓟 with C tokens per worker memory."""
+    kv_per_tok = (2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
+                  * cfg.num_layers)
+    c = worker_mem / kv_per_tok
+    return max(1, math.ceil(0.5 * b * seq_len / c))
+
+
+def optimal_workers(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware,
+                    b: int, seq_len: int, bytes_per_el: int = 2,
+                    t_measured: Optional[Callable[[int], float]] = None,
+                    r_measured: Optional[float] = None) -> float:
+    """eq. (10)/(11): 𝓟 ≈ 𝓑·S·R / (2·𝕋(𝓑)) = ½·S·R·𝔼(𝓑).
+
+    Average resident length under SLS is S/2 (eq. 6), hence the ½.
+    Pass measured 𝕋/R to override the analytic roofline forms.
+    """
+    t_b = t_measured(b) if t_measured else t_of_b(cfg, hw_s, b, bytes_per_el)
+    r = r_measured if r_measured is not None else r_per_token(
+        cfg, hw_r, bytes_per_el)
+    return (b * seq_len * r) / (2.0 * t_b)
+
+
+def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
+         latency_slo: Optional[float] = None,
+         worker_mem: float = 256e9) -> Dict[str, float]:
+    """Full §4.3 planning pass -> {batch, workers, workers_mem_min, ...}."""
+    if latency_slo is not None:
+        b = max_batch_for_slo(cfg, hw_s, seq_len, latency_slo)
+    else:
+        b = knee_batch(cfg, hw_s)
+    p = optimal_workers(cfg, hw_s, hw_r, b, seq_len)
+    p_mem = min_workers_memory(cfg, b, seq_len, worker_mem)
+    return {
+        "batch": b,
+        "workers": max(1.0, math.ceil(p)),
+        "workers_mem_min": p_mem,
+        "t_of_b": t_of_b(cfg, hw_s, b),
+        "r": r_per_token(cfg, hw_r),
+        "e_of_b": e_of_b(cfg, hw_s, b),
+        "tokens_per_s": b / (2 * cfg.num_layers * t_of_b(cfg, hw_s, b)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# communication sizing (paper Table 3, re-derived for any link)
+# ---------------------------------------------------------------------------
+def activation_bytes_per_token_per_block(cfg: ModelConfig,
+                                         bytes_per_el: int = 2) -> float:
+    """Q,K,V shipped S->R plus O shipped R->S (the paper's 'intermediate
+    vectors')."""
+    hd = cfg.head_dim
+    return bytes_per_el * hd * (cfg.num_heads            # Q
+                                + 2 * cfg.num_kv_heads   # K,V
+                                + cfg.num_heads)         # O
+
+
+def comm_latency_per_step(cfg: ModelConfig, b: int, link_bw: float,
+                          bytes_per_el: int = 2) -> float:
+    """Per token-generation step across all layers, both directions."""
+    per_block = activation_bytes_per_token_per_block(cfg, bytes_per_el)
+    return b * per_block * cfg.num_layers / link_bw
+
+
+def kv_cache_bytes(cfg: ModelConfig, b: int, seq_len: int,
+                   bytes_per_el: int = 2) -> float:
+    return (b * seq_len * cfg.num_layers
+            * 2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el)

@@ -1,0 +1,88 @@
+"""Logical-axis sharding API (MaxText-style).
+
+Model code annotates activations with *logical* axis names via ``shard``.
+Outside any mesh context this is a no-op (single-device tests).  Inside
+``use_rules(mesh, rules)`` each logical name maps to a mesh axis (or None),
+with divisibility-aware fallback to replication, and the annotation becomes
+``jax.lax.with_sharding_constraint`` — which is how the FastDecode
+disaggregated-KV layout is injected without forking the model code.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+def _current():
+    return getattr(_tls, "ctx", None)
+
+
+@contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, AxisVal]):
+    """Activate logical->mesh axis rules within this thread."""
+    prev = _current()
+    _tls.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def logical_to_spec(mesh: Mesh, rules: Dict[str, AxisVal],
+                    shape: Sequence[int],
+                    logical_axes: Sequence[Optional[str]]) -> P:
+    """Map logical axis names to a PartitionSpec, dropping any assignment
+    that does not divide the dimension (replication fallback) or that
+    reuses a mesh axis already consumed by an earlier dim."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        val = rules.get(name) if name else None
+        if val is None:
+            out.append(None)
+            continue
+        axes = (val,) if isinstance(val, str) else tuple(val)
+        picked = []
+        size = 1
+        for ax in axes:
+            if ax in used or ax not in mesh.shape:
+                continue
+            axsz = mesh.shape[ax]
+            if dim % (size * axsz) == 0:
+                picked.append(ax)
+                size *= axsz
+        for ax in picked:
+            used.add(ax)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def shard(x, *logical_axes):
+    """Annotate ``x`` with the current rules; no-op outside ``use_rules``."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(mesh, rules, x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules: Dict[str, AxisVal],
+                   shape: Sequence[int],
+                   logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, rules, shape,
+                                               logical_axes))

@@ -1,0 +1,95 @@
+"""Explicit flash-decoding collective schedule (beyond-paper §Perf item).
+
+GSPMD lowers the fastdecode R-Part (cache [B@data, S@model]) by inserting
+whatever collectives its solver picks around the softmax.  This module
+pins the OPTIMAL schedule by hand with shard_map:
+
+    each chip: partial online-softmax over its sequence chunk
+    combine:   pmax(m)  +  psum(l·corr)  +  psum(acc·corr)   over `model`
+
+i.e. exactly ONE [B,Hq,Dh]-sized psum plus two [B,Hq]-sized ones per
+layer — the flash-decoding reduction, nothing else.  Selected by rule
+``_explicit_decode_attn`` (dry-run strategy ``fastdecode_sm``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.api import logical_to_spec
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _local_partial(q, kc, vc, pc, lengths, *, scale, window, sink, softcap):
+    """Unnormalized attention of q [b,1,Hq,D] against the LOCAL seq chunk.
+    Returns (acc [b,Hq,D], l [b,Hq], m [b,Hq]) in fp32."""
+    b, _, hq, dh = q.shape
+    hkv = kc.shape[2]
+    g = hq // hkv
+    q32 = q[:, 0].reshape(b, hkv, g, dh).astype(F32) * scale
+    k32 = kc.astype(F32)
+    s = jnp.einsum("bhgd,bshd->bhgs", q32, k32,
+                   preferred_element_type=F32)          # [b,hkv,g,S_loc]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = lengths[:, None]
+    valid = (pc >= 0) & (pc <= qpos)
+    if window > 0:
+        in_win = pc > qpos - window
+        if sink > 0:
+            in_win |= pc < sink
+        valid &= in_win
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                             # [b,hkv,g]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)      # exp(NEG_INF-m)=0 anyway
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, vc.astype(F32),
+                     preferred_element_type=F32)
+    return acc, l, m
+
+
+def _combine(acc, l, m, axis):
+    m_g = jax.lax.pmax(m, axis)
+    corr = jnp.exp(jnp.maximum(m - m_g, -80.0))
+    l_g = jax.lax.psum(l * corr, axis)
+    acc_g = jax.lax.psum(acc * corr[..., None], axis)
+    out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+    return jnp.where((m_g > NEG_INF / 2)[..., None], out, 0.0)
+
+
+def decode_attention_sharded(q, kc, vc, pc, lengths, *, mesh, rules,
+                             window: int = 0, sink: int = 0,
+                             softcap: float = 0.0):
+    """q [B,1,Hq,Dh]; kc,vc [B,S,Hkv,Dh] (cache AFTER the new-token write);
+    pc [B,S]; lengths [B].  Returns [B,1,Hq,Dh] replicated over model."""
+    b, _, hq, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+
+    # q is resharded to the cache's batch layout at entry (activation-sized)
+    q_spec = logical_to_spec(mesh, rules, q.shape,
+                             ("kv_batch", None, "heads_rep", None))
+    kv_spec = logical_to_spec(mesh, rules, kc.shape,
+                              ("kv_batch", "cache", "kv_heads", "head_dim"))
+    pc_spec = logical_to_spec(mesh, rules, pc.shape, ("kv_batch", "cache"))
+    len_spec = logical_to_spec(mesh, rules, lengths.shape, ("kv_batch",))
+    out_spec = q_spec
+
+    def local(qq, kk, vv, pp, ll):
+        acc, l, m = _local_partial(qq, kk, vv, pp, ll, scale=scale,
+                                   window=window, sink=sink, softcap=softcap)
+        out = _combine(acc, l, m, "model")              # [b,hkv,g,dh]
+        bl = out.shape[0]
+        return out.reshape(bl, 1, hq, dh).astype(qq.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, pc_spec, len_spec),
+        out_specs=out_spec, check_vma=False,
+    )(q, kc, vc, pc, lengths)

@@ -1,0 +1,237 @@
+"""Sharding strategies: `baseline` (megatron-TP colocated serving) vs
+`fastdecode` (the paper's disaggregated KV), plus training FSDP+TP.
+
+Everything is expressed as logical-axis rules (repro.distributed.api);
+the two serving strategies differ ONLY in where the KV-cache lives:
+
+  baseline:   cache [B@data, S,      kvh@model, Dh]   (heads-parallel; GQA
+              kvh=8 < model=16 falls back to REPLICATION — the memory
+              wall of paper Fig. 1/3, visible in memory_analysis)
+  fastdecode: cache [B@data, S@model, kvh(full),  Dh]   (sequence-chunk
+              resident "R-workers" on every chip; attention runs where
+              the KV lives; only q/k/v/o activations + softmax partials
+              cross the ICI)
+
+Params: TP over `model` for qkvo/ffn; large models additionally shard the
+scan-stacked layer dim over `data` (ZeRO-3-style storage) — the gather
+traffic this adds is measured in the roofline and attacked in §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import ModelConfig
+from repro.distributed.api import logical_to_spec
+from repro.models import model as M
+
+BATCH_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# logical-axis rules per (strategy, mode)
+# ---------------------------------------------------------------------------
+def make_rules(strategy: str, mode: str, *, zero3: bool = False,
+               train: bool = False) -> Dict[str, Any]:
+    # Weight-dim sharding: TP over `model`; big models (zero3) extend the
+    # SAME dims over (`pod`,`data`) for storage.  The scan-stacked layer
+    # dim is NEVER sharded: slicing a sharded scan dim makes XLA SPMD
+    # "involuntarily rematerialize" the full stack (and replicate the
+    # fp32 gradient accumulators — observed 300 GB/device); feature-dim
+    # storage sharding gathers/reduce-scatters per layer instead, which
+    # partitions cleanly.
+    wdims: Any = ("model", "pod", "data") if zero3 else "model"
+    rules: Dict[str, Any] = {
+        # params
+        "vocab": wdims,
+        "heads_dim": wdims,
+        "ff": wdims,
+        "expert": "data",
+        "rnn": wdims,
+        "inner": wdims,
+        "embed": None,
+        "layer": None,
+        # activations
+        "batch": BATCH_AXES,
+        "kv_batch": BATCH_AXES,   # the KV/recurrent state is ALWAYS
+                                  # batch-sharded over data (the R-workers)
+        # Megatron-style sequence parallelism for the residual stream in
+        # train/prefill: h is [B@data, S@model, D], re-gathered around each
+        # attention/ffn (GSPMD inserts the all-gather/reduce-scatter pair).
+        # Cuts per-device residual-carry and logits memory by the model
+        # axis — beyond-paper optimization, recorded in EXPERIMENTS §Perf.
+        "seq": "model" if mode in ("train", "prefill") else None,
+        "qkv_seq": None,
+        "heads": "model",
+        "head_dim": None,
+        "enc_seq": None,
+        "ssd_heads": "model",
+        "state": None,
+        "cap": None,
+    }
+    if strategy.startswith("fastdecode") and mode == "decode":
+        rules["cache"] = "model"
+        rules["kv_heads"] = None
+        if strategy == "fastdecode_sm":
+            rules["_explicit_decode_attn"] = True
+        if zero3:
+            # "weights stay, activations fly": for big models a decode step
+            # must read every weight anyway; instead of gathering weight
+            # shards (weight-sized collectives), fully 2D-shard the weights
+            # (d_model over `data` x ff/heads over `model`) and let the
+            # tiny per-token activations be replicated/psum'd over `data`.
+            # Collectives become activation-sized — the paper's insight
+            # applied to the S-Part weight traffic (see §Perf).
+            for k in ("vocab", "heads_dim", "ff", "rnn", "inner"):
+                rules[k] = "model"
+            rules["embed"] = ("pod", "data")
+            rules["batch"] = None
+    else:
+        rules["cache"] = None
+        rules["kv_heads"] = "model"
+    if strategy == "dp" and mode == "train":
+        # §Perf experiment: at train_4k's 65k tokens/chip the Megatron-SP
+        # activation collectives dominate; pure data parallelism over ALL
+        # axes moves (gathered) weights + grads instead — param-sized
+        # traffic beats activation-sized when tokens/chip >> params/chip.
+        rules["batch"] = ("pod", "data", "model")
+        rules["seq"] = None
+        rules["heads"] = None
+        rules["ssd_heads"] = None
+        rules["kv_heads"] = None
+    return rules
+
+
+def auto_zero3(cfg: ModelConfig, mesh: Mesh, hbm_bytes: float = 16e9) -> bool:
+    """Fully distribute weight storage (beyond TP) when TP-only weights
+    would crowd the chip (> 25% of HBM — the rest is needed for KV /
+    activations).  In train this selects ZeRO-3 layer-sharding; in decode
+    it selects the weights-stay 2D layout (see make_rules)."""
+    model_par = mesh.shape.get("model", 1)
+    bytes_tp = cfg.param_count() * 2 / model_par
+    return bytes_tp > 0.25 * hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# leaf -> logical axes (params)
+# ---------------------------------------------------------------------------
+def _param_axes(name: str, ndim: int, stacked: bool) -> Tuple:
+    base: Tuple
+    if name == "embed":
+        base = ("vocab", "embed")
+    elif name == "lm_head":
+        base = ("embed", "vocab")
+    elif name in ("wq", "wk", "wv", "x_wq", "x_wk", "x_wv"):
+        base = ("embed", "heads_dim")
+    elif name in ("wo", "x_wo"):
+        base = ("heads_dim", "embed")
+    elif name == "ffn_router":
+        base = ("embed", "expert")
+    elif name in ("ffn_w_gate", "ffn_w_up"):
+        base = ("expert", "embed", "ff") if ndim - int(stacked) == 3 \
+            else ("embed", "ff")
+    elif name == "ffn_w_down":
+        base = ("expert", "ff", "embed") if ndim - int(stacked) == 3 \
+            else ("ff", "embed")
+    elif name in ("ffn_w_in",):
+        base = ("embed", "ff")
+    elif name in ("ffn_w_out",):
+        base = ("ff", "embed")
+    elif name in ("w_in_rnn", "w_in_gate"):
+        base = ("embed", "rnn")
+    elif name in ("w_a", "w_x"):
+        base = ("rnn", None)
+    elif name in ("b_a", "b_x", "lam"):
+        base = ("rnn",)
+    elif name == "w_in":
+        base = ("embed", "inner")
+    elif name == "w_out":
+        base = ("inner", "embed") if ndim - int(stacked) == 2 else ("rnn",)
+    elif name == "conv":
+        base = (None, "inner")
+    else:  # norms, gates, A_log, Dskip, dt_bias, gate_norm, q/k_norm ...
+        base = (None,) * (ndim - int(stacked))
+    if stacked:
+        base = ("layer",) + base
+    # pad/truncate defensively
+    if len(base) != ndim:
+        base = tuple(list(base) + [None] * ndim)[:ndim]
+    return base
+
+
+def _state_axes(name: str, ndim: int, stacked: bool) -> Tuple:
+    if name in ("k", "v"):
+        base = ("kv_batch", "cache", "kv_heads", "head_dim")
+    elif name in ("xk", "xv"):
+        base = ("kv_batch", "enc_seq", "kv_heads", "head_dim")
+    elif name == "pos":
+        base = ("kv_batch", "cache")
+    elif name == "h":
+        base = ("kv_batch", "rnn") if ndim - int(stacked) == 2 \
+            else ("kv_batch", "ssd_heads", None, None)
+    elif name == "conv":
+        base = ("kv_batch", None, "inner")
+    elif name == "lengths":
+        base = ("kv_batch",)
+    else:
+        base = (None,) * (ndim - int(stacked))
+    if stacked:
+        base = ("layer_state",) + base   # state layer dim: never sharded
+    if len(base) != ndim:
+        base = tuple(list(base) + [None] * ndim)[:ndim]
+    return base
+
+
+def _tree_shardings(shapes_tree, mesh: Mesh, rules: Dict, axes_fn):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    out = []
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "idx", getattr(p, "name", "")))
+                for p in path]
+        name = str(keys[-1]) if keys and not isinstance(keys[-1], int) \
+            else (str(keys[-2]) if len(keys) > 1 else "")
+        # tuple indices (TrainState/AdamW namedtuples) give int keys; walk
+        # back to the most recent string key
+        for k in reversed(keys):
+            if isinstance(k, str) and not k.isdigit():
+                name = k
+                break
+        stacked = any(str(k) == "stack" for k in keys)
+        axes = axes_fn(name, len(leaf.shape), stacked)
+        spec = logical_to_spec(mesh, rules, leaf.shape, axes)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ---------------------------------------------------------------------------
+# public: shardings for params / decode state / batches
+# ---------------------------------------------------------------------------
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(partial(M.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict):
+    return _tree_shardings(param_shapes(cfg), mesh, rules, _param_axes)
+
+
+def state_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(partial(M.init_decode_state, cfg, batch, cache_len))
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict, batch: int,
+                    cache_len: int):
+    return _tree_shardings(state_shapes(cfg, batch, cache_len), mesh, rules,
+                           _state_axes)
+
+
+def data_sharding(mesh: Mesh, rules: Dict, shape, axes) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, rules, shape, axes))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the R-Part hot spot (decode attention).
+
+decode_attention.py  flash-decode kernel: bf16 KV storage, fp32 compute
+                     (the TPU-idiomatic port of the paper's AVX2
+                     mixed-precision attention, paper section 5.1), GQA,
+                     sliding window, attention sinks, logit soft-capping.
+quant_kv.py          int8-quantized KV variant (section 5.2): per-
+                     (token,head) scales, dequantized in VMEM, fp32 accum.
+ops.py               jit'd dispatch wrappers (kernel vs jnp reference).
+ref.py               pure-jnp oracles.
+"""

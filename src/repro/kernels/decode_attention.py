@@ -1,0 +1,134 @@
+"""Flash-decode Pallas TPU kernel for R-Part attention (one new token per
+sequence against a long KV-cache).
+
+TPU adaptation of the paper's §5.1 mixed-precision CPU attention: the
+KV-cache is stored in bf16 (int8 variant in quant_kv.py), streamed
+HBM->VMEM in ``block_s``-sized sequence tiles, converted and accumulated
+in fp32 — the same store-low/compute-high policy with VMEM/MXU in place
+of AVX registers.
+
+Grid: (batch, kv_heads, seq_blocks).  The seq dimension is innermost
+(sequential on TPU), so the online-softmax running max / denominator /
+accumulator live in VMEM scratch across grid steps and the output is
+written on the last step — the canonical flash-decoding reduction.
+
+Layout notes (TPU-native):
+  * q is pre-grouped to [B, Hkv, G, Dh]: the G grouped query heads of a KV
+    head form the sublane dim of a (G, Dh) MXU tile; Dh=128 fills the
+    lanes exactly for every assigned arch (256 for recurrentgemma -> two
+    lane tiles).
+  * K/V tiles are (block_s, Dh) with block_s a multiple of 128, making
+    q·Kᵀ and p·V MXU-shaped contractions.
+  * VMEM working set per step ≈ 2·block_s·Dh·2B (K,V) + G·block_s·4B
+    (scores) + G·Dh·4B (acc): ~0.27 MB at block_s=512, Dh=128 — small
+    enough for double buffering in 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref,            # [1] int32: absolute position of the new token
+            q_ref,              # [1, 1, G, Dh]
+            k_ref,              # [1, Sblk, 1, Dh]
+            v_ref,              # [1, Sblk, 1, Dh]
+            pos_ref,            # [1, Sblk] int32 (-1 = invalid slot)
+            o_ref,              # [1, 1, G, Dh]
+            m_s, l_s, acc,      # VMEM scratch: [G,1], [G,1], [G,Dh] fp32
+            *, scale: float, window: int, sink: int, softcap: float,
+            blocks: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [Sblk, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = pos_ref[0]                                     # [Sblk] int32
+    qpos = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, Sblk]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (pos >= 0) & (pos <= qpos)
+    if window > 0:
+        in_win = pos > qpos - window
+        if sink > 0:
+            in_win |= pos < sink
+        valid &= in_win
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(sb == blocks - 1)
+    def _done():
+        out = acc[...] / jnp.maximum(l_s[...], 1e-30)
+        out = jnp.where(m_s[...] > NEG_INF / 2, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, lengths, *, window: int = 0, sink: int = 0,
+                     softcap: float = 0.0, block_s: int = 512,
+                     interpret: bool = True):
+    """q [B,Hq,Dh]; k,v [B,S,Hkv,Dh] (bf16/f32); pos [B,S] int32;
+    lengths [B] int32.  Returns o [B,Hq,Dh] in q.dtype."""
+    b, hq, dh = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    block_s = min(block_s, pl.next_power_of_2(s_len))
+    blocks = max(1, -(-s_len // block_s))
+    pad = blocks * block_s - s_len
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    qg = q.reshape(b, hkv, g, dh)
+
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(dh), window=window, sink=sink,
+        softcap=softcap, blocks=blocks)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hkv, blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,)),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, block_s), lambda bi, hi, si: (bi, si)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v, pos.astype(jnp.int32))
+    return out.reshape(b, hq, dh)

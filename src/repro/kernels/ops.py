@@ -1,0 +1,60 @@
+"""Jit'd dispatch wrappers for the R-Part attention kernels.
+
+``use_kernel='auto'`` picks the Pallas kernel on TPU and the jnp reference
+on CPU (where the kernels are still *validated* via interpret mode, but
+the reference lowers to better XLA/CPU code and keeps the multi-pod
+dry-run free of per-backend custom calls).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import quant_kv as _qk
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "block_s",
+                                   "use_kernel", "interpret"))
+def decode_attention(q, k, v, pos, lengths, *, window: int = 0, sink: int = 0,
+                     softcap: float = 0.0, block_s: int = 512,
+                     use_kernel: str = "auto", interpret: bool = True):
+    """Batched decode attention.  q [B,Hq,Dh]; k,v [B,S,Hkv,Dh];
+    pos [B,S] int32; lengths [B] int32 -> [B,Hq,Dh]."""
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _da.decode_attention(q, k, v, pos, lengths, window=window,
+                                    sink=sink, softcap=softcap,
+                                    block_s=block_s,
+                                    interpret=interpret and not _on_tpu())
+    return _ref.decode_attention_ref(q, k, v, pos, lengths, window=window,
+                                     sink=sink, softcap=softcap)
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "block_s",
+                                   "use_kernel", "interpret"))
+def decode_attention_int8(q, k_q, k_scale, v_q, v_scale, pos, lengths, *,
+                          window: int = 0, sink: int = 0, softcap: float = 0.0,
+                          block_s: int = 512, use_kernel: str = "auto",
+                          interpret: bool = True):
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _qk.decode_attention_int8(
+            q, k_q, k_scale, v_q, v_scale, pos, lengths, window=window,
+            sink=sink, softcap=softcap, block_s=block_s,
+            interpret=interpret and not _on_tpu())
+    return _ref.decode_attention_int8_ref(
+        q, k_q, k_scale, v_q, v_scale, pos, lengths, window=window,
+        sink=sink, softcap=softcap)
+
+
+quantize_kv = _qk.quantize_kv
+dequantize_kv = _qk.dequantize_kv

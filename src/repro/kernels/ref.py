@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``decode_attention_ref`` reuses the chunked flash attention from
+repro.models.layers — the same function the model's jnp path executes, so
+kernel == ref  also implies  kernel == model.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.quant_kv import dequantize_kv
+from repro.models import layers as L
+
+
+def decode_attention_ref(q, k, v, pos, lengths, *, window: int = 0,
+                         sink: int = 0, softcap: float = 0.0):
+    """q [B,Hq,Dh]; k,v [B,S,Hkv,Dh]; pos [B,S]; lengths [B] -> [B,Hq,Dh]."""
+    o = L.flash_attention(q[:, None], k, v, lengths[:, None].astype(jnp.int32),
+                          pos, causal=True, window=window, sink=sink,
+                          softcap=softcap)
+    return o[:, 0]
+
+
+def decode_attention_int8_ref(q, k_q, k_scale, v_q, v_scale, pos, lengths,
+                              *, window: int = 0, sink: int = 0,
+                              softcap: float = 0.0):
+    k = dequantize_kv(k_q, k_scale).astype(q.dtype)
+    v = dequantize_kv(v_q, v_scale).astype(q.dtype)
+    return decode_attention_ref(q, k, v, pos, lengths, window=window,
+                                sink=sink, softcap=softcap)

@@ -1,0 +1,374 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh x strategy)
+combination on 512 placeholder host devices, and extract the roofline
+terms (FLOPs / bytes / collective bytes) from the compiled artifact.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-8b --shape decode_32k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --list
+
+Results land in benchmarks/results/dryrun/*.json (one file per combo) and
+are aggregated by benchmarks/bench_roofline.py.
+"""
+# The VERY FIRST lines — before ANY other import (jax locks the device
+# count at first init):
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from dataclasses import replace    # noqa: E402
+from functools import partial      # noqa: E402
+
+import jax                         # noqa: E402
+import jax.numpy as jnp            # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.config import (ASSIGNED_ARCHS, SHAPES, SKIPS, ModelConfig,
+                               get_arch)                     # noqa: E402
+from repro.distributed import sharding as SH                 # noqa: E402
+from repro.distributed.api import use_rules                  # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models import model as M                          # noqa: E402
+from repro.training.train import make_train_step             # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+LONG_WINDOW = 8192       # sliding-window variant for dense archs @ long_500k
+LONG_SINK = 64
+
+
+# ---------------------------------------------------------------------------
+# config variants per shape
+# ---------------------------------------------------------------------------
+def variant_for_shape(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: dense/moe/vlm archs switch
+    to the sliding-window + sink decode variant (DESIGN.md §5); SSM /
+    hybrid archs run natively."""
+    if shape_name == "long_500k" and cfg.window == 0 and \
+            any(k in cfg.pattern for k in ("attn",)):
+        return replace(cfg, window=LONG_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Returns dict of ShapeDtypeStructs for the mode's entry point."""
+    sc = SHAPES[shape_name]
+    b, s = sc.global_batch, sc.seq_len
+    out = {}
+    if sc.mode == "train":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["targets"] = _sds((b, s), jnp.int32)
+        out["mask"] = _sds((b, s), jnp.float32)
+    elif sc.mode == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["prompt_lens"] = _sds((b,), jnp.int32)
+    else:  # decode: ONE new token against a seq_len cache
+        out["tokens"] = _sds((b, 1), jnp.int32)
+    if cfg.frontend != "none" and sc.mode in ("train", "prefill"):
+        out["enc_feats"] = _sds((b, cfg.encoder_seq, cfg.encoder_d_model),
+                                jnp.dtype(cfg.dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+\[[\d,]*\])\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(stext: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(stext):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# effective bytes-on-the-wire multipliers (ring algorithms, approximate)
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+
+
+def collective_bytes(hlo_text: str, stack_trips: int = 0):
+    """Sum per-collective result bytes (per device) from optimized HLO,
+    attributed per computation.
+
+    XLA's static accounting counts a while-loop body once; the layer
+    scan's trip count is known (``stack_trips`` = periods).  Collectives
+    textually inside any while-BODY computation are loop-resident
+    (executed ~once per layer -> scaled by trips in the roofline); those
+    in top-level computations (e.g. embedding-gradient reduces, logits)
+    execute once.  Inner chunk-loop collectives are attributed one trips
+    factor (slight undercount, documented in EXPERIMENTS §Roofline).
+    """
+    body_names = set(_BODY_RE.findall(hlo_text))
+    per_op = {k: 0 for k in _COLL_FACTOR}
+    counts = {k: 0 for k in _COLL_FACTOR}
+    loop_b = 0
+    top_b = 0
+    current = None
+    for line in hlo_text.splitlines():
+        h = _COMP_HDR_RE.match(line)
+        if h:
+            current = h.group(1)
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        tuple_shapes, single, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        stext = tuple_shapes if tuple_shapes else single
+        b = _shape_bytes(stext)
+        per_op[op] += b
+        counts[op] += 1
+        wire = b * _COLL_FACTOR[op]
+        if current in body_names:
+            loop_b += wire
+        else:
+            top_b += wire
+    total_wire = sum(per_op[k] * _COLL_FACTOR[k] for k in per_op)
+    return {"bytes_by_op": per_op, "counts": counts,
+            "wire_bytes": total_wire,
+            "wire_loop_bytes": loop_b, "wire_stacked_bytes": top_b}
+
+
+# ---------------------------------------------------------------------------
+# build + lower + compile one combination
+# ---------------------------------------------------------------------------
+def build_and_lower(arch: str, shape_name: str, mesh, strategy: str,
+                    kv_chunk: int = 2048, q_chunk: int = 1024):
+    cfg = variant_for_shape(get_arch(arch), shape_name)
+    sc = SHAPES[shape_name]
+    zero3 = SH.auto_zero3(cfg, mesh)
+    rules = SH.make_rules(strategy, sc.mode, zero3=zero3,
+                          train=(sc.mode == "train"))
+    specs = input_specs(cfg, shape_name)
+    p_shapes = SH.param_shapes(cfg)
+    p_sh = SH.param_shardings(cfg, mesh, rules)
+    repl = SH.replicated(mesh)
+
+    def dsh(key, axes):
+        return SH.data_sharding(mesh, rules, specs[key].shape, axes)
+
+    if sc.mode == "train":
+        _, train_step = make_train_step(cfg, remat=True, q_chunk=q_chunk,
+                                        kv_chunk=kv_chunk,
+                                        grad_shardings=p_sh)
+
+        def fn(state, batch):
+            with use_rules(mesh, rules):
+                return train_step(state, batch)
+
+        opt_sh = type("x", (), {})  # placeholder
+        from repro.training.optimizer import AdamWState
+        from repro.training.train import TrainState
+        state_spec = TrainState(
+            p_shapes,
+            AdamWState(_sds((), jnp.int32),
+                       jax.tree.map(lambda s: _sds(s.shape, jnp.float32),
+                                    p_shapes),
+                       jax.tree.map(lambda s: _sds(s.shape, jnp.float32),
+                                    p_shapes)))
+        state_sh = TrainState(p_sh, AdamWState(repl, p_sh, p_sh))
+        batch_spec = {k: specs[k] for k in specs}
+        batch_sh = {"tokens": dsh("tokens", ("batch", "seq")),
+                    "targets": dsh("targets", ("batch", "seq")),
+                    "mask": dsh("mask", ("batch", "seq"))}
+        if "enc_feats" in specs:
+            batch_sh["enc_feats"] = dsh("enc_feats",
+                                        ("batch", "enc_seq", None))
+        jfn = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                      out_shardings=(state_sh, repl))
+        lowered = jfn.lower(state_spec, batch_spec)
+
+    elif sc.mode == "prefill":
+        cache_len = sc.seq_len
+        st_sh = SH.state_shardings(cfg, mesh, rules, sc.global_batch,
+                                   cache_len)
+        def fn(params, tokens, prompt_lens, enc_feats=None):
+            with use_rules(mesh, rules):
+                return M.prefill(params, cfg, tokens, prompt_lens,
+                                 cache_len, enc_feats=enc_feats,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
+        logits_sh = SH.data_sharding(
+            mesh, rules, (sc.global_batch, cfg.vocab_size),
+            ("batch", "vocab"))
+        in_sh = [p_sh, dsh("tokens", ("batch", "seq")),
+                 dsh("prompt_lens", ("batch",))]
+        args = [p_shapes, specs["tokens"], specs["prompt_lens"]]
+        if "enc_feats" in specs:
+            in_sh.append(dsh("enc_feats", ("batch", "enc_seq", None)))
+            args.append(specs["enc_feats"])
+        jfn = jax.jit(fn, in_shardings=tuple(in_sh),
+                      out_shardings=(logits_sh, st_sh))
+        lowered = jfn.lower(*args)
+
+    else:  # decode
+        cache_len = sc.seq_len
+        st_shapes = SH.state_shapes(cfg, sc.global_batch, cache_len)
+        st_sh = SH.state_shardings(cfg, mesh, rules, sc.global_batch,
+                                   cache_len)
+        def fn(params, state, tokens):
+            with use_rules(mesh, rules):
+                return M.decode_step(params, cfg, state, tokens,
+                                     kv_chunk=kv_chunk)
+        logits_sh = SH.data_sharding(
+            mesh, rules, (sc.global_batch, cfg.vocab_size),
+            ("batch", "vocab"))
+        jfn = jax.jit(fn, in_shardings=(p_sh, st_sh, repl),
+                      out_shardings=(logits_sh, st_sh))
+        lowered = jfn.lower(p_shapes, st_shapes, specs["tokens"])
+
+    return cfg, lowered, {"zero3": zero3, "strategy": strategy,
+                          "mode": sc.mode}
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str,
+            save: bool = True, hlo_save: bool = False) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "strategy": strategy, "devices": n_dev}
+    try:
+        cfg, lowered, meta = build_and_lower(arch, shape_name, mesh, strategy)
+        rec.update(meta)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        trips = cfg.num_layers // len(cfg.layer_pattern)
+        coll = collective_bytes(hlo, stack_trips=trips)
+        rec["scan_trips"] = trips
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            "collectives": coll,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "window": cfg.window,
+        })
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        if hlo_save:
+            rec["hlo_path"] = _save_hlo(arch, shape_name, mesh_kind,
+                                        strategy, hlo)
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if save:
+        _save(rec)
+    return rec
+
+
+def _fname(arch, shape, mesh_kind, strategy, ext="json"):
+    a = arch.replace(".", "_")
+    return os.path.join(RESULTS_DIR, f"{a}__{shape}__{mesh_kind}__{strategy}.{ext}")
+
+
+def _save(rec) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(_fname(rec["arch"], rec["shape"], rec["mesh"],
+                     rec["strategy"]), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def _save_hlo(arch, shape, mesh_kind, strategy, hlo: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    p = _fname(arch, shape, mesh_kind, strategy, "hlo")
+    with open(p, "w") as f:
+        f.write(hlo)
+    return p
+
+
+# ---------------------------------------------------------------------------
+def iter_combos(mesh_kinds, strategies, archs=None, shapes=None):
+    for arch in (archs or ASSIGNED_ARCHS):
+        for shape in (shapes or list(SHAPES)):
+            if (arch, shape) in SKIPS:
+                continue
+            for mk in mesh_kinds:
+                for st in strategies:
+                    yield arch, shape, mk, st
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--strategy", default="fastdecode",
+                    choices=["fastdecode", "fastdecode_sm", "baseline",
+                             "dp", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--hlo", action="store_true", help="save optimized HLO")
+    args = ap.parse_args()
+
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    strategies = (["fastdecode", "baseline"] if args.strategy == "both"
+                  else [args.strategy])
+    if args.list:
+        for c in iter_combos(mesh_kinds, strategies):
+            print(*c)
+        return
+    combos = list(iter_combos(
+        mesh_kinds, strategies,
+        archs=[args.arch] if args.arch else None,
+        shapes=[args.shape] if args.shape else None))
+    if not args.all and len(combos) > 8 and not (args.arch or args.shape):
+        raise SystemExit("refusing full sweep without --all")
+    for arch, shape, mk, st in combos:
+        rec = run_one(arch, shape, mk, st, hlo_save=args.hlo)
+        status = "OK " if rec.get("ok") else "FAIL"
+        extra = (f"flops={rec.get('flops', 0):.3g} "
+                 f"coll={rec.get('collectives', {}).get('wire_bytes', 0):.3g}B "
+                 f"temp={rec.get('temp_size_in_bytes', 0):.3g}B "
+                 f"compile={rec.get('compile_s', 0)}s"
+                 if rec.get("ok") else rec.get("error", ""))
+        print(f"[{status}] {arch} {shape} {mk} {st}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (NOT a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod: 16x16 = 256 chips ('data' x 'model'); multi-pod adds a
+    leading 'pod' axis (2 x 16 x 16 = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_par: int = 1):
+    """Small mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model_par == 0
+    return jax.make_mesh((n // model_par, model_par), ("data", "model"))

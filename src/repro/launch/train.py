@@ -1,0 +1,95 @@
+"""Training launcher.
+
+Examples:
+    # tiny real run on this host (reduced config)
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --reduced --steps 100 --batch 8 --seq 128
+
+    # ~100M-parameter end-to-end run (examples/train_small.py wraps this)
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --reduced --layers 8 --d-model 768 --steps 300 --batch 16 --seq 256
+
+On a real multi-host TPU pod the same script runs unreduced with
+--mesh-model N (jax.distributed initialization is the platform's job).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import get_arch
+from repro.distributed import sharding as SH
+from repro.distributed.api import use_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.training import checkpoint as CK
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.train import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--save", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(layers=args.layers, d_model=args.d_model)
+    mesh = make_host_mesh(args.mesh_model)
+    rules = SH.make_rules("fastdecode", "train", train=True)
+
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={mesh.size}")
+
+    init_state, train_step = make_train_step(
+        cfg, peak_lr=args.lr, warmup=max(10, args.steps // 10),
+        total_steps=args.steps, remat=args.remat,
+        q_chunk=min(1024, args.seq), kv_chunk=min(1024, args.seq))
+    state = init_state(params)
+
+    def fn(state, batch):
+        with use_rules(mesh, rules):
+            return train_step(state, batch)
+
+    step = jax.jit(fn)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                  seed=args.seed)).batches()
+    t0 = time.time()
+    for i in range(args.steps):
+        b = next(data)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.frontend != "none":
+            batch["enc_feats"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.encoder_d_model),
+                jnp.dtype(cfg.dtype))
+        state, metrics = step(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            tok_s = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                  f"gnorm {m['grad_norm']:.2f} tok/s {tok_s:,.0f}")
+    if args.save:
+        CK.save(args.save, state.params)
+        print("saved", args.save)
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,661 @@
+"""Unified model definition for every architecture in the zoo.
+
+One parameterized decoder covers dense / GQA / qk-norm / MoE / hybrid
+(RG-LRU) / SSM (Mamba2-SSD) / VLM (cross-attn or early-fusion) / enc-dec
+(whisper) families.  Layers are applied with ``lax.scan`` over *pattern
+periods* (stacked weights), keeping HLO size O(period) instead of
+O(num_layers) — essential for compile-feasibility of the 40-combo dry-run.
+
+Public entry points:
+    init_params(rng, cfg)
+    train_forward(params, cfg, tokens, enc_feats=None) -> (logits, aux)
+    prefill(params, cfg, tokens, prompt_lens, cache_len, enc_feats=None)
+        -> (last_logits, state)
+    init_decode_state(cfg, batch, cache_len)
+    decode_step(params, cfg, state, tokens) -> (logits, state)
+
+The FastDecode S-Part/R-Part boundary of each block lives in
+``repro.core.decompose``; this module calls through it so the decomposition
+is structural, not cosmetic.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import (ATTN, DEC_XATTN, ENC_ATTN, FFN_MLP, FFN_MOE,
+                               FFN_NONE, FFN_SWIGLU, RGLRU, SSD, ModelConfig)
+from repro.core.config import XATTN as L_XATTN
+from repro.distributed.api import shard
+from repro.models import layers as L
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Context threaded through block application
+# ---------------------------------------------------------------------------
+class Ctx(NamedTuple):
+    cfg: ModelConfig
+    mode: str                    # train | prefill | decode
+    qpos: jnp.ndarray            # [B, Sq] absolute positions of the q tokens
+    lengths: jnp.ndarray         # [B] current sequence lengths (cache write idx)
+    enc_feats: Optional[jnp.ndarray]   # [B, S_enc, d_enc] frontend/encoder out
+    cache_len: int               # KV cache slots (after window clamp)
+    kv_chunk: int = 1024
+    q_chunk: int = 1024
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def _keyiter(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def _attn_param_shapes(cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    src = cfg.encoder_d_model if cross else d
+    shapes = {
+        "wq": (d, hq * hd),
+        "wk": (src, hkv * hd),
+        "wv": (src, hkv * hd),
+        "wo": (hq * hd, d),
+    }
+    if cfg.qk_norm and not cross:
+        shapes["q_norm"] = (hd,)
+        shapes["k_norm"] = (hd,)
+    return shapes
+
+
+def _ffn_param_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.ffn_kind == FFN_SWIGLU:
+        return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+    if cfg.ffn_kind == FFN_MLP:
+        return {"w_in": (d, f), "w_out": (f, d)}
+    if cfg.ffn_kind == FFN_MOE:
+        e = cfg.num_experts
+        return {"router": (d, e), "w_gate": (e, d, f), "w_up": (e, d, f),
+                "w_down": (e, f, d)}
+    return {}
+
+
+def _block_param_shapes(cfg: ModelConfig, kind: str) -> Dict[str, tuple]:
+    d = cfg.d_model
+    shapes: Dict[str, tuple] = {"ln1": (d,)}
+    if kind in (ATTN, ENC_ATTN):
+        shapes.update(_attn_param_shapes(cfg))
+    elif kind == DEC_XATTN:
+        shapes.update(_attn_param_shapes(cfg))
+        shapes["lnx"] = (d,)
+        shapes.update({"x_" + k: v for k, v in
+                       _attn_param_shapes(cfg, cross=True).items()})
+    elif kind == RGLRU:
+        w = cfg.rnn_width
+        shapes.update({
+            "w_in_rnn": (d, w), "w_in_gate": (d, w), "conv": (cfg.conv_width, w),
+            "w_a": (w, w), "b_a": (w,), "w_x": (w, w), "b_x": (w,),
+            "lam": (w,), "w_out": (w, d),
+        })
+    elif kind == SSD:
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssd_heads
+        shapes.update({
+            "w_in": (d, 2 * di + 2 * n + h),
+            "conv": (cfg.conv_width, di + 2 * n),
+            "A_log": (h,), "Dskip": (h,), "dt_bias": (h,),
+            "gate_norm": (di,), "w_out": (di, d),
+        })
+    if kind == L_XATTN:
+        shapes.update(_attn_param_shapes(cfg, cross=True))
+        shapes["gate_attn"] = (1,)
+        shapes["gate_ffn"] = (1,)
+    # ffn (SSD blocks have none)
+    if kind != SSD and cfg.ffn_kind != FFN_NONE:
+        shapes["ln2"] = (d,)
+        shapes.update({"ffn_" + k: v for k, v in _ffn_param_shapes(cfg).items()})
+    return shapes
+
+
+def _init_block(keys, cfg: ModelConfig, kind: str, stack_n: int, dtype):
+    """Init one block's params; leaves get leading dim ``stack_n`` if > 0."""
+    shapes = _block_param_shapes(cfg, kind)
+    depth_scale = 0.02 / math.sqrt(2.0 * cfg.num_layers)
+    out = {}
+    for name, shp in shapes.items():
+        full = (stack_n,) + shp if stack_n else shp
+        if name.startswith(("ln", "lnx", "q_norm", "k_norm", "gate_norm")):
+            out[name] = jnp.zeros(full, F32)
+        elif name in ("gate_attn", "gate_ffn"):
+            out[name] = jnp.zeros(full, F32)
+        elif name in ("lam",):
+            # init so that a in [0.9, 0.999] roughly (griffin init)
+            k = next(keys)
+            u = jax.random.uniform(k, full, F32, 0.9, 0.999)
+            a = u ** (1.0 / L._LRU_C)
+            out[name] = jnp.log(jnp.expm1(-jnp.log(a)))  # softplus^-1(-log a)
+        elif name == "A_log":
+            k = next(keys)
+            out[name] = jnp.log(jax.random.uniform(k, full, F32, 1.0, 16.0))
+        elif name in ("Dskip",):
+            out[name] = jnp.ones(full, F32)
+        elif name in ("dt_bias", "b_a", "b_x"):
+            out[name] = jnp.zeros(full, F32)
+        else:
+            scale = depth_scale if name in ("wo", "x_wo", "w_out", "ffn_w_down",
+                                            "ffn_w_out") else 0.02
+            out[name] = _init(next(keys), full, scale, dtype)
+    return out
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = _dt(cfg)
+    keys = _keyiter(rng)
+    pattern = cfg.layer_pattern
+    period = len(pattern)
+    n_full, rem = divmod(cfg.num_layers, period)
+    params: Dict[str, Any] = {
+        "embed": _init(next(keys), (cfg.vocab_size, cfg.d_model), 0.02, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), F32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(next(keys), (cfg.d_model, cfg.vocab_size),
+                                  0.02, dtype)
+    params["stack"] = {f"s{i}": _init_block(keys, cfg, kind, n_full, dtype)
+                       for i, kind in enumerate(pattern)}
+    params["rem"] = [
+        _init_block(keys, cfg, pattern[i], 0, dtype) for i in range(rem)]
+    if cfg.is_encdec:
+        enc_cfg = cfg
+        params["encoder"] = {
+            "stack": {"s0": _init_block(keys, cfg, ENC_ATTN,
+                                        cfg.encoder_layers, dtype)},
+            "final_norm": jnp.zeros((cfg.d_model,), F32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# decode-state init
+# ---------------------------------------------------------------------------
+def _block_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    dtype = _dt(cfg)
+    if kind in (ATTN, ENC_ATTN):
+        c = min(cache_len, cfg.window) if cfg.window else cache_len
+        return {"k": jnp.zeros((batch, c, hkv, hd), dtype),
+                "v": jnp.zeros((batch, c, hkv, hd), dtype),
+                "pos": jnp.full((batch, c), -1, jnp.int32)}
+    if kind == L_XATTN:
+        s = cfg.encoder_seq
+        return {"xk": jnp.zeros((batch, s, hkv, hd), dtype),
+                "xv": jnp.zeros((batch, s, hkv, hd), dtype)}
+    if kind == DEC_XATTN:
+        s = cfg.encoder_seq
+        return {"k": jnp.zeros((batch, cache_len, hkv, hd), dtype),
+                "v": jnp.zeros((batch, cache_len, hkv, hd), dtype),
+                "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+                "xk": jnp.zeros((batch, s, hkv, hd), dtype),
+                "xv": jnp.zeros((batch, s, hkv, hd), dtype)}
+    if kind == RGLRU:
+        w = cfg.rnn_width
+        return {"h": jnp.zeros((batch, w), F32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+    if kind == SSD:
+        return {"h": jnp.zeros((batch, cfg.ssd_heads, cfg.ssd_head_dim,
+                                cfg.ssm_state), F32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state), dtype)}
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
+    pattern = cfg.layer_pattern
+    period = len(pattern)
+    n_full, rem = divmod(cfg.num_layers, period)
+
+    def stacked(kind):
+        one = _block_state(cfg, kind, batch, cache_len)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape), one)
+
+    return {
+        "stack": {f"s{i}": stacked(kind) for i, kind in enumerate(pattern)},
+        "rem": [_block_state(cfg, pattern[i], batch, cache_len)
+                for i in range(rem)],
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention sub-blocks (S-Part projections around an R-Part core)
+# ---------------------------------------------------------------------------
+def _qkv_proj(p, x, cfg, prefix=""):
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wq"]).reshape(b, s, hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wk"]).reshape(b, s, hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm and not prefix:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _self_attention(p, x, st, ctx: Ctx, *, causal=True):
+    """Full self-attention block body (no residual/norm).
+
+    Train/prefill: x is the whole sequence.  Decode: x is one token and the
+    KV-cache in ``st`` is read/updated.  Returns (attn_out, new_st).
+    """
+    cfg = ctx.cfg
+    q, k, v = _qkv_proj(p, x, cfg)
+    win = cfg.window
+    q = L.rope(q, ctx.qpos, cfg.rope_theta)
+    k = L.rope(k, ctx.qpos, cfg.rope_theta)   # keys stored rotated
+    q = shard(q, "batch", "qkv_seq", "heads", "head_dim")
+    k = shard(k, "batch", "qkv_seq", "kv_heads", "head_dim")
+
+    if ctx.mode == "train":
+        kpos = ctx.qpos
+        out = L.flash_attention(q, k, v, ctx.qpos, kpos, causal=causal,
+                                window=win, softcap=cfg.attn_logit_softcap,
+                                q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+        new_st = st
+    elif ctx.mode == "prefill":
+        cache_n = st["k"].shape[1] if st is not None else 0
+        kpos = jnp.where(jnp.arange(x.shape[1])[None, :] < ctx.lengths[:, None],
+                         ctx.qpos, -1)
+        out = L.flash_attention(q, k, v, ctx.qpos, kpos, causal=causal,
+                                window=win, softcap=cfg.attn_logit_softcap,
+                                q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+        # scatter the last min(S, cache) tokens into the (ring) cache
+        s = x.shape[1]
+        m = min(s, cache_n)
+        sl = jnp.arange(s - m, s)
+        slots = sl % cache_n
+        new_st = dict(st)
+        new_st["k"] = st["k"].at[:, slots].set(k[:, s - m:])
+        new_st["v"] = st["v"].at[:, slots].set(v[:, s - m:])
+        new_st["pos"] = st["pos"].at[:, slots].set(kpos[:, s - m:])
+    else:  # decode
+        cache_n = st["k"].shape[1]
+        b = x.shape[0]
+        slot = (ctx.lengths % cache_n).astype(jnp.int32)
+        bidx = jnp.arange(b)
+        kc = st["k"].at[bidx, slot].set(k[:, 0])
+        vc = st["v"].at[bidx, slot].set(v[:, 0])
+        pc = st["pos"].at[bidx, slot].set(ctx.lengths)
+        kc = shard(kc, "kv_batch", "cache", "kv_heads", "head_dim")
+        vc = shard(vc, "kv_batch", "cache", "kv_heads", "head_dim")
+        from repro.distributed import api as dapi
+        mesh_ctx = dapi._current()
+        if mesh_ctx is not None and mesh_ctx[1].get("_explicit_decode_attn"):
+            # pinned flash-decoding collective schedule (shard_map):
+            # one acc-psum + two scalar-psums over `model` per layer
+            from repro.distributed.collectives import decode_attention_sharded
+            mesh, rules = mesh_ctx
+            out = decode_attention_sharded(
+                q, kc, vc, pc, ctx.lengths, mesh=mesh, rules=rules,
+                window=win, softcap=cfg.attn_logit_softcap)
+        else:
+            # decode: single-shot (kv_chunk = full cache) — scores are
+            # [.,1,S]; GSPMD shards the cache dim and picks the collectives
+            out = L.flash_attention(q, kc, vc, ctx.qpos, pc, causal=True,
+                                    window=win,
+                                    softcap=cfg.attn_logit_softcap,
+                                    kv_chunk=max(kc.shape[1], 1))
+        new_st = {"k": kc, "v": vc, "pos": pc}
+    b, s, hq, hd = out.shape
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd), p["wo"])
+    return out, new_st
+
+
+def _cross_attention(p, x, st, ctx: Ctx, prefix="", feats=None):
+    """Cross attention against static features (image patches / encoder)."""
+    cfg = ctx.cfg
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wq"]).reshape(b, s, hq, hd)
+    if ctx.mode == "decode":
+        xk, xv = st["xk"], st["xv"]
+        new_st = st
+    else:
+        f = feats if feats is not None else ctx.enc_feats
+        se = f.shape[1]
+        xk = jnp.einsum("bsd,dh->bsh", f.astype(x.dtype),
+                        p[prefix + "wk"]).reshape(b, se, hkv, hd)
+        xv = jnp.einsum("bsd,dh->bsh", f.astype(x.dtype),
+                        p[prefix + "wv"]).reshape(b, se, hkv, hd)
+        if st is not None:
+            new_st = dict(st)
+            new_st["xk"], new_st["xv"] = xk, xv
+        else:
+            new_st = None
+    kpos = jnp.zeros((b, xk.shape[1]), jnp.int32)   # all valid, non-causal
+    out = L.flash_attention(q, xk, xv, ctx.qpos, kpos, causal=False,
+                            kv_chunk=ctx.kv_chunk)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd),
+                     p[prefix + "wo"])
+    return out, new_st
+
+
+# ---------------------------------------------------------------------------
+# non-attention mixers
+# ---------------------------------------------------------------------------
+def _rglru_mixer(p, x, st, ctx: Ctx):
+    cfg = ctx.cfg
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"])
+                       .astype(F32)).astype(x.dtype)
+    r = jnp.einsum("bsd,dw->bsw", x, p["w_in_rnn"])
+    conv_state = st["conv"] if st is not None else None
+    r, new_conv = L.causal_conv1d(p["conv"], r, conv_state)
+    if ctx.mode == "decode":
+        h, new_h = L.rglru_step(p, r[:, 0], st["h"])
+        h = h[:, None, :]
+    else:
+        h = L.rglru_scan(p, r)
+        new_h = h[:, -1, :]
+        if ctx.mode == "prefill":
+            # mask positions beyond each prompt: state at its last valid pos
+            idx = jnp.clip(ctx.lengths - 1, 0, h.shape[1] - 1)
+            new_h = h[jnp.arange(h.shape[0]), idx]
+    out = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype) * gate, p["w_out"])
+    new_st = None if st is None else {"h": new_h.astype(F32), "conv": new_conv}
+    return out, new_st
+
+
+def _ssd_mixer(p, x, st, ctx: Ctx):
+    cfg = ctx.cfg
+    di, n, hh, pp = cfg.d_inner, cfg.ssm_state, cfg.ssd_heads, cfg.ssd_head_dim
+    b, s, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_state = st["conv"] if st is not None else None
+    xbc, new_conv = L.causal_conv1d(p["conv"], jax.nn.silu(
+        xbc.astype(F32)).astype(x.dtype), conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(b, s, hh, pp)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :])
+    if ctx.mode == "decode":
+        y, new_h = L.ssd_step(xs[:, 0], dt[:, 0], p["A_log"], Bm[:, 0],
+                              Cm[:, 0], p["Dskip"], st["h"])
+        y = y[:, None]
+    else:
+        h0 = st["h"] if st is not None else None
+        y, new_h = L.ssd_chunked(xs, dt, p["A_log"], Bm, Cm, p["Dskip"],
+                                 chunk=cfg.ssd_chunk, h0=h0,
+                                 return_state=True)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                   p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_st = None if st is None else {"h": new_h, "conv": new_conv}
+    return out, new_st
+
+
+# ---------------------------------------------------------------------------
+# ffn dispatch
+# ---------------------------------------------------------------------------
+def _ffn(p, x, cfg, ctx: Optional["Ctx"] = None):
+    """Returns (out, aux_loss)."""
+    fp = {k[4:]: v for k, v in p.items() if k.startswith("ffn_")}
+    if cfg.ffn_kind == FFN_SWIGLU:
+        return L.swiglu(fp, x), 0.0
+    if cfg.ffn_kind == FFN_MLP:
+        return L.mlp(fp, x), 0.0
+    if cfg.ffn_kind == FFN_MOE:
+        from repro.distributed import api as dapi
+        mesh_ctx = dapi._current()
+        if (mesh_ctx is not None and ctx is not None
+                and ctx.mode in ("train", "prefill")
+                and mesh_ctx[0].shape.get("model", 1) > 1
+                and x.ndim == 3
+                and x.shape[1] % mesh_ctx[0].shape["model"] == 0):
+            # explicit shard_map schedule: local dispatch, ff-sharded
+            # experts, SP-pair collectives (see distributed/moe.py)
+            from repro.distributed.moe import moe_ffn_distributed
+            mesh, rules = mesh_ctx
+            return moe_ffn_distributed(fp, x, cfg=cfg, mesh=mesh,
+                                       rules=rules)
+        y, aux = L.moe_ffn(fp, x, num_experts=cfg.num_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.moe_capacity)
+        return y, aux
+    return jnp.zeros_like(x), 0.0
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+def apply_block(kind: str, p, h, st, ctx: Ctx):
+    """Returns (h, new_st, aux)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), F32)
+    hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    if kind == ATTN:
+        mix, new_st = _self_attention(p, hn, st, ctx, causal=True)
+    elif kind == ENC_ATTN:
+        mix, new_st = _self_attention(p, hn, st, ctx, causal=False)
+    elif kind == L_XATTN:
+        mix, new_st = _cross_attention(p, hn, st, ctx)
+        mix = mix * jnp.tanh(p["gate_attn"].astype(mix.dtype))
+    elif kind == DEC_XATTN:
+        mix, new_self = _self_attention(p, hn, st, ctx, causal=True)
+        h = h + mix
+        hx = L.rms_norm(h, p["lnx"], cfg.norm_eps)
+        mix, new_cross = _cross_attention(p, hx, st, ctx, prefix="x_")
+        new_st = None
+        if st is not None:
+            new_st = dict(new_self if new_self is not None else st)
+            if new_cross is not None:
+                new_st["xk"], new_st["xv"] = new_cross["xk"], new_cross["xv"]
+    elif kind == RGLRU:
+        mix, new_st = _rglru_mixer(p, hn, st, ctx)
+    elif kind == SSD:
+        mix, new_st = _ssd_mixer(p, hn, st, ctx)
+    else:
+        raise ValueError(kind)
+    h = h + mix
+    h = shard(h, "batch", "seq", "embed")
+    if kind != SSD and cfg.ffn_kind != FFN_NONE:
+        hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        f, aux_l = _ffn(p, hn, cfg, ctx)
+        if kind == L_XATTN:
+            f = f * jnp.tanh(p["gate_ffn"].astype(f.dtype))
+        h = h + f
+        aux = aux + aux_l
+        h = shard(h, "batch", "seq", "embed")
+    return h, new_st, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+def _run_layers(params, h, state, ctx: Ctx, remat: bool = False):
+    """Scan over pattern periods + remainder.  state may be None (train).
+
+    remat=True checkpoints each scan *body* (one pattern period): the
+    layer scan then stores only the inter-layer carries and recomputes
+    block internals (incl. the flash-attention inner scans) in backward —
+    the standard per-block activation-checkpointing used at 100B scale.
+    """
+    cfg = ctx.cfg
+    pattern = cfg.layer_pattern
+    n_full = cfg.num_layers // len(pattern)
+    has_state = state is not None
+
+    def body(carry, xs):
+        h, aux = carry
+        if has_state:
+            p_per, st_per = xs
+        else:
+            p_per, st_per = xs, {}
+        new_st_per = {}
+        for i, kind in enumerate(pattern):
+            sl = st_per.get(f"s{i}") if has_state else None
+            h, new_sl, a = apply_block(kind, p_per[f"s{i}"], h, sl, ctx)
+            if has_state:
+                new_st_per[f"s{i}"] = new_sl
+            aux = aux + a
+        return (h, aux), (new_st_per if has_state else None)
+
+    aux0 = jnp.zeros((), F32)
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if n_full > 0:
+        xs = (params["stack"], state["stack"]) if has_state else params["stack"]
+        (h, aux), ys = lax.scan(body, (h, aux0), xs)
+        new_stack = ys if has_state else None
+    else:
+        aux = aux0
+        new_stack = state["stack"] if has_state else None
+    new_rem = []
+    for i, p_rem in enumerate(params["rem"]):
+        kind = pattern[i]
+        sl = state["rem"][i] if has_state else None
+        h, new_sl, a = apply_block(kind, p_rem, h, sl, ctx)
+        new_rem.append(new_sl)
+        aux = aux + a
+    if has_state:
+        new_state = {"stack": new_stack, "rem": new_rem,
+                     "lengths": state["lengths"]}
+    else:
+        new_state = None
+    return h, new_state, aux
+
+
+def _embed(params, cfg, tokens, enc_feats):
+    # annotate the table at its use site: the gather AND its scatter-add
+    # cotangent then stay vocab-sharded (otherwise the embedding gradient
+    # materializes replicated — observed 3.4 GB x11 copies at 67B scale)
+    tab = shard(params["embed"], "vocab", "embed")
+    h = tab[tokens]
+    h = shard(h, "batch", "seq", "embed")
+    if cfg.frontend == "vision_stub" and not _has_xattn(cfg) \
+            and enc_feats is not None:
+        # early fusion: patch embeddings occupy the first encoder_seq slots
+        n = enc_feats.shape[1]
+        h = jnp.concatenate([enc_feats.astype(h.dtype), h[:, n:]], axis=1)
+    return h
+
+
+def _has_xattn(cfg):
+    return L_XATTN in cfg.layer_pattern or DEC_XATTN in cfg.layer_pattern
+
+
+def _encode(params, cfg, enc_feats, ctx_proto):
+    """Whisper-style encoder over stub frame embeddings."""
+    h = enc_feats.astype(_dt(cfg))
+    epos = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    ectx = Ctx(cfg, "train", epos, jnp.full((h.shape[0],), h.shape[1],
+                                            jnp.int32), None, 0)
+    p = params["encoder"]
+
+    def body(carry, p_layer):
+        h, _ = carry
+        h, _, _ = apply_block(ENC_ATTN, p_layer, h, None, ectx)
+        return (h, jnp.zeros((), F32)), None
+
+    (h, _), _ = lax.scan(body, (h, jnp.zeros((), F32)), p["stack"]["s0"])
+    return L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+
+
+def _logits(params, cfg, h):
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        tab = shard(params["embed"], "vocab", "embed")
+        out = jnp.einsum("bsd,vd->bsv", h, tab)
+    else:
+        tab = shard(params["lm_head"], "embed", "vocab")
+        out = jnp.einsum("bsd,dv->bsv", h, tab)
+    return shard(out.astype(F32), "batch", "seq", "vocab")
+
+
+def train_forward(params, cfg: ModelConfig, tokens, enc_feats=None,
+                  q_chunk=1024, kv_chunk=1024, remat=False):
+    """tokens [B,S] -> (logits [B,S,V] f32, aux_loss scalar)."""
+    b, s = tokens.shape
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, enc_feats, None)
+    else:
+        enc_out = enc_feats
+    h = _embed(params, cfg, tokens, enc_feats)
+    qpos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    ctx = Ctx(cfg, "train", qpos, jnp.full((b,), s, jnp.int32),
+              enc_out, 0, kv_chunk, q_chunk)
+    h, _, aux = _run_layers(params, h, None, ctx, remat=remat)
+    return _logits(params, cfg, h), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, prompt_lens, cache_len: int,
+            enc_feats=None, q_chunk=1024, kv_chunk=1024):
+    """Process prompts, fill the decode state.
+
+    tokens [B,Sp] (right-padded), prompt_lens [B].
+    Returns (logits at each prompt's last token [B,V], state).
+    """
+    b, s = tokens.shape
+    state = init_decode_state(cfg, b, cache_len)
+    state["lengths"] = prompt_lens.astype(jnp.int32)
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, enc_feats, None)
+    else:
+        enc_out = enc_feats
+    h = _embed(params, cfg, tokens, enc_feats)
+    qpos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    ctx = Ctx(cfg, "prefill", qpos, prompt_lens.astype(jnp.int32),
+              enc_out, cache_len, kv_chunk, q_chunk)
+    h, state, _ = _run_layers(params, h, state, ctx)
+    logits = _logits(params, cfg, h)
+    last = jnp.clip(prompt_lens - 1, 0, s - 1)
+    return logits[jnp.arange(b), last], state
+
+
+def scatter_rows(state, sub, rows, sub_rows):
+    """Continuous batching: copy batch rows ``sub_rows`` of state ``sub``
+    into rows ``rows`` of ``state`` (stack leaves carry a leading period
+    dim; rem/lengths leaves are batch-major)."""
+    rows = jnp.asarray(rows)
+    sub_rows = jnp.asarray(sub_rows)
+    out = dict(state)
+    out["stack"] = jax.tree.map(
+        lambda c, n: c.at[:, rows].set(n[:, sub_rows]),
+        state["stack"], sub["stack"])
+    out["rem"] = [jax.tree.map(lambda c, n: c.at[rows].set(n[sub_rows]),
+                               cs, ns)
+                  for cs, ns in zip(state["rem"], sub["rem"])]
+    out["lengths"] = state["lengths"].at[rows].set(sub["lengths"][sub_rows])
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, kv_chunk=1024):
+    """One token per sequence.  tokens [B,1] -> (logits [B,V], new state)."""
+    b = tokens.shape[0]
+    h = params["embed"][tokens]
+    lengths = state["lengths"]
+    qpos = lengths[:, None]
+    ctx = Ctx(cfg, "decode", qpos, lengths, None,
+              0, kv_chunk, 1)
+    h, state, _ = _run_layers(params, h, state, ctx)
+    logits = _logits(params, cfg, h)[:, 0]
+    state["lengths"] = lengths + 1
+    return logits, state

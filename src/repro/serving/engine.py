@@ -1,0 +1,300 @@
+"""Continuous-batching serving engine with the paper's admission schedules.
+
+A fixed pool of ``batch`` sequence slots is decoded every step; finished
+sequences free their slot and the admission policy decides *when* queued
+requests may take one:
+
+  * ``greedy``  — fill any free slot immediately (vLLM/Orca-style
+                  continuous batching; the paper's baseline behavior).
+  * ``sls``     — fixed-interval micro-batches of M = B·F/S every F steps
+                  (FastDecode §4.2 cold-start rule).
+  * ``loadctl`` — Algorithm 1: earliest step under the W_lim peak bound.
+
+Backends: ``colocated`` (single-device decode, the vanilla baseline) or
+``hetero`` (the S-/R-worker pipeline of core.hetero).  Both expose the
+same row-replacement protocol so continuous batching works identically.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.core.hetero import (ColocatedEngine, HeteroPipelineEngine,
+                               batch_slice, per_layer_state)
+from repro.core import decompose as D
+from repro.core.schedule import LoadController, microbatch_size, w_prime_max
+from repro.models import model as M
+from repro.serving.request import Request, Status
+from repro.serving.sampler import sample
+
+
+def _pad_pow2(n: int, lo: int = 1) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass
+class StepRecord:
+    step: int
+    wall: float
+    active: int
+    resident_len: int
+    admitted: int
+
+
+class ServingEngine:
+    @classmethod
+    def from_plan(cls, params, cfg, *, seq_len: int, hw_s=None, hw_r=None,
+                  latency_slo: Optional[float] = None, max_batch: int = 4096,
+                  **kw):
+        """Size the engine with the paper's §4.3 performance model:
+        batch from eq. 7/8, R-worker count from eq. 11."""
+        from repro.core import perfmodel as P
+        hw_s = hw_s or P.TPU_V5E
+        hw_r = hw_r or P.TPU_V5E
+        plan = P.plan(cfg, hw_s, hw_r, seq_len=seq_len,
+                      latency_slo=latency_slo)
+        batch = int(min(max_batch, max(2, plan["batch"])))
+        workers = int(max(1, min(8, plan["workers"])))
+        if batch % 2:
+            batch += 1
+        eng = cls(params, cfg, batch=batch, cache_len=seq_len,
+                  backend=kw.pop("backend", "hetero"),
+                  num_r_workers=workers, **kw)
+        eng.plan = plan
+        return eng
+
+    def __init__(self, params, cfg: ModelConfig, *, batch: int,
+                 cache_len: int, backend: str = "colocated",
+                 admission: str = "greedy", target_len: int = 0,
+                 interval: int = 0, w_lim: Optional[float] = None,
+                 num_r_workers: int = 2, num_microbatches: int = 2,
+                 kv_chunk: int = 1024, quantized_kv: bool = False,
+                 seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.batch, self.cache_len = batch, cache_len
+        self.backend = backend
+        self.admission = admission
+        self.target_len = target_len            # S in the paper's schedule
+        self.interval = interval                # F
+        self.rng = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.step_idx = 0
+        self.records: List[StepRecord] = []
+        self.finished: List[Request] = []
+        self._last_tok = np.zeros((batch,), np.int32)
+
+        if backend == "hetero":
+            self.engine = HeteroPipelineEngine(
+                params, cfg, batch=batch, cache_len=cache_len,
+                num_r_workers=num_r_workers,
+                num_microbatches=num_microbatches, kv_chunk=kv_chunk,
+                quantized_kv=quantized_kv)
+            self.num_mb = num_microbatches
+            self.mb_size = batch // num_microbatches
+            for mb in range(self.num_mb):
+                self._hetero_init_empty(mb)
+        else:
+            self.engine = ColocatedEngine(params, cfg, batch=batch,
+                                          cache_len=cache_len)
+            self.engine.state = M.init_decode_state(cfg, batch, cache_len)
+            self.num_mb = 1
+            self.mb_size = batch
+
+        if admission == "loadctl":
+            s = max(1, target_len)
+            if w_lim is None:
+                f = max(1, interval)
+                w_lim = w_prime_max(batch, s, f)
+            self.load_ctl = LoadController(w_lim=w_lim, seq_len=s)
+        else:
+            self.load_ctl = None
+        self._prefill_cache: Dict[int, callable] = {}
+
+    # ------------------------------------------------------------------ #
+    def _hetero_init_empty(self, mb: int) -> None:
+        state = M.init_decode_state(self.cfg, self.mb_size, self.cache_len)
+        layer_states = per_layer_state(state, self.cfg)
+        for li, (kind, _) in enumerate(self.engine.layers):
+            r_st, s_st = D.split_block_state(kind, layer_states[li])
+            for w in self.engine.workers:
+                w.load_state(self.engine._lkey(mb, li),
+                             batch_slice(r_st, w.lo, w.hi))
+            self.engine.s_states[mb][li] = s_st
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.arrive_step = self.step_idx
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def resident_len(self) -> int:
+        tot = 0
+        for r in self.slots:
+            if r is not None:
+                tot += r.prompt_len + len(r.generated)
+        return tot
+
+    # ------------------------------------------------------------------ #
+    def _admit_count(self) -> int:
+        """How many queued requests may start THIS step, per policy."""
+        free = len(self._free_slots())
+        avail = min(free, len(self.queue))
+        if avail == 0:
+            return 0
+        if self.admission == "greedy":
+            return avail
+        if self.admission == "sls":
+            f = max(1, self.interval)
+            if self.step_idx % f != 0:
+                return 0
+            m = microbatch_size(self.batch, max(1, self.target_len), f)
+            return min(avail, m)
+        if self.admission == "loadctl":
+            m = 0
+            lc = self.load_ctl
+            f = max(1, self.interval)
+            mb = microbatch_size(self.batch, max(1, self.target_len), f)
+            while m < avail:
+                chunk = min(mb, avail - m)   # tail of the queue may be < M
+                if lc.earliest_step(self.step_idx, chunk) > self.step_idx:
+                    break
+                lc.add_microbatch(self.step_idx, chunk)
+                m += chunk
+            return m
+        raise ValueError(self.admission)
+
+    # ------------------------------------------------------------------ #
+    def _prefill_fn(self, n_pad: int):
+        if n_pad not in self._prefill_cache:
+            self._prefill_cache[n_pad] = jax.jit(partial(
+                M.prefill, cfg=self.cfg, cache_len=self.cache_len))
+        return self._prefill_cache[n_pad]
+
+    def _place(self, reqs: List[Request]) -> None:
+        rows = self._free_slots()[:len(reqs)]
+        max_p = max(r.prompt_len for r in reqs)
+        n_pad = _pad_pow2(len(reqs))
+        s_pad = _pad_pow2(max_p, 8)
+        toks = np.zeros((n_pad, s_pad), np.int32)
+        plens = np.zeros((n_pad,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :r.prompt_len] = r.prompt
+            plens[i] = r.prompt_len
+        last_logits, sub = self._prefill_fn(n_pad)(
+            self.params, tokens=jnp.asarray(toks),
+            prompt_lens=jnp.asarray(plens))
+        rows_np = np.asarray(rows)
+        sub_rows = np.arange(len(reqs))
+        if self.backend == "hetero":
+            self._hetero_scatter(rows_np, sub, sub_rows)
+        else:
+            self.engine.state = M.scatter_rows(self.engine.state, sub,
+                                               rows_np, sub_rows)
+        # the prefill's last-token logits ARE the first generation step:
+        # sample token 0 here (re-feeding the prompt tail through decode
+        # would write a duplicate KV entry and shift all positions)
+        self.rng, sub_rng = jax.random.split(self.rng)
+        tok0 = np.asarray(sample(last_logits, sub_rng))
+        for i, r in enumerate(reqs):
+            r.status = Status.RUNNING
+            r.start_step = self.step_idx
+            r.slot = rows[i]
+            t0 = int(tok0[i])
+            r.generated.append(t0)
+            self._last_tok[rows[i]] = t0
+            if r.is_finished(t0):
+                r.status = Status.DONE
+                r.finish_step = self.step_idx
+                self.finished.append(r)
+                self.slots[rows[i]] = None
+            else:
+                self.slots[rows[i]] = r
+
+    def _hetero_scatter(self, rows: np.ndarray, sub, sub_rows: np.ndarray):
+        eng = self.engine
+        layer_states = per_layer_state(sub, self.cfg)
+        for li, (kind, _) in enumerate(eng.layers):
+            r_st, s_st = D.split_block_state(kind, layer_states[li])
+            for gi, row in zip(sub_rows, rows):
+                mb, local = divmod(int(row), self.mb_size)
+                # find the worker owning `local`
+                for w in eng.workers:
+                    if w.lo <= local < w.hi:
+                        w.write_rows(eng._lkey(mb, li),
+                                     np.asarray([local - w.lo]),
+                                     jax.tree.map(lambda x: x[gi:gi + 1], r_st))
+                        break
+                if s_st:
+                    eng.s_states[mb][li] = jax.tree.map(
+                        lambda c, n: c.at[local].set(n[gi]),
+                        eng.s_states[mb][li], s_st)
+        # lengths
+        for gi, row in zip(sub_rows, rows):
+            mb, local = divmod(int(row), self.mb_size)
+            eng.mb_lengths[mb] = eng.mb_lengths[mb].at[local].set(
+                int(np.asarray(sub["lengths"])[gi]))
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> StepRecord:
+        t0 = time.perf_counter()
+        admitted = 0
+        n = self._admit_count()
+        if n > 0:
+            reqs = [self.queue.popleft() for _ in range(n)]
+            self._place(reqs)
+            admitted = n
+
+        toks = jnp.asarray(self._last_tok[:, None])
+        if self.backend == "hetero":
+            parts = self.engine.decode_step(
+                [toks[m * self.mb_size:(m + 1) * self.mb_size]
+                 for m in range(self.num_mb)])
+            logits = jnp.concatenate(parts, axis=0)
+        else:
+            # keep lengths frozen for inactive rows (avoid cache drift)
+            logits = self.engine.decode_step(toks)
+        self.rng, sub = jax.random.split(self.rng)
+        new_tok = np.asarray(sample(logits, sub))
+
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            tok = int(new_tok[i])
+            r.generated.append(tok)
+            self._last_tok[i] = tok
+            if r.is_finished(tok):
+                r.status = Status.DONE
+                r.finish_step = self.step_idx
+                self.finished.append(r)
+                self.slots[i] = None
+        wall = time.perf_counter() - t0
+        rec = StepRecord(self.step_idx, wall,
+                         sum(r is not None for r in self.slots),
+                         self.resident_len(), admitted)
+        self.records.append(rec)
+        self.step_idx += 1
+        return rec
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.queue or any(r is not None for r in self.slots)) \
+                and self.step_idx < max_steps:
+            self.step()
+        return self.finished
+
+    def close(self) -> None:
+        if self.backend == "hetero":
+            self.engine.close()

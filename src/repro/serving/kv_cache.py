@@ -1,0 +1,78 @@
+"""KV-cache utilities, including the int8-quantized variant (paper §5.2).
+
+The model's decode state already *is* the cache (repro.models.model).
+This module adds:
+  * size accounting helpers,
+  * conversion of a bf16/f32 attention block state into int8+scales,
+  * the parameter-free quantized R-Part op (decompose-compatible), which
+    quantizes incoming K/V on write and attends via the int8 kernel/ref.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def cache_bytes(st) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(st))
+
+
+def quantize_attn_state(st: Dict) -> Dict:
+    """{'k','v','pos',...} (bf16/f32 caches) -> int8 + per-(token,head) scales."""
+    kq, ks = ops.quantize_kv(st["k"])
+    vq, vs = ops.quantize_kv(st["v"])
+    out = {k: v for k, v in st.items() if k not in ("k", "v")}
+    out.update({"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs})
+    return out
+
+
+def dequantize_attn_state(st: Dict) -> Dict:
+    out = {k: v for k, v in st.items()
+           if k not in ("k_q", "k_s", "v_q", "v_s")}
+    out["k"] = ops.dequantize_kv(st["k_q"], st["k_s"])
+    out["v"] = ops.dequantize_kv(st["v_q"], st["v_s"])
+    return out
+
+
+def r_attention_int8(r_in: Dict, r_state: Dict, *, window: int,
+                     softcap: float, use_kernel: str = "ref"):
+    """Quantized R-Part attention: write the new (k,v) as int8, attend with
+    fp32 accumulation.  Drop-in for decompose.r_attention on an R-worker
+    that stores its cache quantized (4x less memory traffic)."""
+    q, k, v, lengths = r_in["q"], r_in["k"], r_in["v"], r_in["lengths"]
+    cache_n = r_state["k_q"].shape[1]
+    b = q.shape[0]
+    slot = (lengths % cache_n).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    k_new_q, k_new_s = ops.quantize_kv(k[:, 0])
+    v_new_q, v_new_s = ops.quantize_kv(v[:, 0])
+    new_state = dict(r_state)
+    new_state["k_q"] = r_state["k_q"].at[bidx, slot].set(k_new_q)
+    new_state["k_s"] = r_state["k_s"].at[bidx, slot].set(k_new_s)
+    new_state["v_q"] = r_state["v_q"].at[bidx, slot].set(v_new_q)
+    new_state["v_s"] = r_state["v_s"].at[bidx, slot].set(v_new_s)
+    new_state["pos"] = r_state["pos"].at[bidx, slot].set(lengths)
+    o = ops.decode_attention_int8(
+        q[:, 0], new_state["k_q"], new_state["k_s"], new_state["v_q"],
+        new_state["v_s"], new_state["pos"], lengths, window=window,
+        softcap=softcap, use_kernel=use_kernel)
+    return {"o": o[:, None]}, new_state
+
+
+def kv_bytes_per_seq(cfg: ModelConfig, cache_len: int,
+                     quantized: bool = False) -> int:
+    per_tok = 2 * cfg.num_kv_heads * cfg.head_dim
+    if quantized:
+        per_el = 1
+        scales = 2 * cfg.num_kv_heads * 4
+    else:
+        per_el = jnp.dtype(cfg.dtype).itemsize
+        scales = 0
+    n_attn = sum(1 for k in cfg.pattern if k in ("attn", "dec_xattn"))
+    return n_attn * cache_len * (per_tok * per_el + scales)

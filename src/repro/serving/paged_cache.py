@@ -1,0 +1,170 @@
+"""Paged KV-cache (the vLLM/PagedAttention mechanism of paper §2.2).
+
+The paper's baseline systems page the KV-cache to fight fragmentation;
+FastDecode sidesteps paging by moving KV off the S-worker entirely.  Both
+belong in a serving framework: R-workers with many variable-length
+resident sequences benefit from paging too (no 32k-slot allocation for a
+200-token chat), so this module provides a page-table cache that plugs
+into the same parameter-free R-Part interface.
+
+Layout:
+    pages       [num_pages, page, Hkv, Dh]   (one pool per layer)
+    page_pos    [num_pages, page] int32      absolute positions (-1 free)
+    tables      [B, max_pages_per_seq] int32 page ids (-1 unmapped)
+    lengths     [B]
+
+The attention read path gathers a sequence's pages into a contiguous view
+(pure jnp; a TPU kernel would stream page-by-page with the same math —
+the flash-decode kernel's (pos, mask) protocol already supports it since
+invalid slots are -1-masked).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+F32 = jnp.float32
+
+
+@dataclass
+class PagedKV:
+    pages_k: jnp.ndarray        # [P, page, Hkv, Dh]
+    pages_v: jnp.ndarray
+    page_pos: jnp.ndarray       # [P, page] int32
+    tables: jnp.ndarray         # [B, max_pages] int32
+    lengths: jnp.ndarray        # [B] int32
+    free: List[int]             # host-side free list (allocator state)
+
+    @property
+    def page_size(self) -> int:
+        return self.pages_k.shape[1]
+
+    @property
+    def max_pages(self) -> int:
+        return self.tables.shape[1]
+
+
+def init_paged(batch: int, num_pages: int, page: int, hkv: int, dh: int,
+               max_pages_per_seq: int, dtype=jnp.float32) -> PagedKV:
+    return PagedKV(
+        pages_k=jnp.zeros((num_pages, page, hkv, dh), dtype),
+        pages_v=jnp.zeros((num_pages, page, hkv, dh), dtype),
+        page_pos=jnp.full((num_pages, page), -1, jnp.int32),
+        tables=jnp.full((batch, max_pages_per_seq), -1, jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+        free=list(range(num_pages)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator (the part vLLM's scheduler owns)
+# ---------------------------------------------------------------------------
+def ensure_capacity(kv: PagedKV, row: int, new_len: int) -> PagedKV:
+    """Map enough pages for ``row`` to hold ``new_len`` tokens."""
+    need = -(-new_len // kv.page_size)
+    tables = np.array(kv.tables)  # writable copy
+    have = int((tables[row] >= 0).sum())
+    if need > kv.max_pages:
+        raise ValueError("sequence exceeds max_pages_per_seq")
+    free = list(kv.free)
+    for slot in range(have, need):
+        if not free:
+            raise MemoryError("paged KV pool exhausted")
+        tables[row, slot] = free.pop()
+    return replace(kv, tables=jnp.asarray(tables), free=free)
+
+
+def release_row(kv: PagedKV, row: int) -> PagedKV:
+    """Free all pages of a finished sequence (no fragmentation — the
+    paper's §2.2 point about paging)."""
+    tables = np.array(kv.tables)  # writable copy
+    ids = [int(p) for p in tables[row] if p >= 0]
+    tables[row] = -1
+    page_pos = kv.page_pos
+    if ids:
+        page_pos = page_pos.at[jnp.asarray(ids)].set(-1)
+    free = list(kv.free) + ids
+    lengths = kv.lengths.at[row].set(0)
+    return replace(kv, tables=jnp.asarray(tables), page_pos=page_pos,
+                   lengths=lengths, free=free)
+
+
+# ---------------------------------------------------------------------------
+# device-side ops (jit-friendly given a capacity-ensured table)
+# ---------------------------------------------------------------------------
+def write_tokens(kv: PagedKV, k_new, v_new) -> PagedKV:
+    """Append one token per row.  k_new/v_new [B, Hkv, Dh].
+    Caller must have run ensure_capacity(row, lengths+1)."""
+    b = k_new.shape[0]
+    page = kv.page_size
+    pos = kv.lengths                                    # [B]
+    slot_in_page = pos % page
+    page_idx = pos // page
+    page_ids = jnp.take_along_axis(kv.tables, page_idx[:, None],
+                                   axis=1)[:, 0]        # [B]
+    pages_k = kv.pages_k.at[page_ids, slot_in_page].set(k_new)
+    pages_v = kv.pages_v.at[page_ids, slot_in_page].set(v_new)
+    page_pos = kv.page_pos.at[page_ids, slot_in_page].set(pos)
+    return replace(kv, pages_k=pages_k, pages_v=pages_v, page_pos=page_pos,
+                   lengths=pos + 1)
+
+
+def write_prefill(kv: PagedKV, row: int, k_seq, v_seq) -> PagedKV:
+    """Write a whole prompt for one row.  k_seq/v_seq [S, Hkv, Dh]."""
+    s = k_seq.shape[0]
+    page = kv.page_size
+    n_pages = -(-s // page)
+    pad = n_pages * page - s
+    kp = jnp.pad(k_seq, ((0, pad), (0, 0), (0, 0))).reshape(
+        n_pages, page, *k_seq.shape[1:])
+    vp = jnp.pad(v_seq, ((0, pad), (0, 0), (0, 0))).reshape(
+        n_pages, page, *v_seq.shape[1:])
+    pos = jnp.where(jnp.arange(n_pages * page) < s,
+                    jnp.arange(n_pages * page), -1).reshape(n_pages, page)
+    ids = kv.tables[row, :n_pages]
+    return replace(
+        kv,
+        pages_k=kv.pages_k.at[ids].set(kp),
+        pages_v=kv.pages_v.at[ids].set(vp),
+        page_pos=kv.page_pos.at[ids].set(pos),
+        lengths=kv.lengths.at[row].set(s))
+
+
+def gather_views(kv: PagedKV):
+    """[B, max_pages*page, Hkv, Dh] contiguous views + positions."""
+    b = kv.tables.shape[0]
+    safe = jnp.maximum(kv.tables, 0)                    # [B, MP]
+    k = kv.pages_k[safe]                                # [B, MP, page, H, D]
+    v = kv.pages_v[safe]
+    pos = kv.page_pos[safe]
+    mapped = (kv.tables >= 0)[:, :, None]
+    pos = jnp.where(mapped, pos, -1)
+    mp, page = kv.tables.shape[1], kv.page_size
+    k = k.reshape(b, mp * page, *k.shape[3:])
+    v = v.reshape(b, mp * page, *v.shape[3:])
+    return k, v, pos.reshape(b, mp * page)
+
+
+def r_attention_paged(r_in, kv: PagedKV, *, window: int = 0,
+                      softcap: float = 0.0) -> Tuple[dict, PagedKV]:
+    """Drop-in parameter-free R-Part over the paged cache.  r_in as in
+    decompose.r_attention (q/k/v [B,1,...], lengths [B])."""
+    kv = write_tokens(kv, r_in["k"][:, 0], r_in["v"][:, 0])
+    kc, vc, pc = gather_views(kv)
+    o = L.flash_attention(r_in["q"], kc, vc, r_in["lengths"][:, None], pc,
+                          causal=True, window=window, softcap=softcap,
+                          kv_chunk=max(kc.shape[1], 1))
+    return {"o": o}, kv
+
+
+def pool_utilization(kv: PagedKV) -> float:
+    used = kv.pages_k.shape[0] - len(kv.free)
+    tokens = int(np.asarray(kv.lengths).sum())
+    cap = used * kv.page_size
+    return tokens / cap if cap else 1.0

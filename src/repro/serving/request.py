@@ -1,0 +1,44 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                       # [S_p] int32
+    max_new_tokens: int
+    eos_token: Optional[int] = None
+    temperature: float = 0.0                 # 0 = greedy
+    top_k: int = 0
+    status: Status = Status.QUEUED
+    generated: List[int] = field(default_factory=list)
+    # step indices for latency accounting
+    arrive_step: int = 0
+    start_step: int = -1
+    finish_step: int = -1
+    slot: int = -1                           # (mb, row) once scheduled
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def target_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    def is_finished(self, last_token: int) -> bool:
+        if self.eos_token is not None and last_token == self.eos_token:
+            return True
+        return len(self.generated) >= self.max_new_tokens

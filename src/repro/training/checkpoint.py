@@ -1,0 +1,52 @@
+"""Minimal sharded-free pytree checkpointing (npz + structure paths).
+
+Leaves are saved keyed by their tree path, so restore only needs a
+template pytree with the same structure (shape/dtype checked).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for kpath, leaf in flat:
+        arrays[_path_str(kpath)] = np.asarray(leaf)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load(path: str, like: Any) -> Any:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kpath, leaf in flat:
+        key = _path_str(kpath)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

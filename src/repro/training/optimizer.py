@@ -1,0 +1,72 @@
+"""AdamW + schedules, pure-jax pytree implementation (no optax dep)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """Returns (init_fn, update_fn).  Moments in fp32 regardless of param
+    dtype (bf16-safe)."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)) \
+            if grad_clip > 0 else 1.0
+
+        def upd(g, m, n, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            n = b2 * n + (1 - b2) * jnp.square(g)
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            nh = n / (1 - b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(nh) + eps)
+            if weight_decay > 0 and p.ndim >= 2:      # decay matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_fn(step) * delta
+            return newp.astype(p.dtype), m, n
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_n = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p
+               in zip(flat_g, flat_m, flat_n, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_n = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_n), gnorm
+
+    return init, update
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,27 @@
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_cfg(arch: str, **kw):
+    from repro.core.config import get_arch
+    defaults = dict(layers=3, d_model=64, vocab=97)
+    defaults.update(kw)
+    return get_arch(arch).reduced(**defaults)

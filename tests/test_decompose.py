@@ -1,0 +1,79 @@
+"""The S-Part/R-Part decomposition invariant: run_decomposed == the fused
+model block, for every mixer kind, in decode mode (paper eq. 1-4 split)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import decompose as D
+from repro.core.config import ASSIGNED_ARCHS
+from repro.core.hetero import per_layer_params, per_layer_state
+from repro.models import model as M
+
+B, S = 2, 10
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen3-8b", "grok-1-314b",
+                                  "recurrentgemma-2b", "mamba2-2.7b",
+                                  "llama-3.2-vision-90b", "whisper-medium"])
+def test_decomposed_equals_fused_block(arch, rng, key):
+    cfg = tiny_cfg(arch)
+    params = M.init_params(key, cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    enc = None
+    if cfg.frontend != "none":
+        enc = jnp.asarray(rng.standard_normal(
+            (B, cfg.encoder_seq, cfg.encoder_d_model)), jnp.float32)
+    plens = jnp.full((B,), S, jnp.int32)
+    _, state = M.prefill(params, cfg, tokens, plens, cache_len=S + 4,
+                         enc_feats=enc, q_chunk=8, kv_chunk=8)
+    layers = per_layer_params(params, cfg)
+    lstates = per_layer_state(state, cfg)
+    h = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)),
+                    jnp.dtype(cfg.dtype)) * 0.1
+    lengths = state["lengths"]
+    ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths, None, 0)
+    for li, (kind, p) in enumerate(layers):
+        h_fused, st_fused, _ = M.apply_block(kind, p, h, lstates[li], ctx)
+        h_dec, st_dec = D.run_decomposed(kind, p, h, lstates[li], ctx,
+                                         kv_chunk=8)
+        np.testing.assert_allclose(np.asarray(h_fused, np.float32),
+                                   np.asarray(h_dec, np.float32),
+                                   atol=2e-4, err_msg=f"layer {li} {kind}")
+        for (ka, va), (kb, vb) in zip(
+                sorted(jax.tree_util.tree_flatten_with_path(st_fused)[0],
+                       key=str),
+                sorted(jax.tree_util.tree_flatten_with_path(st_dec)[0],
+                       key=str)):
+            np.testing.assert_allclose(np.asarray(va, np.float32),
+                                       np.asarray(vb, np.float32),
+                                       atol=2e-4, err_msg=f"{li} {ka}")
+        h = h_fused
+
+
+def test_r_part_is_parameter_free():
+    """Structural check: the R-Part ops close over NO model parameters —
+    the paper's defining property of the decomposition."""
+    import inspect
+    for fn in (D.r_attention, D.r_cross_attention, D.r_rglru, D.r_ssd):
+        sig = inspect.signature(fn)
+        assert "p" not in sig.parameters and "params" not in sig.parameters
+
+
+def test_quantized_r_attention_close_to_fp(rng):
+    """The int8 R-worker variant (serving/kv_cache.py) approximates the
+    full-precision R-Part."""
+    from repro.serving.kv_cache import quantize_attn_state, r_attention_int8
+    B, S, Hq, Hkv, Dh = 2, 24, 4, 2, 16
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    st = {"k": mk(B, S, Hkv, Dh), "v": mk(B, S, Hkv, Dh),
+          "pos": jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)}
+    lengths = jnp.asarray([10, 20], jnp.int32)
+    r_in = {"q": mk(B, 1, Hq, Dh), "k": mk(B, 1, Hkv, Dh),
+            "v": mk(B, 1, Hkv, Dh), "lengths": lengths}
+    out_fp, _ = D.r_attention(r_in, st, window=0, softcap=0.0)
+    qst = quantize_attn_state(st)
+    out_q, qst2 = r_attention_int8(r_in, qst, window=0, softcap=0.0)
+    assert float(jnp.abs(out_fp["o"] - out_q["o"]).max()) < 0.05
+    assert qst2["k_q"].dtype == jnp.int8

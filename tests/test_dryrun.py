@@ -1,0 +1,81 @@
+"""Multi-pod dry-run integration: a fresh subprocess (so the 512 placeholder
+devices can initialize) lowers+compiles one representative combo per mesh
+and checks the roofline artifacts appear.  The full 40-pair campaign is run
+by benchmarks/ (results in benchmarks/results/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(ROOT, "src")
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_fastdecode():
+    p = _run(["--arch", "granite-3-8b", "--shape", "decode_32k",
+              "--mesh", "single", "--strategy", "fastdecode"])
+    assert "[OK ]" in p.stdout, p.stdout + p.stderr
+    path = os.path.join(ROOT, "benchmarks", "results", "dryrun",
+                        "granite-3-8b__decode_32k__single__fastdecode.json")
+    rec = json.load(open(path))
+    assert rec["ok"] and rec["devices"] == 256
+    assert rec["flops"] > 0
+    assert rec["collectives"]["wire_bytes"] > 0
+    # the headline: activation-sized collectives (<100 MB/step vs GB)
+    assert rec["collectives"]["wire_bytes"] < 100e6
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod():
+    p = _run(["--arch", "recurrentgemma-2b", "--shape", "decode_32k",
+              "--mesh", "multi", "--strategy", "fastdecode"])
+    assert "[OK ]" in p.stdout, p.stdout + p.stderr
+    path = os.path.join(ROOT, "benchmarks", "results", "dryrun",
+                        "recurrentgemma-2b__decode_32k__multi__fastdecode.json")
+    rec = json.load(open(path))
+    assert rec["ok"] and rec["devices"] == 512
+
+
+def test_input_specs_cover_all_modes():
+    sys.path.insert(0, SRC)
+    from repro.core.config import ASSIGNED_ARCHS, SHAPES, SKIPS, get_arch
+    from repro.launch.dryrun import input_specs, variant_for_shape
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            if (arch, shape) in SKIPS:
+                continue
+            cfg = variant_for_shape(get_arch(arch), shape)
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            if shape == "long_500k":
+                # sub-quadratic requirement: window, ssm or local attention
+                assert (cfg.window > 0) or ("attn" not in cfg.pattern)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[16]{0} all-reduce(%y), to_apply=%add
+  %aa = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all(%a, %b)
+  %cp = u32[4]{0} collective-permute(%z)
+"""
+    got = collective_bytes(hlo)
+    assert got["counts"]["all-gather"] == 1
+    assert got["bytes_by_op"]["all-gather"] == 8 * 128 * 2
+    assert got["bytes_by_op"]["all-reduce"] == 64
+    assert got["bytes_by_op"]["all-to-all"] == 32
+    assert got["bytes_by_op"]["collective-permute"] == 16
+    assert got["wire_bytes"] == 2048 + 2 * 64 + 32 + 16

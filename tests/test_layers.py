@@ -1,0 +1,88 @@
+"""Layer-level unit tests: chunked flash attention vs naive, masks,
+GQA grouping, norms, rope, convs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def _mk(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=9),
+    dict(causal=True, window=9, sink=2),
+    dict(causal=True, softcap=5.0),
+])
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (4, 1)])
+def test_flash_matches_naive(rng, kw, hq, hkv):
+    B, Sq, Sk, D = 2, 37, 53, 16
+    q, k, v = _mk(rng, B, Sq, hq, D), _mk(rng, B, Sk, hkv, D), _mk(rng, B, Sk, hkv, D)
+    qpos = jnp.broadcast_to(jnp.arange(16, 16 + Sq), (B, Sq))
+    kpos = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    kpos = kpos.at[0, 40:].set(-1)  # invalid cache slots
+    o1 = L.flash_attention(q, k, v, qpos, kpos, q_chunk=8, kv_chunk=8, **kw)
+    o2 = L.naive_attention(q, k, v, qpos, kpos, **kw)
+    np.testing.assert_allclose(o1, o2, atol=3e-5)
+
+
+def test_flash_fully_masked_rows_are_zero(rng):
+    B, Sq, Sk, H, D = 1, 4, 8, 2, 8
+    q, k, v = _mk(rng, B, Sq, H, D), _mk(rng, B, Sk, H, D), _mk(rng, B, Sk, H, D)
+    qpos = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    kpos = jnp.full((B, Sk), -1)  # nothing valid
+    o = L.flash_attention(q, k, v, qpos, kpos, kv_chunk=4)
+    np.testing.assert_allclose(o, 0.0, atol=1e-7)
+
+
+def test_flash_gqa_equals_repeated_kv(rng):
+    """GQA must equal MHA with kv heads repeated."""
+    B, S, Hq, Hkv, D = 2, 16, 4, 2, 8
+    q = _mk(rng, B, S, Hq, D)
+    k, v = _mk(rng, B, S, Hkv, D), _mk(rng, B, S, Hkv, D)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    o1 = L.flash_attention(q, k, v, pos, pos, kv_chunk=8)
+    krep = jnp.repeat(k, Hq // Hkv, axis=2)
+    vrep = jnp.repeat(v, Hq // Hkv, axis=2)
+    o2 = L.flash_attention(q, krep, vrep, pos, pos, kv_chunk=8)
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity(rng):
+    x = _mk(rng, 1, 5, 2, 16)
+    pos = jnp.broadcast_to(jnp.arange(5), (1, 5))
+    y = L.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # q.k depends only on relative distance
+    q, k = _mk(rng, 1, 1, 1, 16), _mk(rng, 1, 1, 1, 16)
+    def dot_at(pq, pk):
+        qq = L.rope(q, jnp.array([[pq]]), 1e4)
+        kk = L.rope(k, jnp.array([[pk]]), 1e4)
+        return float(jnp.sum(qq * kk))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_rms_norm_unit_scale(rng):
+    x = _mk(rng, 4, 32) * 7.0
+    y = L.rms_norm(x, jnp.zeros(32))
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_causal_conv_streaming(rng):
+    B, S, D, CW = 2, 19, 12, 4
+    w = _mk(rng, CW, D)
+    x = _mk(rng, B, S, D)
+    yf, _ = L.causal_conv1d(w, x)
+    st = jnp.zeros((B, CW - 1, D))
+    ys = []
+    for i in range(S):
+        yi, st = L.causal_conv1d(w, x[:, i:i + 1], st)
+        ys.append(yi)
+    np.testing.assert_allclose(yf, jnp.concatenate(ys, 1), atol=1e-5)

@@ -1,0 +1,100 @@
+"""Paged KV-cache: allocator invariants + attention equivalence vs the
+linear cache, including hypothesis-driven alloc/free fuzzing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose as D
+from repro.serving import paged_cache as PC
+
+B, HKV, HQ, DH, PAGE = 3, 2, 4, 16, 4
+
+
+def _mk(rng, *s):
+    return jnp.asarray(rng.standard_normal(s), jnp.float32)
+
+
+def _fresh(num_pages=24, max_pages=6):
+    return PC.init_paged(B, num_pages, PAGE, HKV, DH, max_pages)
+
+
+def test_prefill_then_decode_matches_linear(rng):
+    kv = _fresh()
+    S = 10
+    lin = {"k": jnp.zeros((B, 32, HKV, DH)), "v": jnp.zeros((B, 32, HKV, DH)),
+           "pos": jnp.full((B, 32), -1, jnp.int32)}
+    ks, vs = _mk(rng, B, S, HKV, DH), _mk(rng, B, S, HKV, DH)
+    for row in range(B):
+        kv = PC.ensure_capacity(kv, row, S)
+        kv = PC.write_prefill(kv, row, ks[row], vs[row])
+    lin["k"] = lin["k"].at[:, :S].set(ks)
+    lin["v"] = lin["v"].at[:, :S].set(vs)
+    lin["pos"] = lin["pos"].at[:, :S].set(jnp.arange(S))
+    lengths = jnp.full((B,), S, jnp.int32)
+
+    for step in range(5):
+        r_in = {"q": _mk(rng, B, 1, HQ, DH), "k": _mk(rng, B, 1, HKV, DH),
+                "v": _mk(rng, B, 1, HKV, DH), "lengths": lengths}
+        for row in range(B):
+            kv = PC.ensure_capacity(kv, row, S + step + 1)
+        out_p, kv = PC.r_attention_paged(r_in, kv)
+        out_l, lin = D.r_attention(r_in, lin, window=0, softcap=0.0)
+        np.testing.assert_allclose(out_p["o"], out_l["o"], atol=2e-5)
+        lengths = lengths + 1
+    assert np.array_equal(np.asarray(kv.lengths), np.asarray(lengths))
+
+
+def test_release_returns_pages():
+    kv = _fresh(num_pages=8, max_pages=4)
+    kv = PC.ensure_capacity(kv, 0, 3 * PAGE)
+    assert len(kv.free) == 5
+    kv = PC.release_row(kv, 0)
+    assert len(kv.free) == 8
+    assert int(np.asarray(kv.tables)[0].max()) == -1
+
+
+def test_pool_exhaustion_raises():
+    kv = _fresh(num_pages=2, max_pages=6)
+    kv = PC.ensure_capacity(kv, 0, 2 * PAGE)
+    with pytest.raises(MemoryError):
+        PC.ensure_capacity(kv, 1, PAGE)
+
+
+def test_no_cross_row_aliasing(rng):
+    """Two rows must never share a page."""
+    kv = _fresh()
+    kv = PC.ensure_capacity(kv, 0, 2 * PAGE)
+    kv = PC.ensure_capacity(kv, 1, 2 * PAGE)
+    t = np.asarray(kv.tables)
+    used0 = set(t[0][t[0] >= 0].tolist())
+    used1 = set(t[1][t[1] >= 0].tolist())
+    assert not (used0 & used1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, B - 1), st.booleans()),
+                min_size=1, max_size=25))
+def test_allocator_fuzz(ops):
+    """Random grow/release sequences preserve: free+used == total,
+    no double-mapped page, utilization <= 1."""
+    kv = _fresh(num_pages=16, max_pages=4)
+    lens = [0] * B
+    for row, grow in ops:
+        if grow and lens[row] < 4 * PAGE:
+            lens[row] += PAGE
+            try:
+                kv = PC.ensure_capacity(kv, row, lens[row])
+                kv = kv.__class__(**{**kv.__dict__,
+                                     "lengths": kv.lengths.at[row].set(lens[row])})
+            except MemoryError:
+                lens[row] -= PAGE
+        elif not grow and lens[row]:
+            kv = PC.release_row(kv, row)
+            lens[row] = 0
+        t = np.asarray(kv.tables)
+        mapped = t[t >= 0].tolist()
+        assert len(mapped) == len(set(mapped))          # no aliasing
+        assert len(mapped) + len(kv.free) == 16         # conservation
+    assert PC.pool_utilization(kv) <= 1.0 + 1e-9

@@ -1,0 +1,93 @@
+"""Performance model (§4.3 eq. 7-11) consistency tests, including the
+paper's own Table 2/3 magnitudes."""
+import math
+
+import pytest
+
+from repro.core import perfmodel as P
+from repro.core.config import get_arch
+
+
+@pytest.fixture(scope="module")
+def llama7b():
+    return get_arch("llama-7b")
+
+
+def test_t_of_b_monotone_and_saturating(llama7b):
+    prev = 0.0
+    for b in [1, 8, 64, 512, 4096]:
+        t = P.t_of_b(llama7b, P.GPU_A10, b)
+        assert t >= prev
+        prev = t
+    # small-batch regime is weight-bandwidth-bound: latency flat
+    assert P.t_of_b(llama7b, P.GPU_A10, 1) == P.t_of_b(llama7b, P.GPU_A10, 2)
+
+
+def test_e_of_b_increases_then_flattens(llama7b):
+    e1 = P.e_of_b(llama7b, P.GPU_A10, 1)
+    e64 = P.e_of_b(llama7b, P.GPU_A10, 64)
+    e4k = P.e_of_b(llama7b, P.GPU_A10, 4096)
+    e8k = P.e_of_b(llama7b, P.GPU_A10, 8192)
+    assert e64 > 10 * e1
+    assert abs(e8k - e4k) / e4k < 0.01     # saturated
+
+
+def test_eq7_slo_binds(llama7b):
+    b_loose = P.max_batch_for_slo(llama7b, P.GPU_A10, 1024, latency_slo=1e9)
+    b_tight = P.max_batch_for_slo(llama7b, P.GPU_A10, 1024, latency_slo=60.0)
+    assert b_loose >= b_tight >= 1
+
+
+def test_eq11_worker_count_scales(llama7b):
+    p1 = P.optimal_workers(llama7b, P.GPU_A10, P.CPU_EPYC, 1024, 512)
+    p2 = P.optimal_workers(llama7b, P.GPU_A10, P.CPU_EPYC, 1024, 1024)
+    assert p2 > p1          # longer sequences need more R-workers (paper)
+    # eq. 11 equivalence: B*S*R/(2T) == 0.5*S*R*E(B)
+    b, s = 512, 1024
+    lhs = P.optimal_workers(llama7b, P.GPU_A10, P.CPU_EPYC, b, s)
+    rhs = 0.5 * s * P.r_per_token(llama7b, P.CPU_EPYC) * \
+        P.e_of_b(llama7b, P.GPU_A10, b)
+    assert abs(lhs - rhs) / rhs < 1e-9
+
+
+def test_larger_h_needs_fewer_workers():
+    """§4.3 closing argument: P ~ 1/h."""
+    l7, l13 = get_arch("llama-7b"), get_arch("llama-13b")
+    p7 = P.optimal_workers(l7, P.GPU_A10, P.CPU_EPYC, 256, 1024)
+    p13 = P.optimal_workers(l13, P.GPU_A10, P.CPU_EPYC, 256, 1024)
+    assert p13 < p7
+
+
+def test_table3_intermediate_vector_size(llama7b):
+    """The paper's Table 3: Q,K,V,O intermediate vectors of a 7b model are
+    32.7 KB per token per block — our formula must reproduce it."""
+    assert P.activation_bytes_per_token_per_block(llama7b) == 32768
+
+
+def test_table3_comm_latency_magnitude(llama7b):
+    """Paper: ~1.04 ms to ship batch-1024 intermediate vectors over PCIe
+    (32 GB/s) per block -> ours within 10%."""
+    lat = 1024 * P.activation_bytes_per_token_per_block(llama7b) / 32e9
+    assert abs(lat - 1.04e-3) / 1.04e-3 < 0.1
+
+
+def test_memory_constraint_eq9(llama7b):
+    p = P.min_workers_memory(llama7b, b=1024, seq_len=1024,
+                             worker_mem=256e9)
+    assert p >= 1
+    # paper: memory is "barely the actual limitation"
+    assert p <= 4
+
+
+def test_plan_end_to_end(llama7b):
+    plan = P.plan(llama7b, P.GPU_A10, P.CPU_EPYC, seq_len=1024)
+    assert plan["batch"] >= 128
+    assert 1 <= plan["workers"] <= 64
+    assert plan["tokens_per_s"] > 100
+
+
+def test_tpu_adaptation_plan(llama7b):
+    """Same model on the v5e target: the pod's per-chip roofline."""
+    plan = P.plan(llama7b, P.TPU_V5E, P.TPU_V5E, seq_len=1024)
+    assert plan["batch"] >= 64
+    assert plan["tokens_per_s"] > 1000

@@ -1,0 +1,98 @@
+"""Sharding-rule unit tests (mesh mocked where >1 device is needed)."""
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import tiny_cfg
+from repro.core.config import get_arch
+from repro.distributed import sharding as SH
+from repro.distributed.api import logical_to_spec
+
+MESH = SimpleNamespace(shape={"data": 16, "model": 16})
+MESH3 = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisibility_fallback():
+    rules = {"kv_heads": "model", "batch": ("pod", "data")}
+    # 8 kv heads cannot shard over model=16 -> replicated
+    spec = logical_to_spec(MESH, rules, (128, 32768, 8, 128),
+                           ("batch", None, "kv_heads", None))
+    assert spec == P("data", None, None, None)
+    # 32 kv heads can
+    spec = logical_to_spec(MESH, rules, (128, 32768, 32, 128),
+                           ("batch", None, "kv_heads", None))
+    assert spec == P("data", None, "model", None)
+
+
+def test_multi_axis_assignment():
+    rules = {"ff": ("model", "pod", "data")}
+    spec = logical_to_spec(MESH3, rules, (6144, 32768), (None, "ff"))
+    assert spec == P(None, ("model", "pod", "data"))
+    # partially divisible: model(16) then pod(2) fit 256, data(16) does not
+    spec = logical_to_spec(MESH3, rules, (6144, 256), (None, "ff"))
+    assert spec == P(None, ("model", "pod"))
+
+
+def test_axis_used_once():
+    rules = {"batch": "data", "expert": "data"}
+    spec = logical_to_spec(MESH, rules, (16, 16), ("batch", "expert"))
+    assert spec[0] == "data" and spec[1] is None
+
+
+def test_missing_mesh_axis_skipped():
+    rules = {"batch": ("pod", "data")}
+    spec = logical_to_spec(MESH, rules, (32,), ("batch",))
+    assert spec == P("data")
+
+
+def test_fastdecode_vs_baseline_cache_rules():
+    fd = SH.make_rules("fastdecode", "decode")
+    bl = SH.make_rules("baseline", "decode")
+    assert fd["cache"] == "model" and fd["kv_heads"] is None
+    assert bl["cache"] is None and bl["kv_heads"] == "model"
+
+
+def test_weights_stay_decode_rules():
+    r = SH.make_rules("fastdecode", "decode", zero3=True)
+    assert r["batch"] is None                 # activations replicated/psum
+    assert r["embed"] == ("pod", "data")      # weights fully distributed
+    assert r["kv_batch"] == ("pod", "data")   # KV still batch-sharded
+
+
+def test_train_rules_use_sp_and_wide_weight_sharding():
+    r = SH.make_rules("fastdecode", "train", zero3=True, train=True)
+    assert r["seq"] == "model"                # sequence parallelism
+    assert r["ff"] == ("model", "pod", "data")
+    assert r["layer"] is None                 # scan dim never sharded
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "grok-1-314b",
+                                  "mamba2-2.7b", "whisper-medium"])
+def test_param_sharding_trees_build(arch):
+    """Every arch's param tree gets a sharding per leaf on a real mesh."""
+    cfg = get_arch(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = SH.make_rules("fastdecode", "decode")
+    tree = SH.param_shardings(cfg, mesh, rules)
+    shapes = SH.param_shapes(cfg)
+    assert jax.tree_util.tree_structure(tree) == \
+        jax.tree_util.tree_structure(shapes)
+
+
+def test_state_sharding_kv_layout():
+    cfg = get_arch("granite-3-8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = SH.make_rules("fastdecode", "decode")
+    tree = SH.state_shardings(cfg, mesh, rules, batch=8, cache_len=64)
+    assert jax.tree_util.tree_structure(tree) == jax.tree_util.tree_structure(
+        SH.state_shapes(cfg, 8, 64))
+
+
+def test_auto_zero3_thresholds():
+    mesh = SimpleNamespace(shape={"data": 16, "model": 16}, size=256)
+    assert SH.auto_zero3(get_arch("grok-1-314b"), mesh)
+    assert SH.auto_zero3(get_arch("deepseek-67b"), mesh)
+    assert not SH.auto_zero3(get_arch("granite-3-8b"), mesh)
+    assert not SH.auto_zero3(get_arch("mamba2-2.7b"), mesh)

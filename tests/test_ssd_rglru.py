@@ -1,0 +1,84 @@
+"""SSM / recurrent mixer equivalences (the R-Part of non-attention archs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _mk(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("s", [5, 16, 23])
+def test_ssd_chunked_matches_naive(rng, chunk, s):
+    Bb, H, P, N = 2, 3, 8, 4
+    x, dt = _mk(rng, Bb, s, H, P), jax.nn.softplus(_mk(rng, Bb, s, H))
+    A_log, B, C, D = _mk(rng, H), _mk(rng, Bb, s, N), _mk(rng, Bb, s, N), _mk(rng, H)
+    h0 = _mk(rng, Bb, H, P, N)
+    y1, h1 = L.ssd_chunked(x, dt, A_log, B, C, D, chunk=chunk, h0=h0,
+                           return_state=True)
+    y2, h2 = L.ssd_naive(x, dt, A_log, B, C, D, h0=h0)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(h1, h2, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_step_continues_chunked(rng):
+    """Running chunked over s tokens then one step == chunked over s+1."""
+    Bb, s, H, P, N = 1, 12, 2, 4, 4
+    x, dt = _mk(rng, Bb, s + 1, H, P), jax.nn.softplus(_mk(rng, Bb, s + 1, H))
+    A_log, B, C, D = _mk(rng, H), _mk(rng, Bb, s + 1, N), _mk(rng, Bb, s + 1, N), _mk(rng, H)
+    y_all, h_all = L.ssd_chunked(x, dt, A_log, B, C, D, chunk=4,
+                                 return_state=True)
+    _, h_s = L.ssd_chunked(x[:, :s], dt[:, :s], A_log, B[:, :s], C[:, :s],
+                           D, chunk=4, return_state=True)
+    y_step, h_step = L.ssd_step(x[:, s], dt[:, s], A_log, B[:, s], C[:, s],
+                                D, h_s)
+    np.testing.assert_allclose(y_step, y_all[:, s], rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(h_step, h_all, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(2, 8))
+def test_ssd_decay_bounded(s, n):
+    """Property: with bounded inputs the SSD state norm stays bounded
+    (A is negative => contraction)."""
+    rng = np.random.default_rng(s * 31 + n)
+    Bb, H, P = 1, 2, 4
+    x = jnp.asarray(rng.standard_normal((Bb, s, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((Bb, s, H)), jnp.float32))
+    A_log = jnp.zeros(H)  # A = -1
+    B = jnp.asarray(rng.standard_normal((Bb, s, n)), jnp.float32) * 0.1
+    C = jnp.asarray(rng.standard_normal((Bb, s, n)), jnp.float32)
+    D = jnp.zeros(H)
+    _, h = L.ssd_chunked(x, dt, A_log, B, C, D, chunk=8, return_state=True)
+    assert np.isfinite(np.asarray(h)).all()
+    assert float(jnp.abs(h).max()) < 100.0
+
+
+def test_rglru_scan_matches_step_loop(rng):
+    Bb, S, W = 2, 17, 12
+    p = {"w_a": _mk(rng, W, W, scale=0.3), "b_a": _mk(rng, W),
+         "w_x": _mk(rng, W, W, scale=0.3), "b_x": _mk(rng, W),
+         "lam": _mk(rng, W)}
+    xc = _mk(rng, Bb, S, W)
+    hs = L.rglru_scan(p, xc)
+    h = jnp.zeros((Bb, W))
+    outs = []
+    for i in range(S):
+        o, h = L.rglru_step(p, xc[:, i], h)
+        outs.append(o)
+    np.testing.assert_allclose(hs, jnp.stack(outs, 1), rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_stability(rng):
+    """|a_t| < 1 always: long sequences cannot blow up."""
+    Bb, S, W = 1, 200, 8
+    p = {"w_a": _mk(rng, W, W), "b_a": _mk(rng, W),
+         "w_x": _mk(rng, W, W), "b_x": _mk(rng, W), "lam": _mk(rng, W)}
+    xc = _mk(rng, Bb, S, W)
+    hs = L.rglru_scan(p, xc)
+    assert np.isfinite(np.asarray(hs)).all()

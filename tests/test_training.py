@@ -1,0 +1,93 @@
+"""Training substrate: optimizer behavior, loss decrease, checkpointing,
+remat equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.models import model as M
+from repro.training import checkpoint as CK
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import adamw, cosine_warmup
+from repro.training.train import loss_fn, make_train_step
+
+
+def test_loss_decreases(key):
+    cfg = tiny_cfg("granite-3-8b", layers=2, d_model=64, vocab=128)
+    params = M.init_params(key, cfg)
+    data = SyntheticLM(DataConfig(128, 32, 8, seed=0)).batches()
+    init_state, train_step = make_train_step(cfg, peak_lr=5e-3, warmup=10,
+                                             total_steps=300, q_chunk=8,
+                                             kv_chunk=8)
+    state = init_state(params)
+    step = jax.jit(train_step)
+    losses = []
+    for _ in range(100):
+        b = next(data)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.15
+
+
+def test_remat_matches_no_remat(key, rng):
+    cfg = tiny_cfg("granite-3-8b", layers=3, d_model=64)
+    params = M.init_params(key, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16))),
+             "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16))),
+             "mask": jnp.ones((2, 16), jnp.float32)}
+    (l1, _), g1 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch, q_chunk=8, kv_chunk=8, remat=False)
+    (l2, _), g2 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch, q_chunk=8, kv_chunk=8, remat=True)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_adamw_grad_clip():
+    init, update = adamw(1e-2, grad_clip=1.0, weight_decay=0.0)
+    p = {"w": jnp.ones((4, 4))}
+    st = init(p)
+    g = {"w": jnp.full((4, 4), 100.0)}
+    newp, st, gnorm = update(g, st, p)
+    assert float(gnorm) == pytest.approx(400.0)
+    # effective step bounded by lr after clipping+normalization
+    assert float(jnp.abs(newp["w"] - p["w"]).max()) < 0.05
+
+
+def test_cosine_warmup_shape():
+    fn = cosine_warmup(1.0, warmup=10, total=100)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, rel=0.05)
+    assert float(fn(jnp.asarray(100))) == pytest.approx(0.1, rel=0.05)
+
+
+def test_checkpoint_roundtrip(key, tmp_path):
+    cfg = tiny_cfg("grok-1-314b")   # nested stacks + moe params
+    params = M.init_params(key, cfg)
+    path = str(tmp_path / "ck.npz")
+    CK.save(path, params)
+    p2 = CK.load(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(key, tmp_path):
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    path = str(tmp_path / "ck.npz")
+    CK.save(path, params)
+    cfg2 = tiny_cfg("granite-3-8b", d_model=128)
+    params2 = M.init_params(key, cfg2)
+    with pytest.raises((ValueError, KeyError)):
+        CK.load(path, params2)
+
+
+def test_synthetic_data_deterministic():
+    a = next(SyntheticLM(DataConfig(64, 16, 2, seed=7)).batches())
+    b = next(SyntheticLM(DataConfig(64, 16, 2, seed=7)).batches())
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["targets"][:, :-1])
