@@ -1,0 +1,92 @@
+"""Paged vs dense R-worker KV: resident memory and decode throughput.
+
+The dense hetero path gives every admitted row a ``cache_len`` KV slab,
+so R-side resident KV is ``batch * cache_len`` tokens no matter how short
+the sequences are.  With ``paged_kv=True`` a row holds only
+``ceil(len/page)`` pages, so resident KV tracks the actual token count —
+the capacity effect that lets the same worker memory admit more ragged
+sequences (perfmodel eq. 9 with the paged_round_up factor instead of the
+worst-case slab).
+
+Reports, for a ragged batch at several fill ratios:
+  * dense resident KV bytes (batch * cache_len, what the slab pins)
+  * paged resident KV bytes (pages actually allocated)
+  * actual token bytes (the lower bound; paged/actual gap = page rounding)
+  * decode step latency for both paths (same model, same workers)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, csv_row
+from repro.core.hetero import HeteroPipelineEngine
+from repro.serving.kv_cache import kv_bytes_per_seq, paged_kv_bytes_per_seq
+
+
+def _mk_engine(params, cfg, batch, cache_len, paged, page):
+    return HeteroPipelineEngine(
+        params, cfg, batch=batch, cache_len=cache_len, num_r_workers=2,
+        num_microbatches=2, kv_chunk=max(cache_len, 8), paged_kv=paged,
+        page_size=page)
+
+
+def _steps_per_s(eng, batch, steps=10):
+    h = batch // 2
+    toks = [jnp.ones((h, 1), jnp.int32)] * 2
+    eng.decode_step(toks)                       # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        out = eng.decode_step(toks)
+    jax.block_until_ready(out[0])
+    return steps / (time.perf_counter() - t0)
+
+
+def run(print_fn=print):
+    cfg, params = bench_model(layers=2, d_model=128)
+    batch, cache_len, page = 8, 256, 16
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (batch, cache_len)))
+
+    print_fn("name,us_per_call,derived")
+    dense_bytes = batch * kv_bytes_per_seq(cfg, cache_len)
+    for fill in (0.125, 0.5, 1.0):
+        # ragged prompts averaging fill*cache_len (leave decode headroom)
+        mean = max(2, int(fill * cache_len) - 16)
+        plens = np.clip(rng.integers(mean // 2, mean + mean // 2 + 1,
+                                     (batch,)), 2, cache_len - 16)
+        plens_j = jnp.asarray(plens, jnp.int32)
+        actual_bytes = sum(paged_kv_bytes_per_seq(cfg, int(p), page=1)
+                           for p in plens)
+
+        stats = {}
+        for paged in (False, True):
+            eng = _mk_engine(params, cfg, batch, cache_len, paged, page)
+            h = batch // 2
+            try:
+                eng.load_prefill(0, tokens[:h], plens_j[:h])
+                eng.load_prefill(1, tokens[h:], plens_j[h:])
+                sps = _steps_per_s(eng, batch)
+                resident = (eng.paged_resident_bytes() if paged
+                            else float(dense_bytes))
+                stats[paged] = (sps, resident)
+            finally:
+                eng.close()
+
+        (sps_d, res_d), (sps_p, res_p) = stats[False], stats[True]
+        print_fn(csv_row(
+            f"paged_resident_fill{fill}", 1e6 / sps_p,
+            f"paged={res_p/1e6:.2f}MB dense={res_d/1e6:.2f}MB "
+            f"actual={actual_bytes/1e6:.2f}MB "
+            f"ratio={res_p/max(actual_bytes, 1):.2f}x"))
+        print_fn(csv_row(
+            f"paged_vs_dense_step_fill{fill}", 1e6 / sps_p,
+            f"dense_us={1e6/sps_d:.0f} paged_us={1e6/sps_p:.0f} "
+            f"slowdown={sps_d/sps_p:.2f}x"))
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,7 @@ BENCHES = [
     ("scalability", "benchmarks.bench_scalability", "Fig. 13/14 scaling"),
     ("fig8", "benchmarks.bench_fig8", "Fig. 8 layer-count linearity"),
     ("kernels", "benchmarks.bench_kernels", "§5.1/5.2 R-Part kernels"),
+    ("paged", "benchmarks.bench_paged", "Paged vs dense R-worker KV"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
 ]

@@ -27,6 +27,13 @@ is enforced in tests/test_decompose.py.
 Everything here is decode-mode (one token per sequence) — that is the
 regime the paper targets; prefill runs as a normal batched forward on the
 S-worker.
+
+The dense ops below are the canonical (oracle) R-Parts.  R-workers may
+swap in alternative *storage backends* with the same (r_in) protocol:
+repro.serving.kv_cache.r_attention_int8 (int8 + scales, §5.2) and
+repro.serving.paged_cache.r_attention_paged_tables (block-granular
+pages + block table).  Each is tested equal to ``r_attention`` up to its
+storage rounding.
 """
 from __future__ import annotations
 
@@ -51,6 +58,14 @@ def num_phases(kind: str) -> int:
 # R-Part ops — PARAMETER-FREE.  r_state is the per-sequence state owned by
 # an R-worker; r_in are the activation tensors shipped from the S-worker.
 # ---------------------------------------------------------------------------
+def attn_state_lengths(st) -> jnp.ndarray:
+    """Token count per row of a dense attention r_state, derived from the
+    stored absolute positions (-1 marks an unwritten slot).  This is what
+    lets a storage backend (e.g. the paged R-worker cache) re-derive
+    sequence lengths from a prefill payload without a side channel."""
+    return (st["pos"] >= 0).sum(axis=1).astype(jnp.int32)
+
+
 def r_attention(r_in: Dict[str, jnp.ndarray], r_state, *, window: int,
                 softcap: float, kv_chunk: int = 1024):
     """Append (k,v) at ``lengths`` and attend with q.  The KV never leaves.

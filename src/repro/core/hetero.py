@@ -97,21 +97,106 @@ class RWorker(threading.Thread):
     ``quantized=True`` stores self-attention KV as int8 + per-(token,head)
     scales (paper §5.2): ~4x less R-side memory traffic, attention still
     accumulated in fp32 (repro.serving.kv_cache.r_attention_int8).
+
+    ``paged=True`` stores self-attention KV block-granular (PagedAttention
+    style, repro.serving.paged_cache): per micro-batch one host-side
+    ``PagedAllocator`` (block table shared by all attention layers — a
+    sequence's layers always have equal lengths) plus one device page
+    pool per layer.  NOTE ``num_pages`` sizes ONE pool, and a pool is
+    replicated per (attention layer, micro-batch): total device pages
+    = num_pages * n_attn_layers * num_microbatches — same convention as
+    the dense slab, whose ``cache_len`` is also per layer per row.
+    Admission allocates only ceil(len/page) pages per row, decode
+    appends grow the table page-by-page, and released rows return their
+    pages to the pool.  Composes with ``quantized`` (int8 page pools).
+    DEC_XATTN blocks keep the dense slab (their state mixes self-KV with
+    static cross-KV); windowed attention (cfg.window > 0) stays dense
+    too (its rotated ring can't be expressed in derived positions).
     """
 
     def __init__(self, wid: int, cfg: ModelConfig, lo: int, hi: int,
-                 kv_chunk: int = 1024, quantized: bool = False):
+                 kv_chunk: int = 1024, quantized: bool = False,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 max_pages_per_seq: Optional[int] = None):
         super().__init__(daemon=True, name=f"r-worker-{wid}")
         self.wid, self.cfg, self.lo, self.hi = wid, cfg, lo, hi
         self.kv_chunk = kv_chunk
         self.quantized = quantized
+        self.paged = paged
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self.num_pages = num_pages
+        self._cache_len = 0                      # set at first state load
         self.state: Dict[int, Any] = {}          # layer -> r_state slice
+        self.paged_keys: set = set()             # layer keys stored paged
+        self.allocators: Dict[int, Any] = {}     # micro-batch -> allocator
+        self._first_paged: Dict[int, Any] = {}   # mb -> min paged key
         self.inq: "queue.Queue" = queue.Queue()
         self.outq: "queue.Queue" = queue.Queue()
         self._jit_cache: Dict[Tuple[str, int], Any] = {}
         self.busy_time = 0.0
 
+    # -- paged storage helpers ----------------------------------------------
+    def _pageable(self, st) -> bool:
+        # Windowed attention keeps the dense slab: its cache is a rotated
+        # ring of the last `window` tokens, which the paged layout's
+        # derived (contiguous-from-0) positions cannot represent — and
+        # paging a bounded window buys nothing anyway.
+        return (self.paged and self.cfg.window == 0 and isinstance(st, dict)
+                and "k" in st and "pos" in st and "xk" not in st)
+
+    def _alloc(self, mb: int):
+        from repro.serving import paged_cache as PC
+        if mb not in self.allocators:
+            rows = self.hi - self.lo
+            mp = self.max_pages_per_seq or -(-self._cache_len // self.page_size)
+            num = self.num_pages or rows * mp
+            self.allocators[mb] = PC.PagedAllocator(rows, num,
+                                                    self.page_size, mp)
+        return self.allocators[mb]
+
+    def _to_pages(self, layer: int, rows: np.ndarray, r_state_rows):
+        from repro.serving import paged_cache as PC
+        mb = layer // self.cfg.num_layers
+        alloc = self._alloc(mb)
+        if layer not in self.paged_keys:
+            hkv, dh = r_state_rows["k"].shape[2:]
+            self.state[layer] = PC.init_page_pool(
+                alloc.num_pages, self.page_size, hkv, dh,
+                dtype=r_state_rows["k"].dtype, quantized=self.quantized)
+            self.paged_keys.add(layer)
+            self._first_paged[mb] = None         # recompute lazily
+        self.state[layer] = PC.dense_rows_to_pages(
+            self.state[layer], alloc, rows, r_state_rows)
+
+    def release_rows(self, mb: int, rows) -> None:
+        """Return finished rows' pages to the pool (continuous batching)."""
+        alloc = self.allocators.get(mb)
+        if alloc is not None:
+            for r in rows:
+                alloc.release(int(r))
+
+    def paged_resident_bytes(self) -> float:
+        """Bytes of KV actually backed by allocated pages (all layers)."""
+        from repro.serving import paged_cache as PC
+        total = 0.0
+        for layer in self.paged_keys:
+            alloc = self.allocators[layer // self.cfg.num_layers]
+            total += (alloc.used_pages() * self.page_size
+                      * PC.page_pool_token_bytes(self.state[layer]))
+        return total
+
+    # -- state loading ------------------------------------------------------
     def load_state(self, layer: int, r_state_slice) -> None:
+        if self._pageable(r_state_slice):
+            n = r_state_slice["k"].shape[0]
+            self._cache_len = r_state_slice["k"].shape[1]
+            # an existing pool is reused across reloads: stale pages past
+            # a row's re-admitted length are unreachable (derived
+            # positions + lengths mask), so no zero-fill is needed
+            self._to_pages(layer, np.arange(n), r_state_slice)
+            return
         if self.quantized and "k" in r_state_slice:
             from repro.serving.kv_cache import quantize_attn_state
             r_state_slice = quantize_attn_state(r_state_slice)
@@ -119,6 +204,9 @@ class RWorker(threading.Thread):
 
     def write_rows(self, layer: int, rows: np.ndarray, r_state_rows) -> None:
         """Continuous batching: replace finished rows with fresh prefixes."""
+        if layer in self.paged_keys and self._pageable(r_state_rows):
+            self._to_pages(layer, rows, r_state_rows)
+            return
         if self.quantized and "k" in r_state_rows:
             from repro.serving.kv_cache import quantize_attn_state
             r_state_rows = quantize_attn_state(r_state_rows)
@@ -140,6 +228,38 @@ class RWorker(threading.Thread):
                 lambda r_in, r_state: f(r_in, r_state))
         return self._jit_cache[key]
 
+    def _paged_fn(self):
+        if "paged" not in self._jit_cache:
+            from repro.serving import paged_cache as PC
+            f = partial(PC.r_attention_paged_tables, window=self.cfg.window,
+                        softcap=self.cfg.attn_logit_softcap)
+            self._jit_cache["paged"] = jax.jit(
+                lambda r_in, pool, tables: f(r_in, pool, tables))
+        return self._jit_cache["paged"]
+
+    def _step_paged(self, layer: int, r_in):
+        """One paged decode append+attend: grow active rows' tables for
+        the incoming token, then run the jitted paged R-Part.
+
+        All of a micro-batch's attention layers share one allocator and
+        identical lengths, so the (host-synced) table grow runs only on
+        the micro-batch's FIRST paged layer each step; the rest reuse
+        the cached device table."""
+        mb = layer // self.cfg.num_layers
+        alloc = self.allocators[mb]
+        if layer == self._first_paged_key(mb):
+            alloc.ensure_lengths(np.asarray(r_in["lengths"]) + 1)
+        r_out, new_pool = self._paged_fn()(r_in, self.state[layer],
+                                           alloc.tables_device())
+        return r_out, new_pool
+
+    def _first_paged_key(self, mb: int) -> int:
+        if self._first_paged.get(mb) is None:
+            self._first_paged[mb] = min(
+                k for k in self.paged_keys
+                if k // self.cfg.num_layers == mb)
+        return self._first_paged[mb]
+
     def run(self) -> None:
         import time
         while True:
@@ -149,8 +269,11 @@ class RWorker(threading.Thread):
             tag, layer, kind, phase, r_in = item
             try:
                 t0 = time.perf_counter()
-                r_out, new_state = self._fn(kind, phase)(r_in,
-                                                         self.state[layer])
+                if layer in self.paged_keys:
+                    r_out, new_state = self._step_paged(layer, r_in)
+                else:
+                    r_out, new_state = self._fn(kind, phase)(
+                        r_in, self.state[layer])
                 jax.block_until_ready(r_out)
                 self.busy_time += time.perf_counter() - t0
                 self.state[layer] = new_state
@@ -179,13 +302,16 @@ class HeteroPipelineEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  cache_len: int, num_r_workers: int = 2,
                  num_microbatches: int = 2, kv_chunk: int = 1024,
-                 quantized_kv: bool = False):
+                 quantized_kv: bool = False, paged_kv: bool = False,
+                 page_size: int = 16, pages_per_worker: Optional[int] = None):
         assert batch % num_microbatches == 0
         self.params, self.cfg = params, cfg
         self.batch = batch
         self.mb_size = batch // num_microbatches
         self.num_mb = num_microbatches
         self.cache_len = cache_len
+        self.paged_kv = paged_kv
+        self.page_size = page_size
         self.layers = per_layer_params(params, cfg)
         self.num_layers = cfg.num_layers
         # contiguous batch slices per worker WITHIN a micro-batch
@@ -193,8 +319,15 @@ class HeteroPipelineEngine:
         self.slices = [(int(bounds[i]), int(bounds[i + 1]))
                        for i in range(num_r_workers)
                        if bounds[i + 1] > bounds[i]]
+        # pages_per_worker sizes ONE pool = one (attn layer, micro-batch)
+        # of one worker — the same per-layer-per-row convention as
+        # cache_len (see RWorker docstring for the total footprint)
+        max_pages = -(-cache_len // page_size)
         self.workers = [RWorker(w, cfg, lo, hi, kv_chunk,
-                                quantized=quantized_kv)
+                                quantized=quantized_kv, paged=paged_kv,
+                                page_size=page_size,
+                                num_pages=pages_per_worker,
+                                max_pages_per_seq=max_pages)
                         for w, (lo, hi) in enumerate(self.slices)]
         for w in self.workers:
             w.start()
@@ -331,6 +464,31 @@ class HeteroPipelineEngine:
     # -- bookkeeping ----------------------------------------------------------
     def worker_busy_times(self) -> List[float]:
         return [w.busy_time for w in self.workers]
+
+    def worker_for(self, row: int):
+        """Map a global batch row to (worker, micro-batch, local row
+        within the worker's slice) — the one invariant that keeps state
+        scatter, page release and admission accounting consistent."""
+        mb, local = divmod(int(row), self.mb_size)
+        for w in self.workers:
+            if w.lo <= local < w.hi:
+                return w, mb, local - w.lo
+        raise IndexError(row)
+
+    def release_row(self, row: int) -> None:
+        """Continuous batching: a finished sequence frees its KV pages on
+        the owning R-worker (dense slabs are simply overwritten at the
+        next admission and need no release)."""
+        if not self.paged_kv:
+            return
+        w, mb, local = self.worker_for(row)
+        w.release_rows(mb, [local])
+
+    def paged_resident_bytes(self) -> float:
+        """KV bytes currently backed by allocated pages across R-workers
+        (the dense path's equivalent is batch*cache_len regardless of
+        occupancy)."""
+        return sum(w.paged_resident_bytes() for w in self.workers)
 
     def close(self) -> None:
         for w in self.workers:

@@ -63,11 +63,31 @@ def s_part_flops_per_token(cfg: ModelConfig) -> float:
     return 2.0 * s_part_params_per_block(cfg)
 
 
-def r_part_bytes_per_cached_token(cfg: ModelConfig,
-                                  bytes_per_el: int = 2) -> float:
+def r_part_bytes_per_cached_token(cfg: ModelConfig, bytes_per_el: int = 2,
+                                  page: int = 0,
+                                  table_entry_bytes: int = 4) -> float:
     """Bytes the R-Part must stream per cached token per new token, one
-    block (read K + read V)."""
-    return 2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
+    block (read K + read V).
+
+    ``page > 0`` adds the paged-KV block-table overhead: one table entry
+    read per page, amortized over the page's tokens.  It is tiny by
+    design (4/page bytes vs hundreds of KV bytes) — the cost of paging is
+    capacity rounding, not bandwidth, which is why the R-workers can
+    afford it."""
+    kv = 2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
+    if page > 0:
+        kv += table_entry_bytes / page
+    return kv
+
+
+def paged_round_up_factor(seq_len: int, page: int) -> float:
+    """Allocated/used capacity ratio of a ``seq_len``-token sequence under
+    page-granular allocation — the internal-fragmentation term of the
+    capacity model (eq. 9's C shrinks by this factor, worst case
+    ``(seq+page-1)/seq``, vs the dense slab's ``cache_len/seq``)."""
+    if seq_len <= 0:
+        return 1.0
+    return (-(-seq_len // page) * page) / float(seq_len)
 
 
 def r_part_flops_per_cached_token(cfg: ModelConfig) -> float:
@@ -86,11 +106,12 @@ def t_of_b(cfg: ModelConfig, hw: Hardware, b: int,
     return max(comp, mem)
 
 
-def r_per_token(cfg: ModelConfig, hw: Hardware,
-                bytes_per_el: int = 2) -> float:
+def r_per_token(cfg: ModelConfig, hw: Hardware, bytes_per_el: int = 2,
+                page: int = 0) -> float:
     """R: one worker's latency to process ONE cached token of ONE new
-    token's R-Part, one block (bandwidth-bound)."""
-    bw = r_part_bytes_per_cached_token(cfg, bytes_per_el) / hw.mem_bw
+    token's R-Part, one block (bandwidth-bound).  ``page`` adds the paged
+    block-table read overhead (see r_part_bytes_per_cached_token)."""
+    bw = r_part_bytes_per_cached_token(cfg, bytes_per_el, page) / hw.mem_bw
     fl = r_part_flops_per_cached_token(cfg) / hw.flops
     return max(bw, fl)
 
@@ -132,40 +153,61 @@ def knee_batch(cfg: ModelConfig, hw: Hardware, rel_gain: float = 0.05,
 
 
 def min_workers_memory(cfg: ModelConfig, b: int, seq_len: int,
-                       worker_mem: float, bytes_per_el: int = 2) -> int:
-    """eq. (9): ½·𝓑·S <= C·𝓟 with C tokens per worker memory."""
+                       worker_mem: float, bytes_per_el: int = 2,
+                       page: int = 0) -> int:
+    """eq. (9): ½·𝓑·S <= C·𝓟 with C tokens per worker memory.
+
+    The ½·𝓑·S demand is the PAPER's model: R-side memory holds exactly
+    the live tokens (average resident length S/2 under SLS, eq. 6).
+    ``page > 0`` adds the only overhead paged storage pays on top of
+    that ideal — the round-up to page granularity at the average length
+    — so paged demand is always >= the eq. 9 ideal (equal when S/2 is
+    page-aligned).  Note this ideal is what paging makes *achievable*:
+    a dense per-row slab implementation actually pins 𝓑·cache_len,
+    which eq. 9 does not model (see benchmarks/bench_paged.py for the
+    measured gap)."""
     kv_per_tok = (2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
                   * cfg.num_layers)
     c = worker_mem / kv_per_tok
-    return max(1, math.ceil(0.5 * b * seq_len / c))
+    demand = 0.5 * b * seq_len
+    if page > 0:
+        demand *= paged_round_up_factor(max(1, seq_len // 2), page)
+    return max(1, math.ceil(demand / c))
 
 
 def optimal_workers(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware,
                     b: int, seq_len: int, bytes_per_el: int = 2,
                     t_measured: Optional[Callable[[int], float]] = None,
-                    r_measured: Optional[float] = None) -> float:
+                    r_measured: Optional[float] = None,
+                    page: int = 0) -> float:
     """eq. (10)/(11): 𝓟 ≈ 𝓑·S·R / (2·𝕋(𝓑)) = ½·S·R·𝔼(𝓑).
 
     Average resident length under SLS is S/2 (eq. 6), hence the ½.
-    Pass measured 𝕋/R to override the analytic roofline forms.
-    """
+    Pass measured 𝕋/R to override the analytic roofline forms; ``page``
+    adds the paged block-table read to the analytic R."""
     t_b = t_measured(b) if t_measured else t_of_b(cfg, hw_s, b, bytes_per_el)
     r = r_measured if r_measured is not None else r_per_token(
-        cfg, hw_r, bytes_per_el)
+        cfg, hw_r, bytes_per_el, page)
     return (b * seq_len * r) / (2.0 * t_b)
 
 
 def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
-         latency_slo: Optional[float] = None,
-         worker_mem: float = 256e9) -> Dict[str, float]:
-    """Full §4.3 planning pass -> {batch, workers, workers_mem_min, ...}."""
+         latency_slo: Optional[float] = None, worker_mem: float = 256e9,
+         page: int = 0) -> Dict[str, float]:
+    """Full §4.3 planning pass -> {batch, workers, workers_mem_min, ...}.
+
+    ``page > 0`` plans for paged R-worker KV: R gains the amortized
+    block-table read, and the eq. 9 memory bound is evaluated at the
+    page-rounded average resident length (the paper's live-token ideal
+    plus paging's rounding overhead — see min_workers_memory).
+    """
     if latency_slo is not None:
         b = max_batch_for_slo(cfg, hw_s, seq_len, latency_slo)
     else:
         b = knee_batch(cfg, hw_s)
-    p = optimal_workers(cfg, hw_s, hw_r, b, seq_len)
-    p_mem = min_workers_memory(cfg, b, seq_len, worker_mem)
-    return {
+    p = optimal_workers(cfg, hw_s, hw_r, b, seq_len, page=page)
+    p_mem = min_workers_memory(cfg, b, seq_len, worker_mem, page=page)
+    out = {
         "batch": b,
         "workers": max(1.0, math.ceil(p)),
         "workers_mem_min": p_mem,
@@ -174,6 +216,11 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
         "e_of_b": e_of_b(cfg, hw_s, b),
         "tokens_per_s": b / (2 * cfg.num_layers * t_of_b(cfg, hw_s, b)),
     }
+    if page > 0:
+        out["r_paged"] = r_per_token(cfg, hw_r, page=page)
+        out["paged_round_up"] = paged_round_up_factor(max(1, seq_len // 2),
+                                                      page)
+    return out
 
 
 # ---------------------------------------------------------------------------

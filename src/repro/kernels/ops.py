@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
+from repro.kernels import paged_attention as _pa
 from repro.kernels import quant_kv as _qk
 from repro.kernels import ref as _ref
 
@@ -53,6 +54,48 @@ def decode_attention_int8(q, k_q, k_scale, v_q, v_scale, pos, lengths, *,
             interpret=interpret and not _on_tpu())
     return _ref.decode_attention_int8_ref(
         q, k_q, k_scale, v_q, v_scale, pos, lengths, window=window,
+        sink=sink, softcap=softcap)
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap",
+                                   "use_kernel", "interpret"))
+def paged_decode_attention(q, pages_k, pages_v, tables, lengths, *,
+                           window: int = 0, sink: int = 0,
+                           softcap: float = 0.0, use_kernel: str = "auto",
+                           interpret: bool = True):
+    """Block-table decode attention.  q [B,Hq,Dh]; pages_k/v
+    [P,page,Hkv,Dh]; tables [B,MP] int32; lengths [B] -> [B,Hq,Dh]."""
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _pa.paged_decode_attention(
+            q, pages_k, pages_v, tables, lengths, window=window, sink=sink,
+            softcap=softcap, interpret=interpret and not _on_tpu())
+    return _ref.paged_decode_attention_ref(
+        q, pages_k, pages_v, tables, lengths, window=window, sink=sink,
+        softcap=softcap)
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "block_s",
+                                   "use_kernel", "interpret"))
+def paged_decode_attention_int8(q, pk_q, pk_s, pv_q, pv_s, tables, lengths,
+                                *, window: int = 0, sink: int = 0,
+                                softcap: float = 0.0, block_s: int = 512,
+                                use_kernel: str = "auto",
+                                interpret: bool = True):
+    """Int8 pools compose the paged gather with the dense int8 kernel: the
+    pages are gathered into a per-sequence slab (with derived positions)
+    and the existing quant_kv flash-decode consumes it.  On CPU the whole
+    chain stays the jnp reference."""
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        k_q, pos = _ref.paged_gather(pk_q, tables)
+        k_s, _ = _ref.paged_gather(pk_s, tables)
+        v_q, _ = _ref.paged_gather(pv_q, tables)
+        v_s, _ = _ref.paged_gather(pv_s, tables)
+        return _qk.decode_attention_int8(
+            q, k_q, k_s, v_q, v_s, pos, lengths, window=window, sink=sink,
+            softcap=softcap, block_s=block_s,
+            interpret=interpret and not _on_tpu())
+    return _ref.paged_decode_attention_int8_ref(
+        q, pk_q, pk_s, pv_q, pv_s, tables, lengths, window=window,
         sink=sink, softcap=softcap)
 
 

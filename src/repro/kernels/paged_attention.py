@@ -1,0 +1,149 @@
+"""Paged flash-decode Pallas TPU kernel: R-Part attention over a
+block-granular (PagedAttention-style) KV pool.
+
+Instead of one dense ``[B, S, Hkv, Dh]`` slab per micro-batch, the
+KV-cache lives in a shared page pool ``[P, page, Hkv, Dh]`` and every
+sequence owns an ordered list of page ids — its *block table* row.  The
+paper's R-workers are admission-limited by KV memory (§4.3 eq. 9), so
+allocating by page instead of by worst-case ``cache_len`` is what lets a
+worker hold sequences proportional to their *actual* token count.
+
+Block-table layout / protocol (shared with ``repro.serving.paged_cache``):
+
+    pages_k/v  [P, page, Hkv, Dh]   the pool (one per layer per worker)
+    tables     [B, MP] int32        k-th entry = page id backing absolute
+                                    positions [k*page, (k+1)*page); -1 if
+                                    unmapped
+    lengths    [B] int32            position of THIS step's new token
+
+Pages are allocated as a contiguous prefix (slot k mapped => slots < k
+mapped) and tokens are appended in order, so a slot's absolute positions
+are *derived* — ``k*page + j`` — and need not be stored: the valid mask
+``pos <= lengths[b]`` over mapped pages is exactly the written token set.
+A fully unmapped row (freed slot still being stepped by the engine)
+yields an all-masked score row and a zero output, never a stale read.
+
+Grid: (batch, kv_heads, MP).  The page-list dimension is innermost and
+sequential; the block table and lengths ride in scalar-prefetch SMEM so
+each step's K/V DMA source address is ``tables[b, i]`` — the gather never
+materializes a contiguous copy of the sequence (the jnp reference in
+kernels/ref.py does exactly that gather, and is the oracle).  Online
+softmax state lives in VMEM scratch as in decode_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref,            # SMEM [B, MP] int32 block table
+            len_ref,            # SMEM [B] int32 new-token positions
+            q_ref,              # [1, 1, G, Dh]
+            k_ref,              # [1, page, 1, Dh]  (page tables[b, i])
+            v_ref,              # [1, page, 1, Dh]
+            o_ref,              # [1, 1, G, Dh]
+            m_s, l_s, acc,      # VMEM scratch: [G,1], [G,1], [G,Dh] fp32
+            *, scale: float, window: int, sink: int, softcap: float,
+            page: int, blocks: int):
+    bi = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [page, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    qpos = len_ref[bi]
+    mapped = tbl_ref[bi, sb] >= 0
+    # absolute positions of this page's slots are derived, not stored
+    pos = sb * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, page]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = mapped & (pos <= qpos)
+    if window > 0:
+        in_win = pos > qpos - window
+        if sink > 0:
+            in_win |= pos < sink
+        valid &= in_win
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(sb == blocks - 1)
+    def _done():
+        out = acc[...] / jnp.maximum(l_s[...], 1e-30)
+        out = jnp.where(m_s[...] > NEG_INF / 2, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, pages_k, pages_v, tables, lengths, *,
+                           window: int = 0, sink: int = 0,
+                           softcap: float = 0.0, interpret: bool = True):
+    """q [B,Hq,Dh]; pages_k/v [P,page,Hkv,Dh]; tables [B,MP] int32
+    (-1 = unmapped); lengths [B] int32.  Returns o [B,Hq,Dh] in q.dtype."""
+    b, hq, dh = q.shape
+    n_pages, page, hkv, _ = pages_k.shape
+    mp = tables.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+
+    # unmapped (-1) entries are masked out by ``mapped`` in the kernel; the
+    # index map clamps them so the DMA source stays in-pool
+    def _page_spec():
+        return pl.BlockSpec(
+            (1, page, 1, dh),
+            lambda bi, hi, si, tbl, ln: (jnp.maximum(tbl[bi, si], 0), 0,
+                                         hi, 0))
+
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(dh), window=window, sink=sink,
+        softcap=softcap, page=page, blocks=mp)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, si, tbl, ln:
+                         (bi, hi, 0, 0)),
+            _page_spec(),
+            _page_spec(),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, hi, si, tbl, ln:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, pages_k, pages_v)
+    return out.reshape(b, hq, dh)

@@ -28,3 +28,48 @@ def decode_attention_int8_ref(q, k_q, k_scale, v_q, v_scale, pos, lengths,
     v = dequantize_kv(v_q, v_scale).astype(q.dtype)
     return decode_attention_ref(q, k, v, pos, lengths, window=window,
                                 sink=sink, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# paged (block-table) variants — see kernels/paged_attention.py for the
+# layout.  The gather materializes each sequence's pages contiguously and
+# derives the absolute positions from the table slot index; it is both the
+# oracle for the Pallas paged kernel and the CPU execution path.
+# ---------------------------------------------------------------------------
+def paged_gather(pages, tables):
+    """pages [P,page,...]; tables [B,MP] int32 -> [B, MP*page, ...] with a
+    [B, MP*page] derived-position array (-1 on unmapped pages)."""
+    b, mp = tables.shape
+    page = pages.shape[1]
+    safe = jnp.maximum(tables, 0)
+    out = pages[safe]                                   # [B, MP, page, ...]
+    pos = (jnp.arange(mp * page, dtype=jnp.int32)
+           .reshape(1, mp, page))                       # slot-derived
+    pos = jnp.where((tables >= 0)[:, :, None], pos, -1)
+    return (out.reshape(b, mp * page, *pages.shape[2:]),
+            pos.reshape(b, mp * page))
+
+
+def paged_decode_attention_ref(q, pages_k, pages_v, tables, lengths, *,
+                               window: int = 0, sink: int = 0,
+                               softcap: float = 0.0):
+    """q [B,Hq,Dh]; pages_k/v [P,page,Hkv,Dh]; tables [B,MP];
+    lengths [B] -> [B,Hq,Dh]."""
+    k, pos = paged_gather(pages_k, tables)
+    v, _ = paged_gather(pages_v, tables)
+    return decode_attention_ref(q, k.astype(q.dtype), v.astype(q.dtype),
+                                pos, lengths, window=window, sink=sink,
+                                softcap=softcap)
+
+
+def paged_decode_attention_int8_ref(q, pk_q, pk_s, pv_q, pv_s, tables,
+                                    lengths, *, window: int = 0,
+                                    sink: int = 0, softcap: float = 0.0):
+    """Int8 page pools: values [P,page,Hkv,Dh] int8 + scales [P,page,Hkv]."""
+    k_q, pos = paged_gather(pk_q, tables)
+    k_s, _ = paged_gather(pk_s, tables)
+    v_q, _ = paged_gather(pv_q, tables)
+    v_s, _ = paged_gather(pv_s, tables)
+    return decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, pos, lengths,
+                                     window=window, sink=sink,
+                                     softcap=softcap)

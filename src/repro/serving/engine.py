@@ -13,6 +13,12 @@ requests may take one:
 Backends: ``colocated`` (single-device decode, the vanilla baseline) or
 ``hetero`` (the S-/R-worker pipeline of core.hetero).  Both expose the
 same row-replacement protocol so continuous batching works identically.
+
+With ``paged_kv=True`` (hetero only) the R-workers store self-attention
+KV block-granular (serving.paged_cache): admission allocates only the
+pages a prompt needs, decode grows tables page-by-page, and a finished
+sequence's pages are freed the step it completes — so R-side resident KV
+tracks the actual token count instead of batch*cache_len.
 """
 from __future__ import annotations
 
@@ -62,8 +68,12 @@ class ServingEngine:
         from repro.core import perfmodel as P
         hw_s = hw_s or P.TPU_V5E
         hw_r = hw_r or P.TPU_V5E
+        # windowed archs fall back to dense KV at runtime (RWorker.
+        # _pageable), so don't plan with paged terms there either
+        page = (kw.get("page_size", 16)
+                if kw.get("paged_kv") and cfg.window == 0 else 0)
         plan = P.plan(cfg, hw_s, hw_r, seq_len=seq_len,
-                      latency_slo=latency_slo)
+                      latency_slo=latency_slo, page=page)
         batch = int(min(max_batch, max(2, plan["batch"])))
         workers = int(max(1, min(8, plan["workers"])))
         if batch % 2:
@@ -80,10 +90,12 @@ class ServingEngine:
                  interval: int = 0, w_lim: Optional[float] = None,
                  num_r_workers: int = 2, num_microbatches: int = 2,
                  kv_chunk: int = 1024, quantized_kv: bool = False,
-                 seed: int = 0):
+                 paged_kv: bool = False, page_size: int = 16,
+                 pages_per_worker: Optional[int] = None, seed: int = 0):
         self.params, self.cfg = params, cfg
         self.batch, self.cache_len = batch, cache_len
         self.backend = backend
+        self.paged_kv = paged_kv and backend == "hetero"
         self.admission = admission
         self.target_len = target_len            # S in the paper's schedule
         self.interval = interval                # F
@@ -100,7 +112,8 @@ class ServingEngine:
                 params, cfg, batch=batch, cache_len=cache_len,
                 num_r_workers=num_r_workers,
                 num_microbatches=num_microbatches, kv_chunk=kv_chunk,
-                quantized_kv=quantized_kv)
+                quantized_kv=quantized_kv, paged_kv=paged_kv,
+                page_size=page_size, pages_per_worker=pages_per_worker)
             self.num_mb = num_microbatches
             self.mb_size = batch // num_microbatches
             for mb in range(self.num_mb):
@@ -134,7 +147,34 @@ class ServingEngine:
             self.engine.s_states[mb][li] = s_st
 
     # ------------------------------------------------------------------ #
+    def _paged_pool_min(self) -> Optional[int]:
+        """Pages in the scarcest per-(worker, micro-batch) pool, or None
+        when nothing is paged (dense fallback — e.g. windowed archs)."""
+        pools = [a.num_pages for w in self.engine.workers
+                 for a in w.allocators.values()]
+        return min(pools) if pools else None
+
     def submit(self, req: Request) -> None:
+        # guards apply only when something is actually paged — on archs
+        # where paging fell back to dense (windowed attention) the ring
+        # legally wraps past cache_len
+        pool_min = self._paged_pool_min() if self.paged_kv else None
+        if pool_min is not None:
+            if req.prompt_len + req.max_new_tokens > self.cache_len:
+                # the dense ring silently wraps past cache_len; the paged
+                # path would silently drop tokens past capacity — reject
+                # the impossible request up front instead
+                raise ValueError(
+                    f"request {req.rid}: prompt ({req.prompt_len}) + "
+                    f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                    f"cache_len ({self.cache_len})")
+            need = self._paged_pages_for(req)
+            if need > pool_min:
+                # pool capacity is static — fail at submit, not from a
+                # later step() while other requests are in flight
+                raise ValueError(
+                    f"request {req.rid} needs {need} pages, more than a "
+                    f"worker pool holds — raise pages_per_worker")
         req.arrive_step = self.step_idx
         self.queue.append(req)
 
@@ -149,21 +189,64 @@ class ServingEngine:
         return tot
 
     # ------------------------------------------------------------------ #
+    def _paged_pages_for(self, req: Request) -> int:
+        """Worst-case pages a request will ever hold: its full target
+        length (prompt + max_new_tokens, which submit() bounds by
+        cache_len), page-rounded."""
+        page = self.engine.page_size
+        return -(-min(req.target_len, self.cache_len) // page)
+
+    def _paged_admit_cap(self, n: int) -> int:
+        """Page-aware admission backpressure with COMMITMENT accounting:
+        every resident request reserves the pages of its full target
+        length up front, and a queued request is admitted only if its
+        own worst case fits the scarcest per-(worker, micro-batch) pool
+        on top of those reservations.  Conservative (queue position
+        doesn't pick its slot yet, so the min pool gates everyone), but
+        it guarantees decode-time growth can never exhaust the pool —
+        the degrade path in PagedAllocator.ensure_lengths stays
+        unreachable under policy-admitted load."""
+        if self._paged_pool_min() is None:
+            return n        # dense fallback (e.g. windowed arch): no cap
+        committed: Dict[Tuple[int, int], int] = {}
+        for row, req in enumerate(self.slots):
+            if req is None:
+                continue
+            w, mb, _ = self.engine.worker_for(row)
+            key = (w.wid, mb)
+            committed[key] = (committed.get(key, 0)
+                              + self._paged_pages_for(req))
+        budget = min(a.num_pages - committed.get((w.wid, mb), 0)
+                     for w in self.engine.workers
+                     for mb, a in w.allocators.items())
+        m = 0
+        for r in list(self.queue)[:n]:
+            need = self._paged_pages_for(r)   # submit() bounds it by pool
+            if need > budget:
+                break
+            budget -= need
+            m += 1
+        return m
+
     def _admit_count(self) -> int:
         """How many queued requests may start THIS step, per policy."""
         free = len(self._free_slots())
         avail = min(free, len(self.queue))
+        if self.paged_kv and avail > 0:
+            # cap BEFORE the policy so loadctl only records admissions
+            # that actually happen
+            avail = self._paged_admit_cap(avail)
         if avail == 0:
             return 0
         if self.admission == "greedy":
-            return avail
-        if self.admission == "sls":
+            n = avail
+        elif self.admission == "sls":
             f = max(1, self.interval)
             if self.step_idx % f != 0:
                 return 0
             m = microbatch_size(self.batch, max(1, self.target_len), f)
-            return min(avail, m)
-        if self.admission == "loadctl":
+            n = min(avail, m)
+        elif self.admission == "loadctl":
             m = 0
             lc = self.load_ctl
             f = max(1, self.interval)
@@ -174,8 +257,10 @@ class ServingEngine:
                     break
                 lc.add_microbatch(self.step_idx, chunk)
                 m += chunk
-            return m
-        raise ValueError(self.admission)
+            n = m
+        else:
+            raise ValueError(self.admission)
+        return n
 
     # ------------------------------------------------------------------ #
     def _prefill_fn(self, n_pad: int):
@@ -221,26 +306,35 @@ class ServingEngine:
                 r.finish_step = self.step_idx
                 self.finished.append(r)
                 self.slots[rows[i]] = None
+                if self.paged_kv:
+                    self.engine.release_row(rows[i])
             else:
                 self.slots[rows[i]] = r
 
     def _hetero_scatter(self, rows: np.ndarray, sub, sub_rows: np.ndarray):
         eng = self.engine
         layer_states = per_layer_state(sub, self.cfg)
+        # group admitted rows by owning (worker, micro-batch) so each
+        # layer issues ONE write_rows per group — dense_rows_to_pages'
+        # batched scatter (and the dense slab's batched .at[rows].set)
+        # would otherwise copy the pool/slab once per row
+        groups: Dict[Tuple[int, int], Tuple[list, list]] = {}
+        for gi, row in zip(sub_rows, rows):
+            w, mb, local = eng.worker_for(int(row))
+            locs, gis = groups.setdefault((w.wid, mb), ([], []))
+            locs.append(local)
+            gis.append(int(gi))
         for li, (kind, _) in enumerate(eng.layers):
             r_st, s_st = D.split_block_state(kind, layer_states[li])
-            for gi, row in zip(sub_rows, rows):
-                mb, local = divmod(int(row), self.mb_size)
-                # find the worker owning `local`
-                for w in eng.workers:
-                    if w.lo <= local < w.hi:
-                        w.write_rows(eng._lkey(mb, li),
-                                     np.asarray([local - w.lo]),
-                                     jax.tree.map(lambda x: x[gi:gi + 1], r_st))
-                        break
+            for (wid, mb), (locs, gis) in groups.items():
+                w = eng.workers[wid]
+                gis_np = np.asarray(gis)
+                w.write_rows(eng._lkey(mb, li), np.asarray(locs),
+                             jax.tree.map(lambda x: x[gis_np], r_st))
                 if s_st:
+                    mb_rows = np.asarray(locs) + w.lo
                     eng.s_states[mb][li] = jax.tree.map(
-                        lambda c, n: c.at[local].set(n[gi]),
+                        lambda c, n: c.at[mb_rows].set(n[gis_np]),
                         eng.s_states[mb][li], s_st)
         # lengths
         for gi, row in zip(sub_rows, rows):
@@ -281,6 +375,8 @@ class ServingEngine:
                 r.finish_step = self.step_idx
                 self.finished.append(r)
                 self.slots[i] = None
+                if self.paged_kv:
+                    self.engine.release_row(i)
         wall = time.perf_counter() - t0
         rec = StepRecord(self.step_idx, wall,
                          sum(r is not None for r in self.slots),
@@ -288,6 +384,10 @@ class ServingEngine:
         self.records.append(rec)
         self.step_idx += 1
         return rec
+
+    def paged_resident_bytes(self) -> float:
+        """Current page-backed KV bytes on the R-workers (paged_kv only)."""
+        return self.engine.paged_resident_bytes() if self.paged_kv else 0.0
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         while (self.queue or any(r is not None for r in self.slots)) \

@@ -65,14 +65,31 @@ def r_attention_int8(r_in: Dict, r_state: Dict, *, window: int,
     return {"o": o[:, None]}, new_state
 
 
-def kv_bytes_per_seq(cfg: ModelConfig, cache_len: int,
-                     quantized: bool = False) -> int:
+def _token_slot_bytes(cfg: ModelConfig, quantized: bool) -> int:
+    """Bytes one token-slot of one layer's KV occupies (K + V, plus the
+    int8 path's per-(token, head) fp32 scales)."""
     per_tok = 2 * cfg.num_kv_heads * cfg.head_dim
     if quantized:
-        per_el = 1
-        scales = 2 * cfg.num_kv_heads * 4
-    else:
-        per_el = jnp.dtype(cfg.dtype).itemsize
-        scales = 0
+        return per_tok * 1 + 2 * cfg.num_kv_heads * 4
+    return per_tok * jnp.dtype(cfg.dtype).itemsize
+
+
+def kv_bytes_per_seq(cfg: ModelConfig, cache_len: int,
+                     quantized: bool = False) -> int:
     n_attn = sum(1 for k in cfg.pattern if k in ("attn", "dec_xattn"))
-    return n_attn * cache_len * (per_tok * per_el + scales)
+    return n_attn * cache_len * _token_slot_bytes(cfg, quantized)
+
+
+def paged_kv_bytes_per_seq(cfg: ModelConfig, seq_len: int, page: int,
+                           quantized: bool = False,
+                           table_entry_bytes: int = 4) -> int:
+    """Resident bytes a ``seq_len``-token sequence actually occupies under
+    block-granular allocation: page-rounded KV plus its block-table row.
+    Compare with ``kv_bytes_per_seq(cfg, cache_len)``, which every dense
+    row pays regardless of its length."""
+    n_pages = -(-seq_len // page)
+    # only plain self-attention layers are paged (dec_xattn keeps the
+    # dense slab for its static cross-KV)
+    n_attn = sum(1 for k in cfg.pattern if k == "attn")
+    return n_attn * (n_pages * page * _token_slot_bytes(cfg, quantized)
+                     + n_pages * table_entry_bytes)

@@ -1,27 +1,58 @@
-"""Paged KV-cache (the vLLM/PagedAttention mechanism of paper §2.2).
+"""Paged KV-cache (the vLLM/PagedAttention mechanism of paper §2.2),
+integrated as the R-workers' storage format.
 
 The paper's baseline systems page the KV-cache to fight fragmentation;
 FastDecode sidesteps paging by moving KV off the S-worker entirely.  Both
-belong in a serving framework: R-workers with many variable-length
-resident sequences benefit from paging too (no 32k-slot allocation for a
-200-token chat), so this module provides a page-table cache that plugs
-into the same parameter-free R-Part interface.
+belong in a serving framework: an R-worker's admission capacity is bound
+by KV memory (§4.3 eq. 9), and with a dense ``[rows, cache_len]`` slab
+that bound is set by the *longest possible* sequence.  Block-granular
+allocation makes it proportional to the *actual* token count, so the
+same worker memory holds far more short/ragged sequences.
 
-Layout:
-    pages       [num_pages, page, Hkv, Dh]   (one pool per layer)
-    page_pos    [num_pages, page] int32      absolute positions (-1 free)
-    tables      [B, max_pages_per_seq] int32 page ids (-1 unmapped)
-    lengths     [B]
+Two layers of API live here:
 
-The attention read path gathers a sequence's pages into a contiguous view
-(pure jnp; a TPU kernel would stream page-by-page with the same math —
-the flash-decode kernel's (pos, mask) protocol already supports it since
-invalid slots are -1-masked).
+1. The self-contained ``PagedKV`` dataclass (single-sequence ops,
+   explicit stored positions) — the original reference implementation,
+   kept as-is for its property tests.
+2. The engine-integrated path used by ``repro.core.hetero.RWorker``:
+
+   * ``PagedAllocator`` — HOST-side block-table state for one worker's
+     rows of one micro-batch, shared by every attention layer (all
+     layers of a sequence always have the same length, so one table
+     serves them all; each layer owns its own page *pool*, addressed by
+     the shared page ids).
+   * device-side page pools (fp or int8+scales, ``init_page_pool``) with
+     jit-friendly append (``write_token_paged``) and batched
+     admission-time prefix conversion (``dense_rows_to_pages``).
+   * ``r_attention_paged_tables`` — the parameter-free R-Part op over
+     (pool, tables), kernel-dispatched via ``repro.kernels.ops``.
+
+Block-table layout (shared with kernels/paged_attention.py):
+
+    pool pages  [num_pages, page, Hkv, Dh]     (one pool per attn layer)
+    tables      [rows, max_pages_per_seq] int32  page ids, -1 unmapped
+    lengths     [rows]                          current token count
+
+Allocation/free protocol (the invariants the fuzz tests pin down):
+
+  * pages of a row form a contiguous table prefix: slot k mapped implies
+    slots < k mapped, and slot k backs absolute positions
+    [k*page, (k+1)*page).  Positions are therefore DERIVED from the slot
+    index — no per-slot position array in the integrated path.
+  * ``admit`` = release + allocate ceil(len/page) pages; idempotent when
+    the row is already resident at that length (so per-layer admission
+    calls reuse one allocator without reshuffling page ids mid-load).
+  * ``ensure_lengths`` grows ACTIVE rows ahead of each decode append;
+    released rows stay table-less, their (engine-driven) writes are
+    dropped via an out-of-pool index, and their attention output is an
+    all-masked zero — never a stale read.
+  * ``release`` returns all pages to the free list; no fragmentation, by
+    construction (§2.2's argument for paging).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -168,3 +199,257 @@ def pool_utilization(kv: PagedKV) -> float:
     tokens = int(np.asarray(kv.lengths).sum())
     cap = used * kv.page_size
     return tokens / cap if cap else 1.0
+
+
+# ===========================================================================
+# engine-integrated path (RWorker storage format) — see module docstring
+# ===========================================================================
+class PagedAllocator:
+    """Host-side block-table allocator for one worker's rows of one
+    micro-batch, shared across that worker's attention layers."""
+
+    def __init__(self, rows: int, num_pages: int, page: int,
+                 max_pages_per_seq: int):
+        self.rows, self.num_pages, self.page = rows, num_pages, page
+        self.max_pages = max_pages_per_seq
+        self.tables = np.full((rows, max_pages_per_seq), -1, np.int32)
+        self.lengths = np.zeros((rows,), np.int64)
+        self.active = np.zeros((rows,), bool)
+        # a row whose decode-time grow once failed is frozen: regrowing
+        # later would map pages over positions whose writes were already
+        # dropped, exposing stale KV inside the (pos <= qpos) valid mask
+        self.frozen = np.zeros((rows,), bool)
+        self.free: List[int] = list(range(num_pages))
+        self._dev_tables: Optional[jnp.ndarray] = None   # upload cache
+
+    # -- low level ---------------------------------------------------------
+    def _ensure_row(self, row: int, new_len: int) -> bool:
+        need = -(-new_len // self.page)
+        if need > self.max_pages:
+            raise ValueError(
+                f"sequence needs {need} pages > max_pages_per_seq="
+                f"{self.max_pages}")
+        have = int((self.tables[row] >= 0).sum())
+        if need > have:
+            self._dev_tables = None     # BEFORE mutating: a mid-loop
+        for slot in range(have, need):  # MemoryError must not leave a
+            if not self.free:           # stale device table
+                raise MemoryError("paged KV pool exhausted")
+            self.tables[row, slot] = self.free.pop()
+        return need > have
+
+    # -- protocol ----------------------------------------------------------
+    def admit(self, row: int, length: int) -> bool:
+        """Make ``row`` resident with exactly ceil(length/page) pages.
+        No-op if already resident at that length (per-layer idempotence:
+        page ids must not reshuffle between one admission's layers)."""
+        if self.active[row] and self.lengths[row] == length:
+            return False
+        self.release(row)
+        if length > 0:
+            try:
+                self._ensure_row(row, length)
+            except MemoryError:
+                self.release(row)   # don't strand partially grabbed pages
+                raise
+            self.active[row] = True
+            self.lengths[row] = length
+        return True
+
+    def release(self, row: int) -> None:
+        ids = self.tables[row][self.tables[row] >= 0]
+        if len(ids):
+            self._dev_tables = None
+        self.free.extend(int(i) for i in ids)
+        self.tables[row] = -1
+        self.active[row] = False
+        self.frozen[row] = False
+        self.lengths[row] = 0
+
+    def ensure_lengths(self, new_lengths: np.ndarray) -> bool:
+        """Grow active rows to hold ``new_lengths`` tokens (called right
+        before each decode append; inactive rows are left table-less).
+
+        Decode-time growth never kills the pipeline: growth is clamped
+        to the per-sequence capacity (max_pages_per_seq * page), and a
+        pool-exhausted grow is skipped — in both cases the row's further
+        writes are dropped by the out-of-pool masked write and its
+        stored prefix keeps attending, degrading that sequence only.
+        ServingEngine bounds admission (prompt + max_new_tokens fits,
+        page budget with a growth reserve) so neither clamp is hit under
+        policy-admitted load; ``admit`` (admission time, synchronous)
+        still raises on exhaustion."""
+        cap = self.max_pages * self.page
+        changed = False
+        for row in np.nonzero(self.active & ~self.frozen)[0]:
+            try:
+                changed |= self._ensure_row(int(row),
+                                            min(int(new_lengths[row]), cap))
+            except MemoryError:
+                # degrade this row, don't crash — and freeze it: a later
+                # regrow would map pages over the positions whose writes
+                # were just dropped (stale-KV hole inside the valid mask)
+                self.frozen[row] = True
+            self.lengths[row] = int(new_lengths[row])
+        return changed
+
+    # -- accounting --------------------------------------------------------
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def resident_tokens(self) -> int:
+        """Tokens actually backed by pages (a clamped or exhausted grow
+        leaves lengths ahead of the allocated capacity)."""
+        caps = (self.tables >= 0).sum(axis=1) * self.page
+        return int(np.minimum(self.lengths, caps)[self.active].sum())
+
+    def tables_device(self) -> jnp.ndarray:
+        """Device copy of the block table, re-uploaded only after a host-
+        side mutation (a row grows a page every ``page`` steps, not every
+        layer of every step)."""
+        if self._dev_tables is None:
+            self._dev_tables = jnp.asarray(self.tables)
+        return self._dev_tables
+
+
+# ---------------------------------------------------------------------------
+# device-side page pools (one per attention layer per worker)
+# ---------------------------------------------------------------------------
+def init_page_pool(num_pages: int, page: int, hkv: int, dh: int,
+                   dtype=jnp.float32, quantized: bool = False) -> Dict:
+    """fp pool: {k, v}; int8 pool (§5.2 composition): {k_q, k_s, v_q, v_s}
+    with one fp32 scale per (token-slot, kv-head)."""
+    if quantized:
+        return {
+            "k_q": jnp.zeros((num_pages, page, hkv, dh), jnp.int8),
+            "k_s": jnp.zeros((num_pages, page, hkv), jnp.float32),
+            "v_q": jnp.zeros((num_pages, page, hkv, dh), jnp.int8),
+            "v_s": jnp.zeros((num_pages, page, hkv), jnp.float32),
+        }
+    return {"k": jnp.zeros((num_pages, page, hkv, dh), dtype),
+            "v": jnp.zeros((num_pages, page, hkv, dh), dtype)}
+
+
+def page_pool_token_bytes(pool: Dict) -> float:
+    """Bytes one token-slot occupies in the pool (all arrays)."""
+    per_page = sum(v[0].size * v[0].dtype.itemsize for v in pool.values())
+    page = next(iter(pool.values())).shape[1]
+    return per_page / page
+
+
+def write_token_paged(pool: Dict, tables, lengths, k_new, v_new) -> Dict:
+    """Append one token per row at position ``lengths[row]``.  Rows whose
+    target slot is unmapped (released but still engine-stepped) write to
+    an out-of-pool index and are dropped.  k_new/v_new [B, Hkv, Dh]."""
+    quantized = "k_q" in pool
+    any_pages = pool["k_q"] if quantized else pool["k"]
+    num_pages, page = any_pages.shape[0], any_pages.shape[1]
+    mp = tables.shape[1]
+    slot = (lengths % page).astype(jnp.int32)
+    pidx = (lengths // page).astype(jnp.int32)
+    pidx_c = jnp.minimum(pidx, mp - 1)
+    ids = jnp.take_along_axis(tables, pidx_c[:, None], axis=1)[:, 0]
+    ok = (ids >= 0) & (pidx < mp)
+    ids = jnp.where(ok, ids, num_pages)          # OOB => mode="drop"
+    out = dict(pool)
+    if quantized:
+        from repro.kernels import ops
+        k_q, k_s = ops.quantize_kv(k_new)
+        v_q, v_s = ops.quantize_kv(v_new)
+        out["k_q"] = pool["k_q"].at[ids, slot].set(k_q, mode="drop")
+        out["k_s"] = pool["k_s"].at[ids, slot].set(k_s, mode="drop")
+        out["v_q"] = pool["v_q"].at[ids, slot].set(v_q, mode="drop")
+        out["v_s"] = pool["v_s"].at[ids, slot].set(v_s, mode="drop")
+    else:
+        out["k"] = pool["k"].at[ids, slot].set(
+            k_new.astype(pool["k"].dtype), mode="drop")
+        out["v"] = pool["v"].at[ids, slot].set(
+            v_new.astype(pool["v"].dtype), mode="drop")
+    return out
+
+
+def _scatter_pages(pool: Dict, ids: jnp.ndarray, k_pages, v_pages) -> Dict:
+    """One scatter per pool array: ids [N] int32; k/v_pages
+    [N, page, Hkv, Dh] (page-chunked, zero-padded tails)."""
+    out = dict(pool)
+    if "k_q" in pool:
+        from repro.kernels import ops
+        k_q, k_s = ops.quantize_kv(k_pages)
+        v_q, v_s = ops.quantize_kv(v_pages)
+        out["k_q"] = pool["k_q"].at[ids].set(k_q)
+        out["k_s"] = pool["k_s"].at[ids].set(k_s)
+        out["v_q"] = pool["v_q"].at[ids].set(v_q)
+        out["v_s"] = pool["v_s"].at[ids].set(v_s)
+    else:
+        out["k"] = pool["k"].at[ids].set(k_pages.astype(pool["k"].dtype))
+        out["v"] = pool["v"].at[ids].set(v_pages.astype(pool["v"].dtype))
+    return out
+
+
+def _to_page_chunks(x, page: int):
+    """[S, ...] -> [ceil(S/page), page, ...] with a zero-padded tail."""
+    s = x.shape[0]
+    n = -(-s // page)
+    pad = n * page - s
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)).reshape(
+        n, page, *x.shape[1:])
+
+
+def dense_rows_to_pages(pool: Dict, alloc: PagedAllocator,
+                        rows: np.ndarray, r_state_rows: Dict) -> Dict:
+    """Convert dense attention-state rows {k, v, pos} (the prefill/ scatter
+    payload of the dense path) into allocated pages.  The dense slab's
+    first L slots hold tokens 0..L-1 in order (prefill writes them so);
+    L is derived from the stored positions.  All rows are collected into
+    ONE scatter per pool array — admission cost does not multiply the
+    full-pool copy by the number of admitted rows."""
+    from repro.core.decompose import attn_state_lengths
+    lens = np.asarray(attn_state_lengths(r_state_rows))
+    pos = np.asarray(r_state_rows["pos"])
+    any_pages = pool["k_q"] if "k_q" in pool else pool["k"]
+    page = any_pages.shape[1]
+    ids_all, ks, vs = [], [], []
+    for i, row in enumerate(rows):
+        length = int(lens[i])
+        if length and int(pos[i].max()) + 1 != length:
+            raise ValueError(
+                "paged conversion requires an unrotated dense prefix "
+                "(slot i == token i); rotated ring payloads (windowed "
+                "attention, prompt > cache_len) must stay dense")
+        alloc.admit(int(row), length)
+        if length:
+            n = -(-length // page)
+            ids_all.append(alloc.tables[int(row), :n])
+            ks.append(_to_page_chunks(r_state_rows["k"][i, :length], page))
+            vs.append(_to_page_chunks(r_state_rows["v"][i, :length], page))
+    if not ids_all:
+        return pool
+    ids = jnp.asarray(np.concatenate(ids_all), jnp.int32)
+    return _scatter_pages(pool, ids, jnp.concatenate(ks, axis=0),
+                          jnp.concatenate(vs, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# the parameter-free R-Part op over (pool, tables)
+# ---------------------------------------------------------------------------
+def r_attention_paged_tables(r_in: Dict, pool: Dict, tables, *,
+                             window: int = 0, softcap: float = 0.0,
+                             use_kernel: str = "auto") -> Tuple[Dict, Dict]:
+    """Drop-in for decompose.r_attention with block-table storage: append
+    the new (k, v) at ``lengths``, attend via the paged kernel dispatch.
+    r_in: q/k/v [B,1,...], lengths [B]; returns ({"o": [B,1,Hq,Dh]}, pool).
+    """
+    lengths = r_in["lengths"]
+    pool = write_token_paged(pool, tables, lengths,
+                             r_in["k"][:, 0], r_in["v"][:, 0])
+    from repro.kernels import ops
+    if "k_q" in pool:
+        o = ops.paged_decode_attention_int8(
+            r_in["q"][:, 0], pool["k_q"], pool["k_s"], pool["v_q"],
+            pool["v_s"], tables, lengths, window=window, softcap=softcap,
+            use_kernel=use_kernel)
+    else:
+        o = ops.paged_decode_attention(
+            r_in["q"][:, 0], pool["k"], pool["v"], tables, lengths,
+            window=window, softcap=softcap, use_kernel=use_kernel)
+    return {"o": o[:, None]}, pool

@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt).  When it
+is absent the property tests must still *collect* — a missing fuzzer must
+not take the deterministic tests in the same module down with it.  Import
+``given/settings/st`` from here instead of from hypothesis: with
+hypothesis installed they are the real thing; without it, ``@given``
+replaces the test with a skip and ``st``/``settings`` become inert stubs
+so module-level strategy expressions still evaluate.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy-building call chain at collection time."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def __or__(self, other):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -4,7 +4,7 @@ softmax attention, under random shapes, GQA ratios, masks and windows."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels import ref as KR
