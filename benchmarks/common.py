@@ -1,10 +1,14 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def bench_model(arch="granite-3-8b", layers=2, d_model=128, vocab=512):
@@ -28,3 +32,50 @@ def timeit(fn, warmup=2, iters=5):
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+class RowCollector:
+    """print_fn for bench modules that tees CSV rows into a list of
+    dicts, so the harness can emit machine-readable results alongside
+    the human CSV."""
+
+    def __init__(self, echo=print):
+        self.echo = echo
+        self.rows = []
+
+    def __call__(self, line) -> None:
+        if self.echo is not None:
+            self.echo(line)
+        line = str(line).strip()
+        if not line or line.startswith("#") \
+                or line.startswith("name,us_per_call"):
+            return
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            return
+        try:
+            us = float(parts[1])
+        except ValueError:
+            return
+        self.rows.append({"name": parts[0], "us_per_call": us,
+                          "derived": parts[2] if len(parts) > 2 else ""})
+
+
+def write_bench_json(bench: str, rows, *, what: str = "",
+                     duration_s: float = 0.0, error: str = "",
+                     root: str = REPO_ROOT) -> str:
+    """Emit BENCH_<bench>.json at the repo root — the perf-trajectory
+    artifact CI uploads per run."""
+    path = os.path.join(root, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": bench,
+            "what": what,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "duration_s": round(duration_s, 3),
+            "ok": not error,
+            "error": error,
+            "rows": list(rows),
+        }, f, indent=1)
+        f.write("\n")
+    return path

@@ -1,7 +1,9 @@
 """Benchmark harness entry point — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes a
+machine-readable ``BENCH_<name>.json`` per module at the repo root (the
+perf trajectory CI uploads as an artifact).
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--no-json]
 """
 from __future__ import annotations
 
@@ -23,14 +25,19 @@ BENCHES = [
     ("fig8", "benchmarks.bench_fig8", "Fig. 8 layer-count linearity"),
     ("kernels", "benchmarks.bench_kernels", "§5.1/5.2 R-Part kernels"),
     ("paged", "benchmarks.bench_paged", "Paged vs dense R-worker KV"),
+    ("fleet", "benchmarks.bench_fleet", "Fleet skew/rebalance/recovery"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
 ]
 
 
 def main() -> None:
+    from benchmarks.common import RowCollector, write_bench_json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<name>.json files")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
@@ -39,13 +46,21 @@ def main() -> None:
             continue
         print(f"# --- {name}: {what}", flush=True)
         t0 = time.time()
+        collector = RowCollector()
+        error = ""
         try:
             import importlib
-            importlib.import_module(mod).run()
+            importlib.import_module(mod).run(print_fn=collector)
         except Exception:
             failures += 1
-            print(f"{name}_FAILED,0,{traceback.format_exc(limit=3)!r}")
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            error = traceback.format_exc(limit=3)
+            print(f"{name}_FAILED,0,{error!r}")
+        dt = time.time() - t0
+        if not args.no_json:
+            path = write_bench_json(name, collector.rows, what=what,
+                                    duration_s=dt, error=error)
+            print(f"# wrote {os.path.relpath(path)}", flush=True)
+        print(f"# {name} done in {dt:.1f}s", flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark module(s) failed")
 

@@ -46,8 +46,10 @@ tokens = jnp.asarray(np.stack([prompt, prompt[::-1]]))
 
 ref = ColocatedEngine(params, cfg, batch=B, cache_len=S + GEN + 1)
 ref.load_prefill(tokens, jnp.full((B,), S))
+# one R-worker per micro-batch row here (batch 2 / 2 micro-batches =
+# 1 row each); more workers than rows is now a hard error
 eng = HeteroPipelineEngine(params, cfg, batch=B, cache_len=S + GEN + 1,
-                           num_r_workers=2, num_microbatches=2, kv_chunk=64)
+                           num_r_workers=1, num_microbatches=2, kv_chunk=64)
 eng.load_prefill(0, tokens[:1], jnp.asarray([S]))
 eng.load_prefill(1, tokens[1:], jnp.asarray([S]))
 

@@ -118,7 +118,9 @@ class RWorker(threading.Thread):
                  kv_chunk: int = 1024, quantized: bool = False,
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 max_pages_per_seq: Optional[int] = None):
+                 max_pages_per_seq: Optional[int] = None,
+                 profile: Any = None, slowdown: float = 1.0,
+                 sim_row_cost: float = 0.0):
         super().__init__(daemon=True, name=f"r-worker-{wid}")
         self.wid, self.cfg, self.lo, self.hi = wid, cfg, lo, hi
         self.kv_chunk = kv_chunk
@@ -127,6 +129,9 @@ class RWorker(threading.Thread):
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
         self.num_pages = num_pages
+        self.profile = profile                   # fleet.WorkerProfile or None
+        self.slowdown = max(1.0, float(slowdown))  # simulated skew (tests)
+        self.sim_row_cost = max(0.0, float(sim_row_cost))  # s/row/call
         self._cache_len = 0                      # set at first state load
         self.state: Dict[int, Any] = {}          # layer -> r_state slice
         self.paged_keys: set = set()             # layer keys stored paged
@@ -136,15 +141,18 @@ class RWorker(threading.Thread):
         self.outq: "queue.Queue" = queue.Queue()
         self._jit_cache: Dict[Tuple[str, int], Any] = {}
         self.busy_time = 0.0
+        self._killed = False
 
     # -- paged storage helpers ----------------------------------------------
     def _pageable(self, st) -> bool:
         # Windowed attention keeps the dense slab: its cache is a rotated
         # ring of the last `window` tokens, which the paged layout's
         # derived (contiguous-from-0) positions cannot represent — and
-        # paging a bounded window buys nothing anyway.
+        # paging a bounded window buys nothing anyway.  A migration wire
+        # payload from a quantized worker carries k_q instead of k.
         return (self.paged and self.cfg.window == 0 and isinstance(st, dict)
-                and "k" in st and "pos" in st and "xk" not in st)
+                and ("k" in st or "k_q" in st) and "pos" in st
+                and "xk" not in st)
 
     def _alloc(self, mb: int):
         from repro.serving import paged_cache as PC
@@ -161,10 +169,13 @@ class RWorker(threading.Thread):
         mb = layer // self.cfg.num_layers
         alloc = self._alloc(mb)
         if layer not in self.paged_keys:
-            hkv, dh = r_state_rows["k"].shape[2:]
+            ref = r_state_rows["k"] if "k" in r_state_rows \
+                else r_state_rows["k_q"]
+            hkv, dh = ref.shape[2:]
+            dtype = ref.dtype if "k" in r_state_rows else jnp.float32
             self.state[layer] = PC.init_page_pool(
                 alloc.num_pages, self.page_size, hkv, dh,
-                dtype=r_state_rows["k"].dtype, quantized=self.quantized)
+                dtype=dtype, quantized=self.quantized)
             self.paged_keys.add(layer)
             self._first_paged[mb] = None         # recompute lazily
         self.state[layer] = PC.dense_rows_to_pages(
@@ -188,19 +199,36 @@ class RWorker(threading.Thread):
         return total
 
     # -- state loading ------------------------------------------------------
+    def _coerce_storage(self, st):
+        """(De)quantize an attention payload to this worker's storage
+        format.  Wire payloads from a quantized worker carry int8+scales
+        (k_q/...); a quantized destination keeps them verbatim (no
+        re-quantization error), an fp destination dequantizes."""
+        if not isinstance(st, dict):
+            return st
+        if self.quantized and "k" in st:
+            from repro.serving.kv_cache import quantize_attn_state
+            return quantize_attn_state(st)
+        if not self.quantized and "k_q" in st:
+            from repro.serving.kv_cache import dequantize_attn_state
+            return dequantize_attn_state(st)
+        return st
+
     def load_state(self, layer: int, r_state_slice) -> None:
         if self._pageable(r_state_slice):
-            n = r_state_slice["k"].shape[0]
-            self._cache_len = r_state_slice["k"].shape[1]
+            if "k_q" in r_state_slice and not self.quantized:
+                from repro.serving.kv_cache import dequantize_attn_state
+                r_state_slice = dequantize_attn_state(r_state_slice)
+            ref = r_state_slice["k"] if "k" in r_state_slice \
+                else r_state_slice["k_q"]
+            self._cache_len = ref.shape[1]
             # an existing pool is reused across reloads: stale pages past
             # a row's re-admitted length are unreachable (derived
             # positions + lengths mask), so no zero-fill is needed
-            self._to_pages(layer, np.arange(n), r_state_slice)
+            self._to_pages(layer, np.arange(ref.shape[0]), r_state_slice)
             return
-        if self.quantized and "k" in r_state_slice:
-            from repro.serving.kv_cache import quantize_attn_state
-            r_state_slice = quantize_attn_state(r_state_slice)
-        self.state[layer] = r_state_slice
+        r_state_slice = self._coerce_storage(r_state_slice)
+        self.state[layer] = jax.tree.map(jnp.asarray, r_state_slice)
 
     def write_rows(self, layer: int, rows: np.ndarray, r_state_rows) -> None:
         """Continuous batching: replace finished rows with fresh prefixes."""
@@ -212,6 +240,65 @@ class RWorker(threading.Thread):
             r_state_rows = quantize_attn_state(r_state_rows)
         self.state[layer] = jax.tree.map(
             lambda c, n: c.at[rows].set(n), self.state[layer], r_state_rows)
+
+    # -- migration wire format (fleet live migration / KV snapshots) --------
+    def export_rows(self, layer: int, local_rows: np.ndarray):
+        """``local_rows``' r_state as host (numpy) arrays in the *dense
+        wire format*: exactly what a dense worker stores per row —
+        {k, v, pos} (or int8 {k_q, k_s, v_q, v_s, pos} from a quantized
+        worker), recurrent {h}, etc.  Paged rows are gathered back into
+        contiguous ``[row, cache_len, ...]`` slabs with derived
+        positions, so the payload is storage-independent: any worker can
+        re-install it via ``load_state`` whatever its own backend."""
+        local_rows = np.asarray(local_rows)
+        if layer in self.paged_keys:
+            return self._pages_to_dense(layer, local_rows)
+        return jax.tree.map(lambda x: np.asarray(x)[local_rows],
+                            self.state[layer])
+
+    def _pages_to_dense(self, layer: int, rows: np.ndarray):
+        alloc = self.allocators[layer // self.cfg.num_layers]
+        pool = self.state[layer]
+        page, cap = self.page_size, self._cache_len
+        host = {k: np.asarray(v) for k, v in pool.items()}
+        out = {k: np.zeros((len(rows), cap) + v.shape[2:], v.dtype)
+               for k, v in host.items()}
+        pos = np.full((len(rows), cap), -1, np.int32)
+        for i, row in enumerate(rows):
+            row = int(row)
+            if not alloc.active[row]:
+                continue
+            mapped = int((alloc.tables[row] >= 0).sum())
+            # a degraded (pool-exhausted) row exports its stored prefix
+            length = min(int(alloc.lengths[row]), mapped * page, cap)
+            if length <= 0:
+                continue
+            n_pg = -(-length // page)
+            ids = alloc.tables[row, :n_pg]
+            for k, v in host.items():
+                out[k][i, :length] = v[ids].reshape(
+                    n_pg * page, *v.shape[2:])[:length]
+            pos[i, :length] = np.arange(length)
+        out["pos"] = pos
+        return out
+
+    def reassign(self, lo: int, hi: int) -> None:
+        """Adopt a new row slice: drop ALL row-indexed storage (state
+        slabs, page pools, allocators).  The caller (engine live
+        migration) re-installs every layer's rows via ``load_state``
+        right after; must only run between decode steps."""
+        self.lo, self.hi = int(lo), int(hi)
+        self.state.clear()
+        self.paged_keys.clear()
+        self.allocators.clear()
+        self._first_paged.clear()
+
+    def kill(self) -> None:
+        """Simulate an abrupt worker crash (tests/benchmarks): the thread
+        exits without draining its queue.  ``is_alive()`` turning False
+        is what the fleet health check detects."""
+        self._killed = True
+        self.inq.put(None)
 
     def _fn(self, kind: str, phase: int):
         key = (kind, phase)
@@ -264,7 +351,7 @@ class RWorker(threading.Thread):
         import time
         while True:
             item = self.inq.get()
-            if item is None:
+            if item is None or self._killed:
                 return
             tag, layer, kind, phase, r_in = item
             try:
@@ -275,7 +362,19 @@ class RWorker(threading.Thread):
                     r_out, new_state = self._fn(kind, phase)(
                         r_in, self.state[layer])
                 jax.block_until_ready(r_out)
-                self.busy_time += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                if self.slowdown > 1.0:
+                    # simulated heterogeneity: a worker with 1/slowdown
+                    # the bandwidth takes slowdown * dt for the same rows
+                    time.sleep(dt * (self.slowdown - 1.0))
+                    dt *= self.slowdown
+                if self.sim_row_cost > 0.0:
+                    # deterministic bandwidth-bound service time: streams
+                    # its rows' KV at sim_row_cost seconds per row
+                    extra = self.sim_row_cost * (self.hi - self.lo)
+                    time.sleep(extra)
+                    dt += extra
+                self.busy_time += dt
                 self.state[layer] = new_state
                 self.outq.put((tag, r_out))
             except Exception as e:  # surface to the S-worker, don't deadlock
@@ -303,8 +402,21 @@ class HeteroPipelineEngine:
                  cache_len: int, num_r_workers: int = 2,
                  num_microbatches: int = 2, kv_chunk: int = 1024,
                  quantized_kv: bool = False, paged_kv: bool = False,
-                 page_size: int = 16, pages_per_worker: Optional[int] = None):
-        assert batch % num_microbatches == 0
+                 page_size: int = 16, pages_per_worker: Optional[int] = None,
+                 fleet: Any = None):
+        if num_microbatches < 1:
+            raise ValueError(
+                f"num_microbatches must be >= 1, got {num_microbatches}")
+        if batch < 1 or cache_len < 1:
+            raise ValueError(
+                f"batch ({batch}) and cache_len ({cache_len}) must be >= 1")
+        if batch % num_microbatches != 0:
+            raise ValueError(
+                f"batch ({batch}) must be divisible by num_microbatches "
+                f"({num_microbatches}) — every micro-batch decodes the same "
+                f"number of rows; round batch up to "
+                f"{-(-batch // num_microbatches) * num_microbatches} or "
+                f"change num_microbatches")
         self.params, self.cfg = params, cfg
         self.batch = batch
         self.mb_size = batch // num_microbatches
@@ -314,23 +426,43 @@ class HeteroPipelineEngine:
         self.page_size = page_size
         self.layers = per_layer_params(params, cfg)
         self.num_layers = cfg.num_layers
-        # contiguous batch slices per worker WITHIN a micro-batch
-        bounds = np.linspace(0, self.mb_size, num_r_workers + 1).astype(int)
-        self.slices = [(int(bounds[i]), int(bounds[i + 1]))
-                       for i in range(num_r_workers)
-                       if bounds[i + 1] > bounds[i]]
+        self.fleet = fleet
         # pages_per_worker sizes ONE pool = one (attn layer, micro-batch)
         # of one worker — the same per-layer-per-row convention as
         # cache_len (see RWorker docstring for the total footprint)
         max_pages = -(-cache_len // page_size)
-        self.workers = [RWorker(w, cfg, lo, hi, kv_chunk,
-                                quantized=quantized_kv, paged=paged_kv,
-                                page_size=page_size,
-                                num_pages=pages_per_worker,
-                                max_pages_per_seq=max_pages)
-                        for w, (lo, hi) in enumerate(self.slices)]
+        self._worker_kwargs = dict(
+            kv_chunk=kv_chunk, quantized=quantized_kv, paged=paged_kv,
+            page_size=page_size, num_pages=pages_per_worker,
+            max_pages_per_seq=max_pages)
+        if fleet is not None:
+            # the fleet owns worker construction: profiles -> planned
+            # (possibly uneven) partition -> RWorker instances
+            self.workers, self.slices = fleet.spawn_workers(
+                cfg, self.mb_size, self._worker_kwargs)
+        else:
+            if num_r_workers < 1:
+                raise ValueError(
+                    f"num_r_workers must be >= 1, got {num_r_workers}")
+            if num_r_workers > self.mb_size:
+                raise ValueError(
+                    f"num_r_workers ({num_r_workers}) exceeds the "
+                    f"micro-batch size ({self.mb_size} = batch "
+                    f"{batch} / {num_microbatches} micro-batches) — every "
+                    f"R-worker needs at least one row; lower num_r_workers "
+                    f"or raise batch")
+            # contiguous batch slices per worker WITHIN a micro-batch
+            bounds = np.linspace(0, self.mb_size,
+                                 num_r_workers + 1).astype(int)
+            self.slices = [(int(bounds[i]), int(bounds[i + 1]))
+                           for i in range(num_r_workers)]
+            self.workers = [RWorker(w, cfg, lo, hi,
+                                    **self._worker_kwargs)
+                            for w, (lo, hi) in enumerate(self.slices)]
         for w in self.workers:
             w.start()
+        if fleet is not None:
+            fleet.attach(self)
         # S-side per-layer state (small convs), per micro-batch
         self.s_states: List[List[Any]] = [
             [None] * self.num_layers for _ in range(self.num_mb)]
@@ -490,6 +622,157 @@ class HeteroPipelineEngine:
         occupancy)."""
         return sum(w.paged_resident_bytes() for w in self.workers)
 
+    # -- fleet: live migration + failure recovery ---------------------------
+    def zero_r_state(self) -> List[Any]:
+        """Fresh (empty) full-micro-batch R-state, one entry per layer —
+        the recovery filler for rows that cannot be restored (the serving
+        layer then re-prefills the live ones).  Emitted in the fleet's
+        wire format: int8+scales when the workers are quantized, so it
+        concatenates cleanly with surviving workers' exports."""
+        state = M.init_decode_state(self.cfg, self.mb_size, self.cache_len)
+        layer_states = per_layer_state(state, self.cfg)
+        out = []
+        for li, (kind, _) in enumerate(self.layers):
+            r_st = D.split_block_state(kind, layer_states[li])[0]
+            if self._worker_kwargs.get("quantized") \
+                    and isinstance(r_st, dict) and "k" in r_st:
+                from repro.serving.kv_cache import quantize_attn_state
+                r_st = quantize_attn_state(r_st)
+            out.append(r_st)
+        return out
+
+    def _assemble_rows(self, lkey: int, lo: int, hi: int, old_spans,
+                       exports: Dict[int, Any], lost):
+        """Stitch wire-format rows [lo, hi) of one layer key from the
+        exporting old owners, falling back to the ``lost`` payload for
+        rows no surviving worker held (failure recovery)."""
+        pieces = []
+        cur = lo
+        while cur < hi:
+            src = next(((s_lo, s_hi, exports[wid])
+                        for wid, s_lo, s_hi in old_spans
+                        if s_lo <= cur < s_hi and wid in exports), None)
+            if src is not None:
+                s_lo, s_hi, wire = src
+                take = min(hi, s_hi)
+                pieces.append(jax.tree.map(
+                    lambda x: x[cur - s_lo:take - s_lo], wire))
+            else:
+                nxt = [s_lo for _, s_lo, _ in old_spans if s_lo > cur]
+                take = min(hi, min(nxt) if nxt else hi)
+                if lost is None or lkey not in lost:
+                    raise RuntimeError(
+                        f"rows [{cur}, {take}) of layer key {lkey} have no "
+                        f"surviving owner and no lost-rows payload — pass "
+                        f"a KV snapshot or zero_r_state() filler")
+                pieces.append(jax.tree.map(lambda x: x[cur:take],
+                                           lost[lkey]))
+            cur = take
+        if len(pieces) == 1:
+            return pieces[0]
+        return jax.tree.map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0),
+            *pieces)
+
+    def apply_partition(self, new_slices, workers=None, lost=None) -> int:
+        """Live-migrate R-state onto a new contiguous partition of the
+        micro-batch rows (the fleet's rebalance/recovery primitive).
+
+        ``new_slices``: one (lo, hi) per entry of ``workers`` (defaults
+        to the current worker list), in order, covering [0, mb_size).
+        Workers whose slice is unchanged are untouched; the rest export
+        their rows in the dense wire format, adopt the new slice, and
+        re-install — in-flight micro-batch state (KV slabs, page tables,
+        recurrent states) survives the move.  Rows owned by a vanished
+        worker are taken from ``lost`` ({lkey: full-micro-batch wire
+        tree}, e.g. a KV snapshot).  A worker assigned zero rows is
+        stopped and dropped (mirrors the constructor validation).
+
+        Must be called between decode steps.  Returns the number of
+        (row, micro-batch) assignments that changed owner."""
+        workers = list(self.workers) if workers is None else list(workers)
+        new_slices = [(int(lo), int(hi)) for lo, hi in new_slices]
+        if len(workers) != len(new_slices):
+            raise ValueError(f"{len(workers)} workers vs "
+                             f"{len(new_slices)} slices")
+        dropped = [w for w, (lo, hi) in zip(workers, new_slices) if hi <= lo]
+        pairs = [(w, s) for w, s in zip(workers, new_slices) if s[1] > s[0]]
+        workers = [w for w, _ in pairs]
+        new_slices = [s for _, s in pairs]
+        cur = 0
+        for lo, hi in new_slices:
+            if lo != cur:
+                raise ValueError(
+                    f"partition {new_slices} is not a contiguous cover of "
+                    f"[0, {self.mb_size})")
+            cur = hi
+        if cur != self.mb_size:
+            raise ValueError(
+                f"partition {new_slices} covers [0, {cur}), micro-batch "
+                f"has {self.mb_size} rows")
+
+        old_owner = {}
+        for w in workers:
+            for r in range(w.lo, w.hi):
+                old_owner[r] = id(w)
+        moved = sum(1 for w, (lo, hi) in zip(workers, new_slices)
+                    for r in range(lo, hi) if old_owner.get(r) != id(w))
+
+        changed = [w for w, s in zip(workers, new_slices)
+                   if (w.lo, w.hi) != s]
+        changed_ids = {id(w) for w in changed}
+        # a worker dropped to zero rows is still alive and must export
+        # its rows before it goes
+        sources = changed + dropped
+        old_spans = [(id(w), w.lo, w.hi) for w in sources]
+        lkeys = sorted({k for w in workers + dropped for k in w.state}
+                       | (set(lost) if lost else set()))
+        exports: Dict[int, Dict[int, Any]] = {lk: {} for lk in lkeys}
+        for w in sources:
+            for lk in lkeys:
+                if lk in w.state:
+                    exports[lk][id(w)] = w.export_rows(
+                        lk, np.arange(w.hi - w.lo))
+        for w, s in zip(workers, new_slices):
+            if id(w) in changed_ids:
+                w.reassign(*s)
+        for w in dropped:
+            w.stop()
+        for lk in lkeys:
+            for w, (lo, hi) in zip(workers, new_slices):
+                if id(w) not in changed_ids:
+                    continue
+                w.load_state(lk, self._assemble_rows(
+                    lk, lo, hi, old_spans, exports[lk], lost))
+        self.workers = workers
+        self.slices = new_slices
+        return moved * self.num_mb
+
+    def remove_worker(self, widx: int, new_slices=None, lost=None):
+        """Failure path: drop worker ``widx``, repartition the survivors
+        (even split unless the fleet planner supplies ``new_slices``),
+        and refill its rows from ``lost`` wire payloads (KV snapshot) or
+        fresh zero state (the serving layer re-prefills live rows).
+        Returns the removed worker."""
+        if len(self.workers) <= 1:
+            raise RuntimeError(
+                "cannot remove the last R-worker — no survivor can adopt "
+                "its rows")
+        dead = self.workers[widx]
+        survivors = self.workers[:widx] + self.workers[widx + 1:]
+        if new_slices is None:
+            bounds = np.linspace(0, self.mb_size,
+                                 len(survivors) + 1).astype(int)
+            new_slices = [(int(bounds[i]), int(bounds[i + 1]))
+                          for i in range(len(survivors))]
+        if lost is None:
+            zeros = self.zero_r_state()
+            keys = {k for w in self.workers for k in w.state}
+            lost = {lk: zeros[lk % self.num_layers] for lk in keys}
+        dead.kill()
+        self.apply_partition(new_slices, workers=survivors, lost=lost)
+        return dead
+
     def close(self) -> None:
         for w in self.workers:
             w.stop()
@@ -506,6 +789,9 @@ class ColocatedEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  cache_len: int):
+        if batch < 1 or cache_len < 1:
+            raise ValueError(
+                f"batch ({batch}) and cache_len ({cache_len}) must be >= 1")
         self.params, self.cfg = params, cfg
         self.cache_len = cache_len
         self._prefill = jax.jit(partial(M.prefill, cfg=cfg,

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.config import ModelConfig
 
@@ -221,6 +221,78 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
         out["paged_round_up"] = paged_round_up_factor(max(1, seq_len // 2),
                                                       page)
     return out
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-fleet variants (mixed R-worker hardware, fleet/ planner)
+# ---------------------------------------------------------------------------
+def fleet_rates(cfg: ModelConfig, hw_rs: Sequence[Hardware],
+                bytes_per_el: int = 2, page: int = 0) -> List[float]:
+    """Per-worker R-Part token rates 1/R_i (cached tokens per second per
+    block) for a mixed fleet — the quantity row assignment should be
+    proportional to."""
+    return [1.0 / r_per_token(cfg, hw, bytes_per_el, page) for hw in hw_rs]
+
+
+def fleet_shares(cfg: ModelConfig, hw_rs: Sequence[Hardware],
+                 bytes_per_el: int = 2, page: int = 0) -> List[float]:
+    """Normalized work shares of a mixed fleet (sum to 1)."""
+    rates = fleet_rates(cfg, hw_rs, bytes_per_el, page)
+    tot = sum(rates)
+    return [r / tot for r in rates]
+
+
+def optimal_workers_hetero(cfg: ModelConfig, hw_s: Hardware,
+                           hw_rs: Sequence[Hardware], b: int, seq_len: int,
+                           bytes_per_el: int = 2,
+                           t_measured: Optional[Callable[[int], float]] = None,
+                           page: int = 0) -> int:
+    """eq. (11) generalized to a mixed pool: the smallest prefix of
+    ``hw_rs`` whose aggregate rate Σ 1/R_i covers the steady-state R-Part
+    demand 𝓑·S/(2·𝕋(𝓑)).  If the listed pool is too small, the count
+    extrapolates with the pool's LAST worker type (the marginal worker
+    you would add more of)."""
+    if not hw_rs:
+        raise ValueError("optimal_workers_hetero needs a non-empty pool")
+    t_b = t_measured(b) if t_measured else t_of_b(cfg, hw_s, b, bytes_per_el)
+    demand = b * seq_len / (2.0 * t_b)
+    have = 0.0
+    for i, hw in enumerate(hw_rs):
+        if have >= demand:
+            return max(1, i)
+        have += 1.0 / r_per_token(cfg, hw, bytes_per_el, page)
+    if have >= demand:
+        return len(hw_rs)
+    tail_rate = 1.0 / r_per_token(cfg, hw_rs[-1], bytes_per_el, page)
+    return len(hw_rs) + math.ceil((demand - have) / tail_rate)
+
+
+def plan_hetero(cfg: ModelConfig, hw_s: Hardware,
+                hw_rs: Sequence[Hardware], seq_len: int,
+                latency_slo: Optional[float] = None,
+                worker_mem: float = 256e9, page: int = 0) -> Dict[str, object]:
+    """§4.3 planning for a heterogeneous fleet: batch 𝓑 as in
+    :func:`plan`, worker count from :func:`optimal_workers_hetero`, plus
+    the proportional work shares the partition planner should apply to
+    the workers actually used."""
+    if latency_slo is not None:
+        b = max_batch_for_slo(cfg, hw_s, seq_len, latency_slo)
+    else:
+        b = knee_batch(cfg, hw_s)
+    n = optimal_workers_hetero(cfg, hw_s, hw_rs, b, seq_len, page=page)
+    used = list(hw_rs[:min(n, len(hw_rs))])
+    shares = fleet_shares(cfg, used, page=page)
+    p_mem = min_workers_memory(cfg, b, seq_len, worker_mem, page=page)
+    return {
+        "batch": b,
+        "workers": n,
+        "workers_mem_min": p_mem,
+        "shares": shares,
+        "fleet_rate": sum(fleet_rates(cfg, used, page=page)),
+        "t_of_b": t_of_b(cfg, hw_s, b),
+        "e_of_b": e_of_b(cfg, hw_s, b),
+        "tokens_per_s": b / (2 * cfg.num_layers * t_of_b(cfg, hw_s, b)),
+    }
 
 
 # ---------------------------------------------------------------------------

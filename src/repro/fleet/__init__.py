@@ -1,0 +1,25 @@
+"""R-worker fleet management: heterogeneity-aware partition planning,
+live KV migration, straggler rebalancing, and failure recovery.
+
+Entry point::
+
+    from repro.fleet import FleetManager, skewed_fleet
+    fleet = FleetManager(skewed_fleet((2.0, 1.0)), cfg=cfg,
+                         rebalance=True, snapshot_interval=8)
+    eng = HeteroPipelineEngine(params, cfg, batch=8, cache_len=256,
+                               fleet=fleet)
+
+See docs/ARCHITECTURE.md ("Fleet management") for the data flow.
+"""
+from repro.fleet.manager import FleetManager
+from repro.fleet.planner import PartitionPlanner, apportion_rows
+from repro.fleet.profile import WorkerProfile, skewed_fleet, uniform_fleet
+from repro.fleet.rebalancer import Rebalancer
+from repro.fleet.recovery import KVSnapshotStore, dead_workers
+from repro.fleet.telemetry import FleetEvent, FleetTelemetry
+
+__all__ = [
+    "FleetManager", "PartitionPlanner", "apportion_rows", "WorkerProfile",
+    "skewed_fleet", "uniform_fleet", "Rebalancer", "KVSnapshotStore",
+    "dead_workers", "FleetEvent", "FleetTelemetry",
+]

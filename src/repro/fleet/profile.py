@@ -1,0 +1,65 @@
+"""Per-worker capability profiles for a heterogeneous R-worker fleet.
+
+FastDecode §5 handles "efficiency challenges brought by heterogeneity at
+intra-device and inter-device scopes using scheduling and performance
+modeling".  A :class:`WorkerProfile` is the inter-device half of that:
+the planner's description of ONE R-worker's relative capabilities —
+memory bandwidth (the R-Part is bandwidth-bound), FLOPs, and page-pool
+capacity — expressed as scale factors over a baseline
+:class:`repro.core.perfmodel.Hardware`, or as explicit hardware.
+
+``sim_slowdown`` exists for this CPU-only container: the host threads
+that stand in for remote R-workers all run at the same real speed, so
+benchmarks/tests inject a simulated slowdown to create the skew the
+planner/rebalancer must handle.  A real deployment would leave it at 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence
+
+from repro.core.perfmodel import Hardware, TPU_V5E
+
+
+@dataclass(frozen=True)
+class WorkerProfile:
+    """Planner-visible description of one R-worker.
+
+    Scale factors are relative to the fleet's baseline hardware (an
+    explicit ``hardware`` entry overrides them).  ``page_pool_scale``
+    scales an explicitly sized page pool (``pages_per_worker``); the
+    default row-proportional pool sizing already tracks the planned
+    partition and needs no scaling.
+    """
+    name: str = "r-worker"
+    mem_bw_scale: float = 1.0
+    flops_scale: float = 1.0
+    page_pool_scale: float = 1.0
+    # test/bench-only simulated skew (see module docstring):
+    # sim_slowdown multiplies the worker's real compute time (a slower
+    # device doing the same work); sim_row_cost adds a deterministic
+    # seconds-per-row service time (a bandwidth-bound worker streaming
+    # its rows' KV) — the latter is robust on noisy shared-CPU hosts
+    sim_slowdown: float = 1.0
+    sim_row_cost: float = 0.0
+    hardware: Optional[Hardware] = None
+
+    def scaled_hw(self, base: Hardware = TPU_V5E) -> Hardware:
+        """The Hardware this profile describes, for perfmodel queries."""
+        if self.hardware is not None:
+            return self.hardware
+        return replace(base, name=f"{base.name}:{self.name}",
+                       flops=base.flops * self.flops_scale,
+                       mem_bw=base.mem_bw * self.mem_bw_scale)
+
+
+def uniform_fleet(n: int, **kw) -> List[WorkerProfile]:
+    """``n`` identical workers (the homogeneous baseline)."""
+    return [WorkerProfile(name=f"r{i}", **kw) for i in range(n)]
+
+
+def skewed_fleet(bw_scales: Sequence[float], **kw) -> List[WorkerProfile]:
+    """One worker per entry, bandwidth-scaled — e.g. ``(2.0, 1.0)`` is
+    the 2:1 two-worker fleet of the acceptance criteria."""
+    return [WorkerProfile(name=f"r{i}", mem_bw_scale=float(s), **kw)
+            for i, s in enumerate(bw_scales)]

@@ -1,0 +1,73 @@
+"""Failure detection and KV recovery for the R-worker fleet.
+
+DéjàVu (arXiv 2403.01876) argues disaggregated serving must treat KV
+state as streamable/replicable: an attention worker that dies must not
+cost the whole batch its progress.  Two recovery sources are supported:
+
+* ``KVSnapshotStore`` — a periodic host-side copy of every worker's
+  R-state in the dense wire format (``RWorker.export_rows``).  Restoring
+  from it is exact when the snapshot is current (taken after the last
+  decode step) and degrades gracefully otherwise: the restored rows
+  simply miss the tokens generated since the snapshot (their positions
+  stay masked), so generation continues coherently but approximately.
+* re-prefill — the serving layer recomputes lost rows exactly by
+  re-running prefill on prompt + generated-so-far (it owns the token
+  history; see ``ServingEngine._replay_rows``).  Exact, costs one
+  prefill; the snapshot path costs host memory instead.
+
+Health checking is deliberately boring: an R-worker here is a thread, so
+death == ``not is_alive()``; a remote deployment would swap in a
+heartbeat with the same interface.  Failures are detected *between*
+decode steps — a worker dying mid-step surfaces as that step's collect
+timeout, after which the same recovery path applies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def dead_workers(engine) -> List[int]:
+    """Indices (into ``engine.workers``) of workers that died."""
+    return [i for i, w in enumerate(engine.workers) if not w.is_alive()]
+
+
+class KVSnapshotStore:
+    """Periodic host copy of the fleet's full R-state, keyed by layer key
+    (micro-batch * num_layers + layer), each value covering the whole
+    micro-batch in the dense wire format — so a restore works whatever
+    partition the survivors adopt."""
+
+    def __init__(self, interval: int = 0):
+        self.interval = int(interval)
+        self.step = -1                       # step of the stored snapshot
+        self.data: Optional[Dict[int, Any]] = None
+
+    def available(self) -> bool:
+        return self.data is not None
+
+    def maybe_snapshot(self, engine, step: int) -> bool:
+        if self.interval <= 0 or step % self.interval != 0:
+            return False
+        self.snapshot(engine, step)
+        return True
+
+    def snapshot(self, engine, step: int) -> None:
+        data: Dict[int, Any] = {}
+        lkeys = sorted({k for w in engine.workers for k in w.state})
+        for lk in lkeys:
+            parts = [w.export_rows(lk, np.arange(w.hi - w.lo))
+                     for w in engine.workers if lk in w.state]
+            if len(parts) == 1:
+                data[lk] = parts[0]
+            else:
+                import jax
+                data[lk] = jax.tree.map(
+                    lambda *xs: np.concatenate(xs, axis=0), *parts)
+        self.data, self.step = data, step
+
+    def payload(self) -> Dict[int, Any]:
+        if self.data is None:
+            raise RuntimeError("no snapshot taken yet")
+        return self.data

@@ -1,0 +1,62 @@
+"""Fleet telemetry: per-step load observations and lifecycle events.
+
+The manager records one observation per decode step (per-worker busy-time
+deltas plus the current partition) and one event per migration, failure,
+and recovery.  ``summary()`` is the machine-readable roll-up used by
+``benchmarks/bench_fleet.py`` and the tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class FleetEvent:
+    step: int
+    kind: str                 # "migration" | "failure" | "recovery" | ...
+    detail: Dict[str, object]
+
+
+@dataclass
+class StepObservation:
+    step: int
+    busy_deltas: Tuple[float, ...]       # per-worker busy seconds this step
+    rows: Tuple[int, ...]                # per-worker row counts
+    skew: float                          # max/mean busy imbalance - 1
+
+
+@dataclass
+class FleetTelemetry:
+    observations: List[StepObservation] = field(default_factory=list)
+    events: List[FleetEvent] = field(default_factory=list)
+
+    def record_step(self, step: int, busy_deltas: Sequence[float],
+                    rows: Sequence[int]) -> StepObservation:
+        deltas = tuple(float(b) for b in busy_deltas)
+        mean = sum(deltas) / len(deltas) if deltas else 0.0
+        skew = (max(deltas) / mean - 1.0) if mean > 0 else 0.0
+        obs = StepObservation(step, deltas, tuple(int(r) for r in rows), skew)
+        self.observations.append(obs)
+        return obs
+
+    def record_event(self, step: int, kind: str, **detail) -> None:
+        self.events.append(FleetEvent(step, kind, detail))
+
+    def events_of(self, kind: str) -> List[FleetEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+    def last_skew(self) -> Optional[float]:
+        return self.observations[-1].skew if self.observations else None
+
+    def summary(self) -> Dict[str, object]:
+        moved = sum(int(e.detail.get("moved_rows", 0))
+                    for e in self.events_of("migration"))
+        return {
+            "steps": len(self.observations),
+            "migrations": len(self.events_of("migration")),
+            "failures": len(self.events_of("failure")),
+            "recoveries": len(self.events_of("recovery")),
+            "rows_migrated": moved,
+            "last_skew": self.last_skew(),
+        }

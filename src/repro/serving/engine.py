@@ -19,6 +19,14 @@ KV block-granular (serving.paged_cache): admission allocates only the
 pages a prompt needs, decode grows tables page-by-page, and a finished
 sequence's pages are freed the step it completes — so R-side resident KV
 tracks the actual token count instead of batch*cache_len.
+
+With ``fleet=FleetManager(...)`` (hetero only) the R-worker pool is
+fleet-managed: heterogeneity-aware partition planning, straggler
+rebalancing, and failure recovery run around each step (``pre_step`` /
+``post_step``), lost rows are re-prefilled exactly from the token
+history (``_replay_rows``), and admission is re-costed after a topology
+change (``_recost_admission``).  See repro.fleet and
+docs/ARCHITECTURE.md ("Fleet management").
 """
 from __future__ import annotations
 
@@ -91,7 +99,22 @@ class ServingEngine:
                  num_r_workers: int = 2, num_microbatches: int = 2,
                  kv_chunk: int = 1024, quantized_kv: bool = False,
                  paged_kv: bool = False, page_size: int = 16,
-                 pages_per_worker: Optional[int] = None, seed: int = 0):
+                 pages_per_worker: Optional[int] = None, seed: int = 0,
+                 fleet=None):
+        if backend not in ("colocated", "hetero"):
+            raise ValueError(
+                f"backend must be 'colocated' or 'hetero', got {backend!r}")
+        if batch < 1 or cache_len < 1:
+            raise ValueError(
+                f"batch ({batch}) and cache_len ({cache_len}) must be >= 1")
+        if backend == "hetero" and batch % num_microbatches != 0:
+            raise ValueError(
+                f"batch ({batch}) must be divisible by num_microbatches "
+                f"({num_microbatches}); round batch up to "
+                f"{-(-batch // num_microbatches) * num_microbatches} or "
+                f"change num_microbatches")
+        if fleet is not None and backend != "hetero":
+            raise ValueError("fleet management requires backend='hetero'")
         self.params, self.cfg = params, cfg
         self.batch, self.cache_len = batch, cache_len
         self.backend = backend
@@ -106,6 +129,7 @@ class ServingEngine:
         self.records: List[StepRecord] = []
         self.finished: List[Request] = []
         self._last_tok = np.zeros((batch,), np.int32)
+        self.fleet = fleet
 
         if backend == "hetero":
             self.engine = HeteroPipelineEngine(
@@ -113,7 +137,8 @@ class ServingEngine:
                 num_r_workers=num_r_workers,
                 num_microbatches=num_microbatches, kv_chunk=kv_chunk,
                 quantized_kv=quantized_kv, paged_kv=paged_kv,
-                page_size=page_size, pages_per_worker=pages_per_worker)
+                page_size=page_size, pages_per_worker=pages_per_worker,
+                fleet=fleet)
             self.num_mb = num_microbatches
             self.mb_size = batch // num_microbatches
             for mb in range(self.num_mb):
@@ -133,6 +158,7 @@ class ServingEngine:
             self.load_ctl = LoadController(w_lim=w_lim, seq_len=s)
         else:
             self.load_ctl = None
+        self._w_lim0 = w_lim if self.load_ctl is not None else None
         self._prefill_cache: Dict[int, callable] = {}
 
     # ------------------------------------------------------------------ #
@@ -318,16 +344,18 @@ class ServingEngine:
         # layer issues ONE write_rows per group — dense_rows_to_pages'
         # batched scatter (and the dense slab's batched .at[rows].set)
         # would otherwise copy the pool/slab once per row
-        groups: Dict[Tuple[int, int], Tuple[list, list]] = {}
+        groups: Dict[Tuple[int, int], Tuple[object, list, list]] = {}
         for gi, row in zip(sub_rows, rows):
             w, mb, local = eng.worker_for(int(row))
-            locs, gis = groups.setdefault((w.wid, mb), ([], []))
+            # key on wid (stable, unique) but keep the worker object —
+            # after a fleet topology change wids no longer equal list
+            # indices
+            _, locs, gis = groups.setdefault((w.wid, mb), (w, [], []))
             locs.append(local)
             gis.append(int(gi))
         for li, (kind, _) in enumerate(eng.layers):
             r_st, s_st = D.split_block_state(kind, layer_states[li])
-            for (wid, mb), (locs, gis) in groups.items():
-                w = eng.workers[wid]
+            for (wid, mb), (w, locs, gis) in groups.items():
                 gis_np = np.asarray(gis)
                 w.write_rows(eng._lkey(mb, li), np.asarray(locs),
                              jax.tree.map(lambda x: x[gis_np], r_st))
@@ -343,8 +371,46 @@ class ServingEngine:
                 int(np.asarray(sub["lengths"])[gi]))
 
     # ------------------------------------------------------------------ #
+    def _replay_rows(self, rows) -> int:
+        """Failure recovery: recompute lost R-state exactly by re-running
+        prefill on prompt + generated-so-far for the live sequences among
+        ``rows`` (this engine owns the token history — the dead worker's
+        KV is just a deterministic function of it).  The last sampled
+        token stays in ``_last_tok`` and is NOT re-fed: it has not been
+        appended to any KV yet."""
+        live = [(int(r), self.slots[int(r)]) for r in rows
+                if self.slots[int(r)] is not None]
+        if not live or self.backend != "hetero":
+            return 0
+        lens = [req.prompt_len + len(req.generated) - 1 for _, req in live]
+        n_pad = _pad_pow2(len(live))
+        s_pad = _pad_pow2(max(lens), 8)
+        toks = np.zeros((n_pad, s_pad), np.int32)
+        plens = np.zeros((n_pad,), np.int32)
+        for i, ((row, req), ln) in enumerate(zip(live, lens)):
+            toks[i, :req.prompt_len] = req.prompt
+            toks[i, req.prompt_len:ln] = req.generated[:-1]
+            plens[i] = ln
+        _, sub = self._prefill_fn(n_pad)(self.params,
+                                         tokens=jnp.asarray(toks),
+                                         prompt_lens=jnp.asarray(plens))
+        self._hetero_scatter(np.asarray([r for r, _ in live]), sub,
+                             np.arange(len(live)))
+        return len(live)
+
+    def _recost_admission(self, weight_frac: float) -> None:
+        """Topology changed: the surviving fleet chews R-Part work at
+        ``weight_frac`` of the planned rate, so scale the Algorithm 1
+        peak bound accordingly (paged page budgets re-cost themselves —
+        ``_paged_pool_min`` reads the live allocators)."""
+        if self.load_ctl is not None and self._w_lim0 is not None:
+            self.load_ctl.w_lim = self._w_lim0 * max(0.0, weight_frac)
+
     def step(self) -> StepRecord:
         t0 = time.perf_counter()
+        if self.fleet is not None:
+            self.fleet.pre_step(reprefill=self._replay_rows,
+                                on_topology=self._recost_admission)
         admitted = 0
         n = self._admit_count()
         if n > 0:
@@ -377,6 +443,8 @@ class ServingEngine:
                 self.slots[i] = None
                 if self.paged_kv:
                     self.engine.release_row(i)
+        if self.fleet is not None:
+            self.fleet.post_step(self.step_idx)
         wall = time.perf_counter() - t0
         rec = StepRecord(self.step_idx, wall,
                          sum(r is not None for r in self.slots),

@@ -402,13 +402,26 @@ def dense_rows_to_pages(pool: Dict, alloc: PagedAllocator,
     first L slots hold tokens 0..L-1 in order (prefill writes them so);
     L is derived from the stored positions.  All rows are collected into
     ONE scatter per pool array — admission cost does not multiply the
-    full-pool copy by the number of admitted rows."""
+    full-pool copy by the number of admitted rows.
+
+    A payload that is ALREADY quantized ({k_q, k_s, v_q, v_s, pos} — the
+    fleet migration wire format between quantized workers) is scattered
+    verbatim into a quantized pool: no re-quantization, so live KV
+    migration is bit-exact."""
     from repro.core.decompose import attn_state_lengths
     lens = np.asarray(attn_state_lengths(r_state_rows))
     pos = np.asarray(r_state_rows["pos"])
+    quantized_payload = "k_q" in r_state_rows
+    if quantized_payload and "k_q" not in pool:
+        raise ValueError(
+            "quantized wire payload into an fp page pool — dequantize "
+            "first (RWorker._coerce_storage)")
     any_pages = pool["k_q"] if "k_q" in pool else pool["k"]
     page = any_pages.shape[1]
-    ids_all, ks, vs = [], [], []
+    names = (("k_q", "k_s", "v_q", "v_s") if quantized_payload
+             else ("k", "v"))
+    ids_all = []
+    chunks: Dict[str, list] = {n: [] for n in names}
     for i, row in enumerate(rows):
         length = int(lens[i])
         if length and int(pos[i].max()) + 1 != length:
@@ -420,13 +433,21 @@ def dense_rows_to_pages(pool: Dict, alloc: PagedAllocator,
         if length:
             n = -(-length // page)
             ids_all.append(alloc.tables[int(row), :n])
-            ks.append(_to_page_chunks(r_state_rows["k"][i, :length], page))
-            vs.append(_to_page_chunks(r_state_rows["v"][i, :length], page))
+            for name in names:
+                chunks[name].append(
+                    _to_page_chunks(r_state_rows[name][i, :length], page))
     if not ids_all:
         return pool
     ids = jnp.asarray(np.concatenate(ids_all), jnp.int32)
-    return _scatter_pages(pool, ids, jnp.concatenate(ks, axis=0),
-                          jnp.concatenate(vs, axis=0))
+    if quantized_payload:
+        out = dict(pool)
+        for name in names:
+            out[name] = pool[name].at[ids].set(
+                jnp.concatenate(chunks[name], axis=0).astype(
+                    pool[name].dtype))
+        return out
+    return _scatter_pages(pool, ids, jnp.concatenate(chunks["k"], axis=0),
+                          jnp.concatenate(chunks["v"], axis=0))
 
 
 # ---------------------------------------------------------------------------

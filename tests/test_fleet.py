@@ -1,0 +1,407 @@
+"""Fleet manager end-to-end: heterogeneity-aware partition planning,
+live KV migration (dense / paged / int8), straggler rebalancing, and
+failure recovery — all against the dense ``ColocatedEngine`` oracle.
+The migration wire format must be exact: a migrated or recovered engine
+produces the same tokens an uninterrupted run would."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import perfmodel as P
+from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
+from repro.fleet import (FleetManager, KVSnapshotStore, PartitionPlanner,
+                         Rebalancer, WorkerProfile, apportion_rows,
+                         skewed_fleet, uniform_fleet)
+from repro.models import model as M
+
+B, S, GEN = 8, 12, 6
+RAGGED = (5, 12, 3, 9, 7, 11, 2, 8)
+
+
+# ---------------------------------------------------------------------------
+# planner / apportionment
+# ---------------------------------------------------------------------------
+def test_apportion_rows_exact_cover_and_order():
+    for total, w in [(12, [2, 1]), (7, [1, 1, 1]), (5, [5, 1, 3]),
+                     (16, [0.5, 0.25, 0.25])]:
+        slices = apportion_rows(total, w)
+        assert slices[0][0] == 0 and slices[-1][1] == total
+        for (a, b), (c, d) in zip(slices, slices[1:]):
+            assert b == c
+        assert sum(hi - lo for lo, hi in slices) == total
+
+
+def test_apportion_rejects_bad_weights():
+    with pytest.raises(ValueError):
+        apportion_rows(4, [])
+    with pytest.raises(ValueError):
+        apportion_rows(4, [0.0, 0.0])
+    with pytest.raises(ValueError):
+        apportion_rows(4, [1.0, -1.0])
+    with pytest.raises(ValueError):
+        apportion_rows(2, [1, 1, 1], min_rows=1)
+
+
+def test_planner_2to1_skew_assigns_rows_2to1():
+    """The acceptance-criteria fleet: 2:1 bandwidth -> ~2:1 rows, both
+    with raw bandwidth weights and through the perfmodel roofline."""
+    assert PartitionPlanner(skewed_fleet((2.0, 1.0))).plan(12) == \
+        [(0, 8), (8, 12)]
+    cfg = tiny_cfg("granite-3-8b")
+    planner = PartitionPlanner(skewed_fleet((2.0, 1.0)), cfg=cfg)
+    (lo0, hi0), (lo1, hi1) = planner.plan(12)
+    assert (hi0 - lo0) == 2 * (hi1 - lo1)
+
+
+def test_planner_min_rows_drops_slowest_when_oversubscribed():
+    planner = PartitionPlanner(skewed_fleet((4.0, 1.0, 2.0)))
+    slices = planner.plan(2)          # 3 workers, 2 rows
+    rows = [hi - lo for lo, hi in slices]
+    assert rows[1] == 0 and sum(rows) == 2
+
+
+def test_perfmodel_hetero_variants():
+    cfg = tiny_cfg("granite-3-8b")
+    # homogeneous pool degenerates to the eq. 11 count
+    homo = P.optimal_workers_hetero(cfg, P.TPU_V5E, [P.CPU_XEON] * 64,
+                                    b=256, seq_len=512)
+    import math
+    assert homo == max(1, math.ceil(
+        P.optimal_workers(cfg, P.TPU_V5E, P.CPU_XEON, 256, 512)))
+    # a faster mixed pool needs no more workers than the slow-only pool
+    mixed = P.optimal_workers_hetero(cfg, P.TPU_V5E,
+                                     [P.CPU_EPYC, P.CPU_XEON] * 32,
+                                     b=256, seq_len=512)
+    assert 1 <= mixed <= homo
+    plan = P.plan_hetero(cfg, P.TPU_V5E, [P.CPU_EPYC, P.CPU_XEON],
+                         seq_len=512)
+    assert abs(sum(plan["shares"]) - 1.0) < 1e-9
+    assert plan["shares"][0] > plan["shares"][1]     # EPYC has more BW
+
+
+# ---------------------------------------------------------------------------
+# live migration equivalence (the wire format must be exact)
+# ---------------------------------------------------------------------------
+def _colocated_logits(params, cfg, tokens, plens, gen):
+    ref = ColocatedEngine(params, cfg, batch=B, cache_len=S + gen)
+    ref.load_prefill(tokens[:, :S], plens)
+    return [ref.decode_step(tokens[:, S + t:S + t + 1]) for t in range(gen)]
+
+
+def _hetero_logits(params, cfg, tokens, plens, gen, migrate_at=None,
+                   new_slices=((0, 3), (3, 4)), recover_at=None, **kw):
+    eng = HeteroPipelineEngine(params, cfg, batch=B, cache_len=S + gen,
+                               num_r_workers=2, num_microbatches=2,
+                               kv_chunk=8, **kw)
+    h = B // 2
+    eng.load_prefill(0, tokens[:h, :S], plens[:h])
+    eng.load_prefill(1, tokens[h:, :S], plens[h:])
+    snap = KVSnapshotStore()
+    outs = []
+    try:
+        for t in range(gen):
+            tok = tokens[:, S + t:S + t + 1]
+            outs.append(jnp.concatenate(
+                eng.decode_step([tok[:h], tok[h:]]), 0))
+            if migrate_at == t:
+                eng.apply_partition(list(new_slices))
+            if recover_at == t:
+                # Déjà Vu-style: host snapshot, abrupt crash, restore on
+                # the survivor — current snapshot => exact recovery
+                snap.snapshot(eng, t)
+                eng.workers[0].kill()
+                deadline = time.time() + 5
+                while eng.workers[0].is_alive() and time.time() < deadline:
+                    time.sleep(0.01)
+                assert not eng.workers[0].is_alive()
+                eng.remove_worker(0, lost=snap.payload())
+    finally:
+        eng.close()
+    return outs
+
+
+@pytest.mark.parametrize("kw", [dict(),
+                                dict(paged_kv=True, page_size=4),
+                                dict(quantized_kv=True),
+                                dict(paged_kv=True, quantized_kv=True,
+                                     page_size=4)],
+                         ids=["dense", "paged", "int8", "paged-int8"])
+def test_migration_is_exact_across_storage_formats(kw, rng, key):
+    """export_rows -> import is bit-exact for every storage backend:
+    the migrated engine's logits equal the unmigrated engine's."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + GEN)))
+    plens = jnp.asarray(RAGGED, jnp.int32)
+    base = _hetero_logits(params, cfg, tokens, plens, GEN, **kw)
+    mig = _hetero_logits(params, cfg, tokens, plens, GEN, migrate_at=2, **kw)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(base, mig))
+    assert err == 0.0, err
+
+
+def test_migration_matches_colocated_oracle(rng, key):
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + GEN)))
+    plens = jnp.asarray(RAGGED, jnp.int32)
+    refs = _colocated_logits(params, cfg, tokens, plens, GEN)
+    mig = _hetero_logits(params, cfg, tokens, plens, GEN, migrate_at=1,
+                         paged_kv=True, page_size=4)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(refs, mig))
+    assert err < 2e-4, err
+
+
+def test_migration_moves_rows_and_drops_empty_workers(rng, key):
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    eng = HeteroPipelineEngine(params, cfg, batch=B, cache_len=32,
+                               num_r_workers=2, num_microbatches=2)
+    h = B // 2
+    eng.load_prefill(0, jnp.ones((h, 4), jnp.int32), jnp.full((h,), 4))
+    eng.load_prefill(1, jnp.ones((h, 4), jnp.int32), jnp.full((h,), 4))
+    try:
+        moved = eng.apply_partition([(0, 4), (4, 4)])
+        assert len(eng.workers) == 1 and eng.slices == [(0, 4)]
+        assert moved == 2 * eng.num_mb          # worker 1's rows moved
+        with pytest.raises(ValueError):
+            eng.apply_partition([(1, 4)])       # not a cover
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# failure recovery
+# ---------------------------------------------------------------------------
+def test_snapshot_recovery_token_exact_vs_colocated(rng, key):
+    """Kill an R-worker mid-decode; restore from a current KV snapshot;
+    greedy tokens must match an uninterrupted ColocatedEngine run."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + GEN)))
+    plens = jnp.asarray(RAGGED, jnp.int32)
+    refs = _colocated_logits(params, cfg, tokens, plens, GEN)
+    rec = _hetero_logits(params, cfg, tokens, plens, GEN, recover_at=2,
+                         paged_kv=True, page_size=4)
+    ref_toks = [np.asarray(jnp.argmax(l, -1)) for l in refs]
+    rec_toks = [np.asarray(jnp.argmax(l, -1)) for l in rec]
+    assert all(np.array_equal(a, b) for a, b in zip(ref_toks, rec_toks))
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(refs, rec))
+    assert err < 2e-4, err
+
+
+def test_quantized_recovery_with_zero_filler(rng, key):
+    """Regression: a quantized fleet's recovery filler must be emitted
+    in the int8 wire format, or the zero rows cannot concatenate with a
+    surviving worker's export (Dict key mismatch)."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    eng = HeteroPipelineEngine(params, cfg, batch=B, cache_len=S + 2,
+                               num_r_workers=2, num_microbatches=2,
+                               kv_chunk=8, quantized_kv=True)
+    h = B // 2
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    plens = jnp.full((B,), S, jnp.int32)
+    eng.load_prefill(0, tokens[:h], plens[:h])
+    eng.load_prefill(1, tokens[h:], plens[h:])
+    try:
+        eng.decode_step([jnp.ones((h, 1), jnp.int32)] * 2)
+        eng.remove_worker(0)                # default zero filler
+        assert len(eng.workers) == 1
+        eng.decode_step([jnp.ones((h, 1), jnp.int32)] * 2)
+    finally:
+        eng.close()
+
+
+def test_pre_step_raises_when_last_worker_dies(rng, key):
+    """Regression: a dead sole worker must fail fast, not leave the next
+    decode step blocking on a queue that will never fill."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    fleet = FleetManager(uniform_fleet(1))
+    eng = HeteroPipelineEngine(params, cfg, batch=4, cache_len=16,
+                               num_microbatches=2, fleet=fleet)
+    try:
+        eng.workers[0].kill()
+        deadline = time.time() + 5
+        while eng.workers[0].is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(RuntimeError, match="no live R-workers"):
+            fleet.pre_step()
+    finally:
+        eng.close()
+
+
+def test_weight_fraction_ignores_profiles_dropped_at_spawn(rng, key):
+    """Regression: profiles the planner dropped (more workers than rows)
+    never contributed throughput and must not deflate the admission
+    re-costing fraction."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    fleet = FleetManager(skewed_fleet((4.0, 1.0, 2.0)))
+    # batch 4 / 2 mbs = 2 rows: the weight-1 profile plans to zero rows
+    eng = HeteroPipelineEngine(params, cfg, batch=4, cache_len=16,
+                               num_microbatches=2, fleet=fleet)
+    try:
+        assert len(eng.workers) == 2
+        assert fleet.weight_fraction() == pytest.approx(1.0)
+        eng.workers[1].kill()               # the weight-2 worker
+        deadline = time.time() + 5
+        while eng.workers[1].is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        fleet.pre_step()
+        assert fleet.weight_fraction() == pytest.approx(4.0 / 6.0)
+    finally:
+        eng.close()
+
+
+def test_serving_reprefill_recovery_token_exact(rng, key):
+    """ServingEngine + FleetManager: a worker crash mid-serve is healed
+    by re-prefilling prompt+generated — every request finishes with the
+    tokens the colocated baseline produces."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import Request
+
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+
+    def mk_reqs():
+        r2 = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=np.asarray(r2.integers(
+                            1, cfg.vocab_size, (int(r2.integers(3, 10)),)),
+                            np.int32),
+                        max_new_tokens=6) for i in range(6)]
+
+    colo = ServingEngine(params, cfg, batch=4, cache_len=48)
+    for r in mk_reqs():
+        colo.submit(r)
+    colo_toks = {r.rid: list(r.generated) for r in colo.run(max_steps=100)}
+
+    fleet = FleetManager(uniform_fleet(2), recovery="reprefill")
+    eng = ServingEngine(params, cfg, batch=4, cache_len=48,
+                        backend="hetero", num_microbatches=2, kv_chunk=48,
+                        fleet=fleet)
+    for r in mk_reqs():
+        eng.submit(r)
+    try:
+        for _ in range(4):
+            eng.step()
+        eng.engine.workers[1].kill()
+        deadline = time.time() + 5
+        while eng.engine.workers[1].is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        fin = eng.run(max_steps=100)
+    finally:
+        eng.close()
+    assert fleet.telemetry.summary()["recoveries"] == 1
+    assert len(eng.engine.workers) == 1
+    assert {r.rid: list(r.generated) for r in fin} == colo_toks
+
+
+def test_recost_admission_shrinks_w_lim_after_failure(rng, key):
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import Request
+
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    fleet = FleetManager(uniform_fleet(2), recovery="reprefill")
+    eng = ServingEngine(params, cfg, batch=4, cache_len=48,
+                        backend="hetero", num_microbatches=2,
+                        admission="loadctl", target_len=6, interval=2,
+                        fleet=fleet)
+    try:
+        w0 = eng.load_ctl.w_lim
+        eng.submit(Request(rid=0, prompt=np.ones((4,), np.int32),
+                           max_new_tokens=4))
+        eng.step()
+        eng.engine.workers[0].kill()
+        deadline = time.time() + 5
+        while eng.engine.workers[0].is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        eng.step()
+        assert eng.load_ctl.w_lim == pytest.approx(0.5 * w0)
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# straggler rebalancing
+# ---------------------------------------------------------------------------
+def test_rebalancer_migrates_rows_off_straggler(rng, key):
+    """A 3x-slow worker (simulated) must lose rows to the fast one, and
+    decode must stay equivalent to the colocated oracle THROUGH the
+    migration."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    profs = [WorkerProfile(name="slow", sim_slowdown=3.0),
+             WorkerProfile(name="fast")]
+    fleet = FleetManager(profs, rebalancer=Rebalancer(
+        skew_threshold=0.2, patience=2, cooldown=2))
+    gen = 10
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + gen)))
+    plens = jnp.full((B,), S, jnp.int32)
+    ref = ColocatedEngine(params, cfg, batch=B, cache_len=S + gen)
+    ref.load_prefill(tokens[:, :S], plens)
+    eng = HeteroPipelineEngine(params, cfg, batch=B, cache_len=S + gen,
+                               num_microbatches=2, kv_chunk=8, fleet=fleet)
+    assert eng.slices == [(0, 2), (2, 4)]       # profiles claim equal HW
+    h = B // 2
+    eng.load_prefill(0, tokens[:h, :S], plens[:h])
+    eng.load_prefill(1, tokens[h:, :S], plens[h:])
+    try:
+        for t in range(gen):
+            tok = tokens[:, S + t:S + t + 1]
+            lr = ref.decode_step(tok)
+            lh = jnp.concatenate(eng.decode_step([tok[:h], tok[h:]]), 0)
+            assert float(jnp.abs(lr - lh).max()) < 2e-4, t
+            fleet.post_step(t)
+    finally:
+        eng.close()
+    assert fleet.telemetry.summary()["migrations"] >= 1
+    lo, hi = eng.slices[0]                      # the slow worker's slice
+    assert hi - lo < 2, eng.slices
+
+
+def test_rebalancer_quiet_on_balanced_fleet():
+    rb = Rebalancer(skew_threshold=0.25, patience=1, cooldown=0)
+    busy = np.zeros(2)
+    for _ in range(10):
+        busy = busy + np.asarray([1.0, 1.02])
+        rb.observe(busy)
+        assert rb.propose([(0, 2), (2, 4)], 4) is None
+
+
+# ---------------------------------------------------------------------------
+# constructor validation (satellite)
+# ---------------------------------------------------------------------------
+def test_engine_constructor_validation(key):
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    with pytest.raises(ValueError, match="divisible"):
+        HeteroPipelineEngine(params, cfg, batch=5, cache_len=16,
+                             num_microbatches=2)
+    with pytest.raises(ValueError, match="micro-batch size"):
+        HeteroPipelineEngine(params, cfg, batch=4, cache_len=16,
+                             num_r_workers=3, num_microbatches=2)
+    with pytest.raises(ValueError, match="num_r_workers"):
+        HeteroPipelineEngine(params, cfg, batch=4, cache_len=16,
+                             num_r_workers=0)
+    with pytest.raises(ValueError):
+        ColocatedEngine(params, cfg, batch=0, cache_len=16)
+
+
+def test_serving_constructor_validation(key):
+    from repro.serving.engine import ServingEngine
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    with pytest.raises(ValueError, match="backend"):
+        ServingEngine(params, cfg, batch=2, cache_len=16, backend="gpu")
+    with pytest.raises(ValueError, match="divisible"):
+        ServingEngine(params, cfg, batch=3, cache_len=16, backend="hetero")
+    with pytest.raises(ValueError, match="hetero"):
+        ServingEngine(params, cfg, batch=2, cache_len=16,
+                      fleet=FleetManager(uniform_fleet(2)))

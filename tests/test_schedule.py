@@ -96,3 +96,57 @@ def test_load_controller_retires_finished():
     lc.retire(100)
     assert lc.mbs == []
     assert lc.earliest_step(100, 5) == 100
+
+
+def test_load_controller_retire_exactly_at_end():
+    """A micro-batch admitted at t=0 with S=10 has end=10: at t == end it
+    no longer occupies residency (start <= t < end) and must be retired,
+    so admission at exactly t == end sees an empty tracker."""
+    seq = 10
+    lc = S.LoadController(w_lim=seq, seq_len=seq)   # room for ONE seq
+    lc.add_microbatch(0, 1)
+    assert lc.resident_load(seq - 1) == seq          # last resident step
+    assert lc.resident_load(seq) == 0                # gone at t == end
+    # one step earlier it still blocks a same-size admission...
+    assert lc.earliest_step(seq - 1, 1) > seq - 1
+    # ...but exactly at t == end the slot is free again
+    assert lc.earliest_step(seq, 1) == seq
+    assert lc.mbs == []                              # retired, not lingering
+
+
+def test_load_controller_w_lim_below_seq_len_serializes():
+    """w_lim < S: a single sequence's own final-step load S already
+    exceeds the limit.  Algorithm 1 only bounds the peaks of mbs tracked
+    at admission time, so the first admission goes through (documented
+    precondition), and every later one is pushed past the incumbent's
+    retirement — the controller degrades to full serialization instead
+    of deadlocking or overlapping."""
+    seq, w_lim = 10, 6
+    lc = S.LoadController(w_lim=w_lim, seq_len=seq)
+    t0 = lc.earliest_step(0, 1)
+    assert t0 == 0                   # empty tracker: admitted immediately
+    lc.add_microbatch(t0, 1)
+    end = t0 + seq
+    t1 = lc.earliest_step(t0 + 1, 1)
+    assert t1 >= end                 # never concurrent with the first
+    lc.add_microbatch(t1, 1)
+    assert lc.resident_load(t1) <= w_lim  # the incumbent is gone by t1
+
+
+def test_microbatch_sizing_interval_longer_than_seq():
+    """F > S (eq. 5 outside its intended regime): M = ceil(B*F/S) exceeds
+    B — each admission wave asks for more than the pool, and the serving
+    engine's min(avail, M) clamp is what keeps it sane.  Pin the closed
+    forms and that the eq. 6 'halving' disappears (W'_max > W_max/2)."""
+    B, seq, F = 8, 4, 8
+    m = S.microbatch_size(B, seq, F)
+    assert m == math.ceil(B * F / seq) == 16 > B
+    assert S.microbatch_size(1, 100, 1) == 1          # floor at 1
+    assert S.w_prime_max(B, seq, F) > S.w_max(B, seq) / 2
+    # the schedule still conserves work: simulate and check every
+    # admitted sequence decodes exactly seq steps
+    adm = S.sls_schedule(B, seq, F, steps=3 * F)
+    stats = S.simulate(adm, seq, 3 * F + seq, t_s_of_b=lambda b: 1.0)
+    total = sum(s.resident_seqs for s in stats)
+    expected = sum(m_ * seq for t, m_ in adm if t + seq <= 3 * F + seq)
+    assert total >= expected

@@ -41,8 +41,11 @@ def test_hetero_backend_equals_colocated(setup, rng):
     prompt = np.arange(1, 6, dtype=np.int32)
     outs = []
     for backend in ("colocated", "hetero"):
+        # batch 2 / 2 micro-batches = 1 row per micro-batch, so at most
+        # one R-worker (more than mb_size rows is now a hard error
+        # instead of a silently dropped empty slice)
         eng = ServingEngine(params, cfg, batch=2, cache_len=32,
-                            backend=backend, num_r_workers=2,
+                            backend=backend, num_r_workers=1,
                             num_microbatches=2, kv_chunk=8)
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
         done = eng.run(max_steps=100)
