@@ -18,7 +18,10 @@ def run(print_fn=print):
         eng = ColocatedEngine(params, cfg, batch=8, cache_len=96)
         eng.load_prefill(jnp.ones((8, 32), jnp.int32), jnp.full((8,), 32))
         tok = jnp.ones((8, 1), jnp.int32)
-        t = timeit(lambda: eng.decode_step(tok), warmup=2, iters=8)
+        from benchmarks.common import smoke
+        warmup, iters = (1, 3) if smoke() else (2, 8)
+        t = timeit(lambda: eng.decode_step(tok), warmup=warmup,
+                   iters=iters)
         lat[layers] = t
         print_fn(csv_row(f"fig8_layers_{layers}", t * 1e6, ""))
     xs = np.asarray(sorted(lat))

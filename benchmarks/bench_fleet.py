@@ -22,7 +22,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_model, csv_row
+from benchmarks.common import bench_model, csv_row, smoke
 from repro.core.hetero import HeteroPipelineEngine
 from repro.fleet import (FleetManager, KVSnapshotStore, Rebalancer,
                          WorkerProfile)
@@ -49,7 +49,8 @@ def _mk_engine(params, cfg, fleet):
     return eng
 
 
-def _steps_per_s(eng, steps=STEPS):
+def _steps_per_s(eng, steps=None):
+    steps = steps or (3 if smoke() else STEPS)
     h = BATCH // 2
     toks = [jnp.ones((h, 1), jnp.int32)] * 2
     eng.decode_step(toks)                       # warmup/compile

@@ -12,7 +12,9 @@ from benchmarks.common import bench_model, csv_row
 from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
 
 
-def _lat(step_fn, tok, steps=30):
+def _lat(step_fn, tok, steps=None):
+    from benchmarks.common import smoke
+    steps = steps or (8 if smoke() else 30)
     step_fn(tok)
     lats = []
     for _ in range(steps):

@@ -34,7 +34,9 @@ def _mk_engine(params, cfg, batch, cache_len, paged, page):
         page_size=page)
 
 
-def _steps_per_s(eng, batch, steps=10):
+def _steps_per_s(eng, batch, steps=None):
+    from benchmarks.common import smoke
+    steps = steps or (3 if smoke() else 10)
     h = batch // 2
     toks = [jnp.ones((h, 1), jnp.int32)] * 2
     eng.decode_step(toks)                       # warmup/compile

@@ -34,7 +34,8 @@ def run(print_fn=print):
         tok = jnp.ones((batch, 1), jnp.int32)
         eng.decode_step([tok[:h], tok[h:]])
         t0 = time.perf_counter()
-        steps = 10
+        from benchmarks.common import smoke
+        steps = 4 if smoke() else 10
         for _ in range(steps):
             eng.decode_step([tok[:h], tok[h:]])
         dt = (time.perf_counter() - t0) / steps

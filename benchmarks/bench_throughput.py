@@ -20,30 +20,48 @@ from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
 from repro.models import model as M
 
 
-def _tok_s(step_fn, batch, steps=20):
+def _tok_s(step_fn, batch, steps=20, repeats=3):
+    """Best-of-``repeats`` token rate: decode timing on a shared host is
+    drift-dominated, and the max over short repeated windows is the
+    standard drift-robust estimator (min-time rule)."""
     tok = jnp.ones((batch, 1), jnp.int32)
     step_fn(tok)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(steps):
-        out = step_fn(tok)
-    jax.block_until_ready(out)
-    return batch * steps / (time.perf_counter() - t0)
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            out = step_fn(tok)
+        jax.block_until_ready(out)
+        best = max(best, batch * steps / (time.perf_counter() - t0))
+    return best
 
 
 def run(print_fn=print):
-    cfg, params = bench_model(layers=2, d_model=128)
-    cache_len = 192
+    from benchmarks.common import smoke
+    # deep/wide enough that the S-Part is compute-bound and batch
+    # amortization is real (the Fig. 9 regime) — at toy sizes the
+    # comparison degenerates into measuring dispatch overhead
+    cfg, params = bench_model(layers=4, d_model=256)
+    # cache must hold prompt + EVERY decoded token across the repeat
+    # windows (1 warmup + 3*steps_small = 145 on the vanilla engine) or
+    # the dense ring silently wraps and the baseline stops attending
+    # over its full context
+    cache_len = 256
     prompt = 64
     # a 'device KV budget' that vanilla must respect but FastDecode ignores
     budget_seqs = 4
-    big_batch = 32
+    big_batch = 128
+    steps = 4 if smoke() else 12
+    # small-batch engines need longer windows: their ~2ms steps
+    # make a 12-step window scheduler-noise-dominated
+    steps_small = steps * 4
 
     rows = []
     # --- vanilla colocated, budget-limited batch
     eng = ColocatedEngine(params, cfg, batch=budget_seqs, cache_len=cache_len)
     eng.load_prefill(jnp.ones((budget_seqs, prompt), jnp.int32),
                      jnp.full((budget_seqs,), prompt))
-    tps = _tok_s(eng.decode_step, budget_seqs)
+    tps = _tok_s(eng.decode_step, budget_seqs, steps=steps_small)
     rows.append(("throughput_vanilla_b%d" % budget_seqs, tps))
 
     # --- swap: same small batch but KV round-trips host<->device per step
@@ -57,7 +75,7 @@ def run(print_fn=print):
         eng2.state = jax.tree.map(jnp.asarray, host)
         return eng2.decode_step(tok)
 
-    tps = _tok_s(swap_step, budget_seqs, steps=10)
+    tps = _tok_s(swap_step, budget_seqs, steps=steps_small)
     rows.append(("throughput_swap_b%d" % budget_seqs, tps))
 
     # --- FastDecode: hetero pipeline, large batch (KV on R-workers)
@@ -72,10 +90,16 @@ def run(print_fn=print):
     def fd_step(tok):
         return eng3.decode_step([tok[:h], tok[h:]])
 
-    tps = _tok_s(fd_step, big_batch)
+    tps = _tok_s(fd_step, big_batch, steps=steps)
     rows.append(("throughput_fastdecode_b%d" % big_batch, tps))
     eng3.close()
 
+    # perf-trajectory marker: PR 3 reset this bench's config (layers
+    # 2->4, d_model 128->256, big_batch 32->128, cache 192->256,
+    # best-of-3 windows) — ratios before/after the reset are not
+    # comparable
+    print_fn(csv_row("throughput_config", 0.0,
+                     "baseline_reset=pr3:L4,d256,b128,cache256,best-of-3"))
     base = rows[0][1]
     for name, tps in rows:
         print_fn(csv_row(name, 1e6 / tps, f"{tps:.1f}tok/s,{tps/base:.2f}x"))

@@ -11,6 +11,13 @@ import numpy as np
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
+def smoke() -> bool:
+    """True under ``benchmarks.run --smoke`` (CI regression gate): bench
+    modules shrink their iteration counts but keep every code path, so a
+    hot-path break surfaces before merge without the full perf run."""
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
 def bench_model(arch="granite-3-8b", layers=2, d_model=128, vocab=512):
     import sys, os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -28,17 +28,30 @@ BENCHES = [
     ("fleet", "benchmarks.bench_fleet", "Fleet skew/rebalance/recovery"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
+    ("hotpath", "benchmarks.bench_hotpath", "Hot-path overhead + OoO A/B"),
 ]
+
+# benches that may legitimately emit zero rows (they render whatever
+# artifacts exist on disk); every other silent bench fails --smoke
+MAY_BE_EMPTY = {"strategies", "roofline"}
 
 
 def main() -> None:
-    from benchmarks.common import RowCollector, write_bench_json
-
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_<name>.json files")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI regression gate: tiny iteration counts, no "
+                         "JSON artifacts, fail unless EVERY bench module "
+                         "runs clean (ok: true) and emits rows")
     args = ap.parse_args()
+    if args.smoke:
+        # must be set before bench modules import/run (common.smoke())
+        os.environ["BENCH_SMOKE"] = "1"
+        args.no_json = True
+    from benchmarks.common import RowCollector, write_bench_json
+
     print("name,us_per_call,derived")
     failures = 0
     for name, mod, what in BENCHES:
@@ -51,6 +64,12 @@ def main() -> None:
         try:
             import importlib
             importlib.import_module(mod).run(print_fn=collector)
+            if args.smoke and not collector.rows:
+                if name in MAY_BE_EMPTY:
+                    print(f"# note: {name} emitted no rows (no artifacts "
+                          f"on disk)", flush=True)
+                else:
+                    raise RuntimeError(f"bench {name} emitted no rows")
         except Exception:
             failures += 1
             error = traceback.format_exc(limit=3)

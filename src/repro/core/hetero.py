@@ -13,6 +13,18 @@ interleaving falls out of the dispatch order, not timers, so it is
 correct regardless of relative speeds (bubbles appear exactly when the
 paper says they do; benchmarks measure them).
 
+The decode hot path is **event-driven**: every R-worker posts finished
+work to one shared :class:`CompletionSink`, and the S-worker advances
+whichever micro-batch completes first (``schedule="ooo"``) instead of
+blocking per-worker in issue order.  Per layer transition the S-side
+runs ONE fused, jitted ``s_advance(l) -> s_pre(l+1)`` callable whose
+outputs are already the per-worker ``r_in`` shards (slice boundaries are
+baked into the trace), and workers scatter their ``r_out`` into a
+preallocated host buffer instead of the S-worker concatenating device
+arrays — see docs/ARCHITECTURE.md "Hot path".  The pre-fusion FIFO loop
+survives as :meth:`HeteroPipelineEngine.decode_step_legacy` for A/B
+benchmarking (benchmarks/bench_hotpath.py).
+
 On this CPU-only container the R-workers are host threads with their own
 jitted R-Part; on a real deployment they are processes on remote CPU
 nodes (the payload protocol is already activation-only and
@@ -22,6 +34,9 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import warnings
+from collections import deque
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -29,6 +44,31 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+def _quiet_donation_jit(f, donate_argnums):
+    """jax.jit with donated dead inputs, suppressing the one expected
+    compile-time warning.  Donation is best-effort: where no output
+    shape matches a donated input (e.g. r_out -> shards) XLA warns once
+    per compile and falls back to a copy — expected, not a bug.  The
+    suppression is scoped to each wrapped callable's FIRST invocation
+    (when compilation happens) so other code's donation warnings stay
+    visible.  Caveat: warnings filters are process-global, so a warning
+    raised on ANOTHER thread during that one compile window is also
+    muted — acceptable here because the R-worker jits never donate."""
+    jitted = jax.jit(f, donate_argnums=donate_argnums)
+    state = {"first": True}
+
+    def wrapped(*args):
+        if state["first"]:
+            state["first"] = False
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore",
+                    message="Some donated buffers were not usable")
+                return jitted(*args)
+        return jitted(*args)
+
+    return wrapped
 
 from repro.core import decompose as D
 from repro.core.config import DEC_XATTN, ModelConfig
@@ -88,6 +128,101 @@ def batch_concat(trees: Sequence[Any]):
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
 
 
+def shard_rin(r_in: dict, slices) -> tuple:
+    """Per-worker ``r_in`` shards.  Called INSIDE the fused jitted
+    S-part callables with ``slices`` baked in as trace-time constants,
+    so the whole fan-out is part of one device dispatch instead of
+    ``num_workers`` interpreter-level ``rin_slice`` calls."""
+    return tuple(rin_slice(r_in, lo, hi) for lo, hi in slices)
+
+
+class CompletionSink:
+    """The single completion channel shared by all R-workers of one
+    engine — the heart of the event-driven hot path.
+
+    A worker finishing ``(mb, layer, phase)`` converts its ``r_out``
+    shard to host arrays (on the worker thread, so transfers overlap
+    across workers), scatters it into a preallocated per-(step-parity,
+    micro-batch, layer, phase) host buffer at its row slice, and posts a
+    tiny ``(wid, tag, err)`` token to one queue.  The S-worker pops
+    tokens in COMPLETION order and advances whichever micro-batch is
+    ready — no per-worker blocking order, no device-side concatenation
+    (``gather`` turns the already-assembled buffer into one device
+    array).  On accelerator hosts these buffers live in pinned host
+    memory; on this CPU container they are plain numpy.
+
+    Buffers are double-buffered on step parity so a straggler's write
+    can never race the previous step's still-executing consumer.
+    ``epoch`` fences topology changes (``apply_partition`` /
+    ``remove_worker``): posts tagged with an older epoch — e.g. a
+    delayed delivery finishing across a migration — are dropped before
+    they touch a buffer.
+    """
+
+    def __init__(self, mb_size: int):
+        self.mb_size = int(mb_size)
+        self.q: "queue.Queue" = queue.Queue()
+        self.epoch = 0
+        self._lock = threading.Lock()
+        self._bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
+
+    def _buffer(self, key, host: Dict[str, np.ndarray]):
+        # caller (post) holds self._lock
+        buf = self._bufs.get(key)
+        if buf is None:
+            buf = {k: np.empty((self.mb_size,) + v.shape[1:], v.dtype)
+                   for k, v in host.items()}
+            self._bufs[key] = buf
+        return buf
+
+    def post(self, wid: int, tag, host: Dict[str, np.ndarray],
+             lo: int, hi: int) -> None:
+        epoch, parity, mb, li, phase = tag
+        # epoch check and buffer write are one critical section with
+        # fence(): otherwise a delayed post could pass the check, lose
+        # the CPU across a topology change, and scatter old-partition
+        # rows over a newer epoch's buffer.  Only the small memcpy is
+        # under the lock — the expensive device->host conversion
+        # happened on the worker thread before calling in, so the
+        # serialized section is us-scale against ms-scale R-items
+        # (a per-buffer lock would complicate the fence for ~nothing).
+        with self._lock:
+            if epoch != self.epoch:
+                return                   # fenced-off straggler
+            buf = self._buffer((parity, mb, li, phase), host)
+            for k, v in host.items():
+                buf[k][lo:hi] = v
+        self.q.put((wid, tag, None))
+
+    def post_error(self, wid: int, tag, err: BaseException) -> None:
+        with self._lock:
+            if tag[0] != self.epoch:
+                return
+        self.q.put((wid, tag, err))
+
+    def gather(self, tag) -> Dict[str, jnp.ndarray]:
+        """The fully-scattered r_out of ``tag`` as device arrays (one
+        host->device copy per leaf; jnp.asarray copies, so the buffer is
+        immediately reusable — double-buffering guards the async case)."""
+        _, parity, mb, li, phase = tag
+        buf = self._bufs[(parity, mb, li, phase)]
+        return {k: jnp.asarray(v) for k, v in buf.items()}
+
+    def fence(self) -> None:
+        """Invalidate all in-flight work (topology change or aborted
+        step): bump the epoch and drain already-posted completions so
+        the next decode step never consumes a stale result.  The bump
+        shares post()'s lock, so no straggler can pass the epoch check
+        and then scatter across the fence."""
+        with self._lock:
+            self.epoch += 1
+        while True:
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                return
+
+
 # ---------------------------------------------------------------------------
 # R-worker
 # ---------------------------------------------------------------------------
@@ -120,7 +255,9 @@ class RWorker(threading.Thread):
                  num_pages: Optional[int] = None,
                  max_pages_per_seq: Optional[int] = None,
                  profile: Any = None, slowdown: float = 1.0,
-                 sim_row_cost: float = 0.0):
+                 sim_row_cost: float = 0.0,
+                 sim_deliver_jitter: float = 0.0,
+                 profile_timing: bool = False):
         super().__init__(daemon=True, name=f"r-worker-{wid}")
         self.wid, self.cfg, self.lo, self.hi = wid, cfg, lo, hi
         self.kv_chunk = kv_chunk
@@ -132,13 +269,26 @@ class RWorker(threading.Thread):
         self.profile = profile                   # fleet.WorkerProfile or None
         self.slowdown = max(1.0, float(slowdown))  # simulated skew (tests)
         self.sim_row_cost = max(0.0, float(sim_row_cost))  # s/row/call
+        # simulated async-delivery jitter (seconds, uniform): the result
+        # arrives late but the worker moves on — models a remote link.
+        # This is what makes completion order diverge from issue order
+        # (FIFO worker threads alone complete monotonically); see
+        # docs/ARCHITECTURE.md "Hot path" for when FIFO vs OoO matters.
+        self.sim_deliver_jitter = max(0.0, float(sim_deliver_jitter))
+        # profile_timing=True adds an explicit block_until_ready before
+        # the host conversion, separating kernel time from transfer time
+        # in busy_time — keep it OFF in steady state (the host copy
+        # already absorbs the sync; legacy outq replies need it ON for
+        # busy_time to mean anything, since they never copy to host)
+        self.profile_timing = bool(profile_timing)
+        self._jitter_rng = np.random.default_rng(0xD15C0 + wid)
         self._cache_len = 0                      # set at first state load
         self.state: Dict[int, Any] = {}          # layer -> r_state slice
         self.paged_keys: set = set()             # layer keys stored paged
         self.allocators: Dict[int, Any] = {}     # micro-batch -> allocator
         self._first_paged: Dict[int, Any] = {}   # mb -> min paged key
         self.inq: "queue.Queue" = queue.Queue()
-        self.outq: "queue.Queue" = queue.Queue()
+        self.outq: "queue.Queue" = queue.Queue()  # legacy (FIFO) replies
         self._jit_cache: Dict[Tuple[str, int], Any] = {}
         self.busy_time = 0.0
         self._killed = False
@@ -348,36 +498,77 @@ class RWorker(threading.Thread):
         return self._first_paged[mb]
 
     def run(self) -> None:
-        import time
         while True:
-            item = self.inq.get()
-            if item is None or self._killed:
-                return
-            tag, layer, kind, phase, r_in = item
-            try:
-                t0 = time.perf_counter()
-                if layer in self.paged_keys:
-                    r_out, new_state = self._step_paged(layer, r_in)
-                else:
-                    r_out, new_state = self._fn(kind, phase)(
-                        r_in, self.state[layer])
+            items = [self.inq.get()]
+            # batched-inbox drain: one wake services everything already
+            # queued (work for several layers backs up behind a
+            # straggler; draining them in one pass avoids a
+            # get/process/sleep syscall cycle per item)
+            while True:
+                try:
+                    items.append(self.inq.get_nowait())
+                except queue.Empty:
+                    break
+            for item in items:
+                if item is None or self._killed:
+                    return
+                self._run_one(item)
+
+    def _run_one(self, item) -> None:
+        tag, layer, kind, phase, r_in, sink = item
+        try:
+            t0 = time.perf_counter()
+            if layer in self.paged_keys:
+                r_out, new_state = self._step_paged(layer, r_in)
+            else:
+                r_out, new_state = self._fn(kind, phase)(
+                    r_in, self.state[layer])
+            if self.profile_timing or sink is None:
+                # explicit sync for precise timing; the sink path's host
+                # conversion below absorbs it in steady state
                 jax.block_until_ready(r_out)
-                dt = time.perf_counter() - t0
-                if self.slowdown > 1.0:
-                    # simulated heterogeneity: a worker with 1/slowdown
-                    # the bandwidth takes slowdown * dt for the same rows
-                    time.sleep(dt * (self.slowdown - 1.0))
-                    dt *= self.slowdown
-                if self.sim_row_cost > 0.0:
-                    # deterministic bandwidth-bound service time: streams
-                    # its rows' KV at sim_row_cost seconds per row
-                    extra = self.sim_row_cost * (self.hi - self.lo)
-                    time.sleep(extra)
-                    dt += extra
-                self.busy_time += dt
-                self.state[layer] = new_state
+            self.state[layer] = new_state
+            host = None
+            if sink is not None:
+                # host conversion happens HERE, on the worker thread:
+                # transfers overlap across workers and the S-worker
+                # never pays for them
+                host = {k: np.asarray(v) for k, v in r_out.items()}
+            dt = time.perf_counter() - t0
+            if self.slowdown > 1.0:
+                # simulated heterogeneity: a worker with 1/slowdown
+                # the bandwidth takes slowdown * dt for the same rows
+                time.sleep(dt * (self.slowdown - 1.0))
+                dt *= self.slowdown
+            if self.sim_row_cost > 0.0:
+                # deterministic bandwidth-bound service time: streams
+                # its rows' KV at sim_row_cost seconds per row
+                extra = self.sim_row_cost * (self.hi - self.lo)
+                time.sleep(extra)
+                dt += extra
+            self.busy_time += dt
+            if sink is None:                     # legacy FIFO reply
                 self.outq.put((tag, r_out))
-            except Exception as e:  # surface to the S-worker, don't deadlock
+            elif self.sim_deliver_jitter > 0.0:
+                # async delivery over a jittery link: the result lands
+                # late, the worker moves on to its next inbox item
+                delay = float(self._jitter_rng.uniform(
+                    0.0, self.sim_deliver_jitter))
+                t = threading.Timer(delay, sink.post,
+                                    args=(self.wid, tag, host,
+                                          self.lo, self.hi))
+                t.daemon = True
+                t.start()
+            else:
+                sink.post(self.wid, tag, host, self.lo, self.hi)
+        except Exception as e:  # surface to the S-worker, don't deadlock
+            # ship the ORIGINAL exception — traceback intact for the
+            # S-side `raise ... from` — plus the failing computation's
+            # coordinates (worker, layer key, kind, phase)
+            e.r_worker_context = (self.wid, layer, kind, phase)
+            if sink is not None:
+                sink.post_error(self.wid, tag, e)
+            else:
                 self.outq.put((tag, e))
 
     def stop(self) -> None:
@@ -403,10 +594,20 @@ class HeteroPipelineEngine:
                  num_microbatches: int = 2, kv_chunk: int = 1024,
                  quantized_kv: bool = False, paged_kv: bool = False,
                  page_size: int = 16, pages_per_worker: Optional[int] = None,
-                 fleet: Any = None):
+                 fleet: Any = None, schedule: str = "ooo",
+                 collect_timeout_s: float = 600.0,
+                 profile_timing: bool = False):
         if num_microbatches < 1:
             raise ValueError(
                 f"num_microbatches must be >= 1, got {num_microbatches}")
+        if schedule not in ("ooo", "fifo"):
+            raise ValueError(
+                f"schedule must be 'ooo' (advance whichever micro-batch "
+                f"completes first) or 'fifo' (advance in issue order), "
+                f"got {schedule!r}")
+        if collect_timeout_s <= 0:
+            raise ValueError(
+                f"collect_timeout_s must be > 0, got {collect_timeout_s}")
         if batch < 1 or cache_len < 1:
             raise ValueError(
                 f"batch ({batch}) and cache_len ({cache_len}) must be >= 1")
@@ -427,6 +628,8 @@ class HeteroPipelineEngine:
         self.layers = per_layer_params(params, cfg)
         self.num_layers = cfg.num_layers
         self.fleet = fleet
+        self.schedule = schedule
+        self.collect_timeout_s = float(collect_timeout_s)
         # pages_per_worker sizes ONE pool = one (attn layer, micro-batch)
         # of one worker — the same per-layer-per-row convention as
         # cache_len (see RWorker docstring for the total footprint)
@@ -434,7 +637,7 @@ class HeteroPipelineEngine:
         self._worker_kwargs = dict(
             kv_chunk=kv_chunk, quantized=quantized_kv, paged=paged_kv,
             page_size=page_size, num_pages=pages_per_worker,
-            max_pages_per_seq=max_pages)
+            max_pages_per_seq=max_pages, profile_timing=profile_timing)
         if fleet is not None:
             # the fleet owns worker construction: profiles -> planned
             # (possibly uneven) partition -> RWorker instances
@@ -468,11 +671,26 @@ class HeteroPipelineEngine:
             [None] * self.num_layers for _ in range(self.num_mb)]
         self.mb_lengths = [jnp.zeros((self.mb_size,), jnp.int32)
                            for _ in range(self.num_mb)]
-        self._jit_pre: Dict[int, Any] = {}
-        self._jit_adv: Dict[Tuple[int, int], Any] = {}
+        self._jit_pre: Dict[int, Any] = {}               # legacy path
+        self._jit_adv: Dict[Tuple[int, int], Any] = {}   # legacy path
         self._jit_prefill = None
         self._embed = jax.jit(lambda p, t: p["embed"][t])
         self._logits = jax.jit(partial(M._logits, cfg=cfg))
+        # event-driven hot path: one completion channel for the whole
+        # fleet, fused layer-transition callables keyed by the worker
+        # partition (a topology change re-traces with the new slice
+        # boundaries baked in)
+        self._sink = CompletionSink(self.mb_size)
+        self._parity = 0
+        self._jit_start_cache: Dict[Tuple, Any] = {}
+        self._jit_step_cache: Dict[Tuple, Any] = {}
+        # most-recent partitions whose traces we keep (an oscillating
+        # rebalancer reuses A<->B without retracing; older topologies
+        # are evicted so executables don't accumulate over a long serve)
+        self._topo_lru: List[Tuple] = []
+        self._set_topo()
+        self.step_stats: Dict[str, float] = {}
+        self.last_step_stats: Dict[str, float] = {}
 
     # -- state loading ------------------------------------------------------
     def load_prefill(self, mb: int, tokens, prompt_lens, enc_feats=None):
@@ -522,46 +740,317 @@ class HeteroPipelineEngine:
             self._jit_adv[key] = jax.jit(f)
         return self._jit_adv[key]
 
+    # -- fused event-driven S-side callables ---------------------------------
+    _TOPO_KEEP = 4          # partitions whose compiled traces we retain
+
+    def _topo(self) -> Tuple:
+        return self._topo_cur
+
+    def _set_topo(self) -> None:
+        """Recompute the partition key and its trace-cache LRU — called
+        only when the topology actually changes (construction,
+        apply_partition), keeping the per-advance _step_fn lookup free
+        of tuple building and list bookkeeping."""
+        topo = tuple((int(lo), int(hi)) for lo, hi in self.slices)
+        self._topo_cur = topo
+        if topo in self._topo_lru:
+            self._topo_lru.remove(topo)
+        self._topo_lru.append(topo)
+        while len(self._topo_lru) > self._TOPO_KEEP:
+            dead = self._topo_lru.pop(0)
+            for cache in (self._jit_start_cache, self._jit_step_cache):
+                for k in [k for k in cache if k[-1] == dead]:
+                    del cache[k]
+
+    def _start_fn(self, li: int):
+        """embed -> s_pre(0), emitting per-worker r_in shards, one
+        dispatch.  Only ever traced for layer 0 — every later layer is
+        entered through a fused transition (:meth:`_step_fn`)."""
+        key = (li, self._topo())
+        f = self._jit_start_cache.get(key)
+        if f is None:
+            kind, _ = self.layers[li]
+            cfg, slices = self.cfg, self._topo()
+
+            def start(params, p, tokens, s_state, lengths):
+                h = params["embed"][tokens]
+                ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths, None, 0)
+                po, new_s = D.s_pre_stateful(kind, p, h, s_state, ctx)
+                return po.carry, shard_rin(po.r_in, slices), new_s
+
+            f = _quiet_donation_jit(start, (3,))
+            self._jit_start_cache[key] = f
+        return f
+
+    def _step_fn(self, li: int, phase: int):
+        """The fused layer-transition callable for ``(li, phase)`` plus
+        its static shape: ``"phase"`` (same block continues — DEC_XATTN),
+        ``"fused"`` (s_advance(li) -> s_pre(li+1) in ONE jitted dispatch,
+        r_in already sharded per worker), or ``"final"`` (s_advance of
+        the last layer fused with the logits head).  Inputs that are
+        dead after the call (carry, r_out, consumed s_state) are donated
+        so XLA can reuse their buffers."""
+        key = (li, phase, self._topo())
+        ent = self._jit_step_cache.get(key)
+        if ent is None:
+            kind, _ = self.layers[li]
+            cfg, slices = self.cfg, self._topo()
+            more = phase + 1 < D.num_phases(kind)
+            last = li + 1 >= self.num_layers
+            if more:
+                def f(p, carry, r_out, lengths):
+                    ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths,
+                                None, 0)
+                    po = D.s_advance(kind, phase, p, carry, r_out, ctx)
+                    return po.carry, shard_rin(po.r_in, slices)
+
+                ent = (_quiet_donation_jit(f, (1, 2)), "phase")
+            elif last:
+                def f(params, p, carry, r_out, lengths):
+                    ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths,
+                                None, 0)
+                    h = D.s_advance(kind, phase, p, carry, r_out, ctx)
+                    return M._logits(params, h=h, cfg=cfg)[:, 0]
+
+                ent = (_quiet_donation_jit(f, (2, 3)), "final")
+            else:
+                kind2, _ = self.layers[li + 1]
+
+                def f(p, p2, carry, r_out, s_state2, lengths):
+                    ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths,
+                                None, 0)
+                    h = D.s_advance(kind, phase, p, carry, r_out, ctx)
+                    po, new_s2 = D.s_pre_stateful(kind2, p2, h, s_state2,
+                                                  ctx)
+                    return po.carry, shard_rin(po.r_in, slices), new_s2
+
+                ent = (_quiet_donation_jit(f, (2, 3, 4)), "fused")
+            self._jit_step_cache[key] = ent
+        return ent
+
     # -- the pipelined decode step -------------------------------------------
-    def _dispatch(self, mb: int, li: int, phase: int, r_in) -> None:
-        kind, _ = self.layers[li]
-        for w in self.workers:
-            w.inq.put(((mb, li, phase), self._lkey(mb, li), kind, phase,
-                       rin_slice(r_in, w.lo, w.hi)))
-
-    def _collect(self, mb: int, li: int, phase: int):
-        parts = []
-        for w in self.workers:
-            tag, r_out = w.outq.get(timeout=600)
-            assert tag == (mb, li, phase), (tag, (mb, li, phase))
-            if isinstance(r_out, Exception):
-                raise RuntimeError(
-                    f"R-worker {w.wid} failed at layer {li}") from r_out
-            parts.append(r_out)
-        return batch_concat(parts)
-
     def decode_step(self, tokens_per_mb: Sequence[jnp.ndarray]):
-        """One new token for every sequence of every micro-batch.
+        """One new token for every sequence of every micro-batch —
+        event-driven: advance whichever micro-batch's R-results land
+        first (``schedule="ooo"``) or in issue order (``"fifo"``).
 
         tokens_per_mb: list of [mb_size, 1] int32.
         Returns list of logits [mb_size, vocab].
         """
         assert len(tokens_per_mb) == self.num_mb
+        pc = time.perf_counter
+        stats = {"dispatch_s": 0.0, "collect_s": 0.0, "s_dispatch_s": 0.0,
+                 "r_wait_s": 0.0, "ooo_advances": 0.0}
+        t_step0 = pc()
+        sink = self._sink
+        self._parity ^= 1
+        parity, epoch = self._parity, sink.epoch
+        pending: Dict[Tuple[int, int, int], set] = {}
+        issue_seq: Dict[Tuple[int, int, int], int] = {}
+        fifo: deque = deque()
+        ready: set = set()
+        carries: List[Any] = [None] * self.num_mb
+        logits_out: List[Any] = [None] * self.num_mb
+        emit_at: List[float] = [0.0] * self.num_mb
+        active = self.num_mb
+
+        def dispatch(mb: int, li: int, phase: int, shards) -> None:
+            t0 = pc()
+            tag = (epoch, parity, mb, li, phase)
+            pending[(mb, li, phase)] = {w.wid for w in self.workers}
+            issue_seq[(mb, li, phase)] = len(issue_seq)
+            if self.schedule == "fifo":
+                fifo.append((mb, li, phase))
+            kind, _ = self.layers[li]
+            lkey = self._lkey(mb, li)
+            for w, shard in zip(self.workers, shards):
+                w.inq.put((tag, lkey, kind, phase, shard, sink))
+            stats["dispatch_s"] += pc() - t0
+
+        def advance(mb: int, li: int, phase: int) -> None:
+            nonlocal active
+            # an advance is out-of-order when an earlier-issued tag is
+            # still outstanding — the FIFO schedule would have stalled
+            # here (the bench's inversion counter)
+            me = issue_seq[(mb, li, phase)]
+            if any(issue_seq[t] < me for t in pending):
+                stats["ooo_advances"] += 1.0
+            t0 = pc()
+            r_out = sink.gather((epoch, parity, mb, li, phase))
+            t1 = pc()
+            stats["collect_s"] += t1 - t0
+            fn, mode = self._step_fn(li, phase)
+            p = self.layers[li][1]
+            if mode == "phase":
+                carry, shards = fn(p, carries[mb], r_out,
+                                   self.mb_lengths[mb])
+                carries[mb] = carry
+                stats["s_dispatch_s"] += pc() - t1
+                dispatch(mb, li, phase + 1, shards)
+            elif mode == "fused":
+                carry, shards, new_s = fn(
+                    p, self.layers[li + 1][1], carries[mb], r_out,
+                    self.s_states[mb][li + 1], self.mb_lengths[mb])
+                carries[mb] = carry
+                self.s_states[mb][li + 1] = new_s
+                stats["s_dispatch_s"] += pc() - t1
+                dispatch(mb, li + 1, 0, shards)
+            else:
+                logits_out[mb] = fn(self.params, p, carries[mb], r_out,
+                                    self.mb_lengths[mb])
+                stats["s_dispatch_s"] += pc() - t1
+                # when this micro-batch's token becomes emittable — the
+                # streaming-latency metric the OoO schedule improves
+                # (FIFO holds a ready micro-batch behind the head)
+                emit_at[mb] = pc() - t_step0
+                active -= 1
+
+        for mb in range(self.num_mb):
+            t0 = pc()
+            carry, shards, new_s = self._start_fn(0)(
+                self.params, self.layers[0][1], tokens_per_mb[mb],
+                self.s_states[mb][0], self.mb_lengths[mb])
+            carries[mb] = carry
+            self.s_states[mb][0] = new_s
+            stats["s_dispatch_s"] += pc() - t0
+            dispatch(mb, 0, 0, shards)
+
+        try:
+            while active:
+                t0 = pc()
+                try:
+                    wid, tag, err = sink.q.get(
+                        timeout=self.collect_timeout_s)
+                except queue.Empty:
+                    waiting = "; ".join(
+                        f"micro-batch {mb} layer {li} "
+                        f"({self.layers[li][0]}) phase {ph} "
+                        f"from worker(s) {sorted(ws)}"
+                        for (mb, li, ph), ws in sorted(pending.items()))
+                    raise RuntimeError(
+                        f"timed out after {self.collect_timeout_s:.0f}s "
+                        f"waiting for R-worker results — outstanding: "
+                        f"{waiting or 'none'}") from None
+                stats["r_wait_s"] += pc() - t0
+                t_epoch, t_parity, mb, li, phase = tag
+                if t_epoch != epoch or t_parity != parity:
+                    continue  # fenced-off straggler from an older step
+                kind = self.layers[li][0]
+                if err is not None:
+                    ctx = getattr(err, "r_worker_context", None)
+                    raise RuntimeError(
+                        f"R-worker {wid} failed on micro-batch {mb}, "
+                        f"layer {li} ({kind}), phase {phase}"
+                        + (f" [worker context: wid={ctx[0]} lkey={ctx[1]} "
+                           f"kind={ctx[2]} phase={ctx[3]}]" if ctx else "")
+                    ) from err
+                outstanding = pending.get((mb, li, phase))
+                if outstanding is None or wid not in outstanding:
+                    raise RuntimeError(
+                        f"R-worker {wid} posted an unexpected completion "
+                        f"for micro-batch {mb}, layer {li} ({kind}), "
+                        f"phase {phase} — outstanding work: "
+                        f"{sorted(pending) or 'none'}")
+                outstanding.discard(wid)
+                if outstanding:
+                    continue
+                del pending[(mb, li, phase)]
+                if self.schedule == "fifo":
+                    ready.add((mb, li, phase))
+                    while fifo and fifo[0] in ready:
+                        nxt = fifo.popleft()
+                        ready.discard(nxt)
+                        advance(*nxt)
+                else:
+                    advance(mb, li, phase)
+        except Exception:
+            # never let the next step consume this step's leftovers
+            sink.fence()
+            raise
+
+        outs = []
+        for mb in range(self.num_mb):
+            outs.append(logits_out[mb])
+            self.mb_lengths[mb] = self.mb_lengths[mb] + 1
+        stats["step_s"] = pc() - t_step0
+        stats["emit_mean_s"] = sum(emit_at) / self.num_mb
+        self.last_step_stats = stats
+        for k, v in stats.items():
+            self.step_stats[k] = self.step_stats.get(k, 0.0) + v
+        self.step_stats["steps"] = self.step_stats.get("steps", 0.0) + 1.0
+        return outs
+
+    # -- the pre-fusion FIFO decode step (A/B baseline) ----------------------
+    def _dispatch(self, mb: int, li: int, phase: int, r_in) -> None:
+        kind, _ = self.layers[li]
+        for w in self.workers:
+            w.inq.put(((mb, li, phase), self._lkey(mb, li), kind, phase,
+                       rin_slice(r_in, w.lo, w.hi), None))
+
+    def decode_step_legacy(self, tokens_per_mb: Sequence[jnp.ndarray]):
+        """The pre-fusion hot path: strict FIFO collection, separate
+        ``_pre``/``_adv`` dispatches, interpreter-level ``rin_slice``
+        fan-out and device-side ``batch_concat`` fan-in.  Kept as the
+        A/B baseline for benchmarks/bench_hotpath.py and as a second
+        correctness oracle — numerics are identical to
+        :meth:`decode_step` up to float association."""
+        assert len(tokens_per_mb) == self.num_mb
+        pc = time.perf_counter
+        stats = {"dispatch_s": 0.0, "collect_s": 0.0, "s_dispatch_s": 0.0,
+                 "r_wait_s": 0.0}
+        t_step0 = pc()
         mbs = [_MbState() for _ in range(self.num_mb)]
         order: List[Tuple[int, int, int]] = []
+
+        def timed_dispatch(mb: int, li: int, phase: int, r_in) -> None:
+            t0 = pc()
+            self._dispatch(mb, li, phase, r_in)
+            stats["dispatch_s"] += pc() - t0
+
+        def timed_collect(mb: int, li: int, phase: int):
+            kind, _ = self.layers[li]
+            parts = []
+            for w in self.workers:
+                t0 = pc()
+                try:
+                    tag, r_out = w.outq.get(timeout=self.collect_timeout_s)
+                except queue.Empty:
+                    raise RuntimeError(
+                        f"timed out after {self.collect_timeout_s:.0f}s "
+                        f"waiting for R-worker {w.wid} on micro-batch {mb}, "
+                        f"layer {li} ({kind}), phase {phase}") from None
+                stats["r_wait_s"] += pc() - t0
+                if isinstance(r_out, Exception):
+                    raise RuntimeError(
+                        f"R-worker {w.wid} failed on micro-batch {mb}, "
+                        f"layer {li} ({kind}), phase {phase}") from r_out
+                if tag != (mb, li, phase):
+                    raise RuntimeError(
+                        f"R-worker {w.wid} returned a result for "
+                        f"(micro-batch, layer, phase) {tag}, expected "
+                        f"({mb}, {li}, {phase}) ({kind})")
+                parts.append(r_out)
+            t0 = pc()
+            out = batch_concat(parts)
+            stats["collect_s"] += pc() - t0
+            return out
 
         def start_layer(mb: int, li: int) -> None:
             st = mbs[mb]
             kind, p = self.layers[li]
+            t0 = pc()
             po, new_s = self._pre(li)(p, st.h, self.s_states[mb][li],
                                       self.mb_lengths[mb])
+            stats["s_dispatch_s"] += pc() - t0
             self.s_states[mb][li] = new_s
             st.carry = po.carry
-            self._dispatch(mb, li, 0, po.r_in)
+            timed_dispatch(mb, li, 0, po.r_in)
             order.append((mb, li, 0))
 
         for mb in range(self.num_mb):
+            t0 = pc()
             mbs[mb].h = self._embed(self.params, tokens_per_mb[mb])
+            stats["s_dispatch_s"] += pc() - t0
             start_layer(mb, 0)
 
         qi = 0
@@ -569,14 +1058,16 @@ class HeteroPipelineEngine:
             mb, li, phase = order[qi]
             qi += 1
             kind, p = self.layers[li]
-            r_out = self._collect(mb, li, phase)
+            r_out = timed_collect(mb, li, phase)
+            t0 = pc()
             res = self._adv(li, phase)(p, mbs[mb].carry, r_out,
                                        self.mb_lengths[mb])
+            stats["s_dispatch_s"] += pc() - t0
             if isinstance(res, tuple) and len(res) == 2 and res[1] is not None \
                     and isinstance(res[1], dict):
                 # next phase of the same block (DEC_XATTN)
                 mbs[mb].carry = res[0]
-                self._dispatch(mb, li, phase + 1, res[1])
+                timed_dispatch(mb, li, phase + 1, res[1])
                 order.append((mb, li, phase + 1))
             else:
                 h = res[0] if isinstance(res, tuple) else res
@@ -588,10 +1079,21 @@ class HeteroPipelineEngine:
 
         outs = []
         for mb in range(self.num_mb):
+            t0 = pc()
             logits = self._logits(self.params, h=mbs[mb].h)[:, 0]
+            stats["s_dispatch_s"] += pc() - t0
             outs.append(logits)
             self.mb_lengths[mb] = self.mb_lengths[mb] + 1
+        stats["step_s"] = pc() - t_step0
+        self.last_step_stats = stats
+        for k, v in stats.items():
+            self.step_stats[k] = self.step_stats.get(k, 0.0) + v
+        self.step_stats["steps"] = self.step_stats.get("steps", 0.0) + 1.0
         return outs
+
+    def reset_step_stats(self) -> None:
+        self.step_stats = {}
+        self.last_step_stats = {}
 
     # -- bookkeeping ----------------------------------------------------------
     def worker_busy_times(self) -> List[float]:
@@ -690,6 +1192,13 @@ class HeteroPipelineEngine:
 
         Must be called between decode steps.  Returns the number of
         (row, micro-batch) assignments that changed owner."""
+        # fence the completion channel FIRST: any in-flight tag from
+        # before the topology change (e.g. a delayed delivery, or
+        # leftovers of an aborted step) carries the old epoch and is
+        # dropped instead of being mistaken for new-partition work.  The
+        # fused S-side callables are keyed on the slice tuple, so the
+        # new partition re-traces with its own boundaries baked in.
+        self._sink.fence()
         workers = list(self.workers) if workers is None else list(workers)
         new_slices = [(int(lo), int(hi)) for lo, hi in new_slices]
         if len(workers) != len(new_slices):
@@ -746,6 +1255,7 @@ class HeteroPipelineEngine:
                     lk, lo, hi, old_spans, exports[lk], lost))
         self.workers = workers
         self.slices = new_slices
+        self._set_topo()
         return moved * self.num_mb
 
     def remove_worker(self, widx: int, new_slices=None, lost=None):

@@ -16,7 +16,7 @@ import math
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.core.config import ModelConfig
+from repro.core.config import DEC_XATTN, ModelConfig
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +293,65 @@ def plan_hetero(cfg: ModelConfig, hw_s: Hardware,
         "e_of_b": e_of_b(cfg, hw_s, b),
         "tokens_per_s": b / (2 * cfg.num_layers * t_of_b(cfg, hw_s, b)),
     }
+
+
+# ---------------------------------------------------------------------------
+# orchestration overhead (the decode hot path's per-step tax — what the
+# paper's eq. 7-11 ignore but "Understanding Bottlenecks for Efficiently
+# Serving LLM Inference With KV Offloading" shows dominates offloaded
+# decode; calibrated from benchmarks/bench_hotpath.py step breakdowns)
+# ---------------------------------------------------------------------------
+def phases_per_layer_step(cfg: ModelConfig) -> int:
+    """S<->R round-trips per micro-batch per decode step = Σ phases over
+    the layers (a DEC_XATTN block takes two: self- then cross-attn —
+    decompose.num_phases' rule, restated here so perfmodel stays free of
+    the jax-heavy decompose import)."""
+    return sum(2 if k == DEC_XATTN else 1 for k in cfg.pattern)
+
+
+@dataclass(frozen=True)
+class OrchestrationOverhead:
+    """Per-layer-transition orchestration costs of the event-driven hot
+    path (seconds): ``dispatch_s`` per worker enqueue, ``collect_s`` per
+    buffer->device gather, ``s_dispatch_s`` per fused jitted S-call
+    invocation.  All are host-side tax serialized on the S-worker's
+    driver thread — they bound throughput once the R-Part itself is off
+    the critical path."""
+    dispatch_s: float = 0.0
+    collect_s: float = 0.0
+    s_dispatch_s: float = 0.0
+
+    def per_step(self, cfg: ModelConfig, num_mb: int,
+                 num_workers: int) -> float:
+        """The whole-step tax: every micro-batch crosses the S<->R
+        boundary once per layer phase."""
+        trans = phases_per_layer_step(cfg) * max(1, num_mb)
+        return trans * (self.s_dispatch_s + self.collect_s
+                        + max(1, num_workers) * self.dispatch_s)
+
+
+def calibrate_orchestration(step_stats: Dict[str, float], cfg: ModelConfig,
+                            num_mb: int,
+                            num_workers: int) -> OrchestrationOverhead:
+    """Fit the per-transition terms from an engine's cumulative
+    ``step_stats`` (HeteroPipelineEngine.step_stats / ServingEngine.
+    hotpath_stats()) — the measured counterpart of the analytic forms."""
+    steps = max(1.0, float(step_stats.get("steps", 1.0)))
+    trans = float(phases_per_layer_step(cfg) * max(1, num_mb))
+    return OrchestrationOverhead(
+        dispatch_s=step_stats.get("dispatch_s", 0.0)
+        / (steps * trans * max(1, num_workers)),
+        collect_s=step_stats.get("collect_s", 0.0) / (steps * trans),
+        s_dispatch_s=step_stats.get("s_dispatch_s", 0.0) / (steps * trans))
+
+
+def tokens_per_s_with_overhead(cfg: ModelConfig, hw_s: Hardware, b: int,
+                               num_mb: int, num_workers: int,
+                               overhead: OrchestrationOverhead) -> float:
+    """The plan() ideal rate 𝓑 / (2·N·𝕋(𝓑)) degraded by the measured
+    per-step orchestration tax — what the pipeline actually sustains."""
+    t_ideal = 2.0 * cfg.num_layers * t_of_b(cfg, hw_s, b)
+    return b / (t_ideal + overhead.per_step(cfg, num_mb, num_workers))
 
 
 # ---------------------------------------------------------------------------

@@ -69,7 +69,8 @@ class FleetManager:
                                              * prof.page_pool_scale))
             w = RWorker(len(workers), cfg, lo, hi, profile=prof,
                         slowdown=prof.sim_slowdown,
-                        sim_row_cost=prof.sim_row_cost, **kw)
+                        sim_row_cost=prof.sim_row_cost,
+                        sim_deliver_jitter=prof.sim_deliver_jitter, **kw)
             self._profile_of[id(w)] = prof
             self._spawned_profiles.append(prof)
             workers.append(w)

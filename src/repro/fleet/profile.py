@@ -39,9 +39,14 @@ class WorkerProfile:
     # sim_slowdown multiplies the worker's real compute time (a slower
     # device doing the same work); sim_row_cost adds a deterministic
     # seconds-per-row service time (a bandwidth-bound worker streaming
-    # its rows' KV) — the latter is robust on noisy shared-CPU hosts
+    # its rows' KV) — the latter is robust on noisy shared-CPU hosts;
+    # sim_deliver_jitter delays result DELIVERY by uniform [0, j)
+    # seconds without occupying the worker (an async send over a
+    # jittery link) — the knob that makes completion order diverge
+    # from issue order, which is what the OoO schedule exploits
     sim_slowdown: float = 1.0
     sim_row_cost: float = 0.0
+    sim_deliver_jitter: float = 0.0
     hardware: Optional[Hardware] = None
 
     def scaled_hw(self, base: Hardware = TPU_V5E) -> Hardware:

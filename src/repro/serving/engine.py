@@ -27,6 +27,14 @@ rebalancing, and failure recovery run around each step (``pre_step`` /
 history (``_replay_rows``), and admission is re-costed after a topology
 change (``_recost_admission``).  See repro.fleet and
 docs/ARCHITECTURE.md ("Fleet management").
+
+The hetero decode step is event-driven (core.hetero ``CompletionSink``):
+``schedule="ooo"`` (default) advances whichever micro-batch's R-results
+land first, ``"fifo"`` pins issue order (the A/B baseline);
+``collect_timeout_s`` bounds how long a step waits on a straggler before
+raising a RuntimeError that names the missing worker/micro-batch/layer/
+phase.  Per-step dispatch/collect/S-dispatch/R-wait breakdowns are at
+``hotpath_stats()`` (benchmarks/bench_hotpath.py).
 """
 from __future__ import annotations
 
@@ -100,7 +108,9 @@ class ServingEngine:
                  kv_chunk: int = 1024, quantized_kv: bool = False,
                  paged_kv: bool = False, page_size: int = 16,
                  pages_per_worker: Optional[int] = None, seed: int = 0,
-                 fleet=None):
+                 fleet=None, schedule: str = "ooo",
+                 collect_timeout_s: float = 600.0,
+                 profile_timing: bool = False):
         if backend not in ("colocated", "hetero"):
             raise ValueError(
                 f"backend must be 'colocated' or 'hetero', got {backend!r}")
@@ -138,7 +148,9 @@ class ServingEngine:
                 num_microbatches=num_microbatches, kv_chunk=kv_chunk,
                 quantized_kv=quantized_kv, paged_kv=paged_kv,
                 page_size=page_size, pages_per_worker=pages_per_worker,
-                fleet=fleet)
+                fleet=fleet, schedule=schedule,
+                collect_timeout_s=collect_timeout_s,
+                profile_timing=profile_timing)
             self.num_mb = num_microbatches
             self.mb_size = batch // num_microbatches
             for mb in range(self.num_mb):
@@ -456,6 +468,12 @@ class ServingEngine:
     def paged_resident_bytes(self) -> float:
         """Current page-backed KV bytes on the R-workers (paged_kv only)."""
         return self.engine.paged_resident_bytes() if self.paged_kv else 0.0
+
+    def hotpath_stats(self) -> Dict[str, float]:
+        """Cumulative decode hot-path breakdown (dispatch / collect /
+        S-dispatch / R-wait seconds and step count) from the pipelined
+        engine; empty for the colocated backend."""
+        return dict(getattr(self.engine, "step_stats", {}) or {})
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         while (self.queue or any(r is not None for r in self.slots)) \

@@ -65,6 +65,138 @@ def test_pipeline_keeps_workers_busy(rng, key):
         eng.close()
 
 
+def _skewed(eng, rng, jitter=2e-3):
+    """Randomized per-worker slowdown + async delivery jitter: the
+    completion order seen by the S-worker diverges from issue order, so
+    the event loop's out-of-order advance actually exercises."""
+    for w in eng.workers:
+        w.slowdown = float(rng.uniform(1.0, 3.0))
+        w.sim_deliver_jitter = jitter
+
+
+def _hetero_logits(params, cfg, tokens, plens, gen, rng=None, step=None,
+                   workers=3, **kw):
+    batch = tokens.shape[0]
+    eng = HeteroPipelineEngine(params, cfg, batch=batch, cache_len=S + gen,
+                               num_r_workers=workers,
+                               num_microbatches=2, kv_chunk=8, **kw)
+    if rng is not None:
+        _skewed(eng, rng)
+    h = batch // 2
+    eng.load_prefill(0, tokens[:h, :S], plens[:h])
+    eng.load_prefill(1, tokens[h:, :S], plens[h:])
+    step_fn = eng.decode_step if step is None else getattr(eng, step)
+    logs = []
+    try:
+        for t in range(gen):
+            tok = tokens[:, S + t:S + t + 1]
+            logs.append(jnp.concatenate(step_fn([tok[:h], tok[h:]]), 0))
+    finally:
+        eng.close()
+    return jnp.stack(logs)
+
+
+@pytest.mark.parametrize("storage", ["dense", "paged", "int8"])
+def test_ooo_completion_matches_colocated_under_skew(storage, rng, key):
+    """The event-driven loop must be order-independent: 3 workers with
+    randomized slowdown and delivery jitter (completions arrive out of
+    issue order) still reproduce the colocated oracle across dense,
+    paged, and int8 R-worker storage."""
+    b6 = 6                                   # mb_size 3 = one row/worker
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b6, S + 3)))
+    plens = jnp.asarray((5, 12, 3, 9, 7, 2), jnp.int32)
+    kw = {"paged": dict(paged_kv=True, page_size=4),
+          "int8": dict(quantized_kv=True),
+          "dense": {}}[storage]
+
+    skewed = _hetero_logits(params, cfg, tokens, plens, 3, rng=rng, **kw)
+    ref = ColocatedEngine(params, cfg, batch=b6, cache_len=S + 3)
+    ref.load_prefill(tokens[:, :S], plens)
+    refs = jnp.stack([ref.decode_step(tokens[:, S + t:S + t + 1])
+                      for t in range(3)])
+    if storage == "int8":
+        # int8 quantization points are identical regardless of
+        # completion order, so OoO-skewed must match the unskewed
+        # int8 pipeline to fp tolerance — and stay near the fp oracle
+        # within the (much looser) quantization bound
+        calm = _hetero_logits(params, cfg, tokens, plens, 3, **kw)
+        assert float(jnp.abs(skewed - calm).max()) < 2e-4
+        assert float(jnp.abs(skewed - refs).max()) < 0.5
+    else:
+        assert float(jnp.abs(skewed - refs).max()) < 2e-4
+
+
+def test_fifo_schedule_matches_ooo(rng, key):
+    """schedule="fifo" (in-order advance on the same event machinery)
+    and the pre-fusion legacy loop both match the default OoO path."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 3)))
+    plens = jnp.full((B,), S, jnp.int32)
+    ooo = _hetero_logits(params, cfg, tokens, plens, 3, workers=2)
+    fifo = _hetero_logits(params, cfg, tokens, plens, 3, workers=2,
+                          schedule="fifo")
+    legacy = _hetero_logits(params, cfg, tokens, plens, 3, workers=2,
+                            step="decode_step_legacy")
+    assert float(jnp.abs(ooo - fifo).max()) < 1e-5
+    # the fused callables may re-associate floats vs the split legacy
+    # dispatches — equal within fp tolerance, not bitwise
+    assert float(jnp.abs(ooo - legacy).max()) < 2e-4
+
+
+def test_collect_timeout_names_the_stragglers(rng, key):
+    """A worker that never answers must produce a RuntimeError naming
+    the outstanding (worker, micro-batch, layer, phase) — not a bare
+    assert or an eternal hang."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    eng = HeteroPipelineEngine(params, cfg, batch=4, cache_len=16,
+                               num_r_workers=2, num_microbatches=2,
+                               collect_timeout_s=0.5)
+    eng.load_prefill(0, jnp.ones((2, 4), jnp.int32), jnp.full((2,), 4))
+    eng.load_prefill(1, jnp.ones((2, 4), jnp.int32), jnp.full((2,), 4))
+    try:
+        eng.workers[0].kill()
+        eng.workers[0].join(timeout=5)
+        with pytest.raises(RuntimeError, match=r"timed out.*layer 0"):
+            eng.decode_step([jnp.ones((2, 1), jnp.int32)] * 2)
+        # legacy collect names the specific worker it blocked on
+        with pytest.raises(RuntimeError, match=r"R-worker 0"):
+            eng.decode_step_legacy([jnp.ones((2, 1), jnp.int32)] * 2)
+    finally:
+        eng.close()
+
+
+def test_worker_failure_preserves_context_and_traceback(rng, key):
+    """An R-side exception must surface with the worker/layer/kind/phase
+    coordinates AND the original exception chained (`raise ... from`),
+    so the real traceback is not lost across the thread boundary."""
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    eng = HeteroPipelineEngine(params, cfg, batch=4, cache_len=16,
+                               num_r_workers=2, num_microbatches=2,
+                               collect_timeout_s=30)
+    eng.load_prefill(0, jnp.ones((2, 4), jnp.int32), jnp.full((2,), 4))
+    eng.load_prefill(1, jnp.ones((2, 4), jnp.int32), jnp.full((2,), 4))
+    try:
+        # corrupt one layer's state on one worker: its R-Part will raise
+        eng.workers[0].state[eng._lkey(0, 1)] = {"bogus": jnp.zeros((2,))}
+        with pytest.raises(RuntimeError,
+                           match=r"R-worker 0 .*micro-batch 0, layer 1") \
+                as exc_info:
+            for _ in range(2):
+                eng.decode_step([jnp.ones((2, 1), jnp.int32)] * 2)
+        cause = exc_info.value.__cause__
+        assert cause is not None and cause.__traceback__ is not None
+        assert getattr(cause, "r_worker_context", None) is not None
+        wid, lkey, kind, phase = cause.r_worker_context
+        assert (wid, lkey, phase) == (0, eng._lkey(0, 1), 0)
+    finally:
+        eng.close()
+
+
 def test_quantized_kv_hetero_close_to_fp(rng, key):
     """§5.2 end-to-end: int8-KV R-workers track the fp pipeline within the
     quantization error bound."""

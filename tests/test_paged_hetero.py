@@ -221,3 +221,34 @@ def test_serving_paged_allocates_and_frees(rng, key):
         assert peak < 0.75 * dense
     finally:
         eng.close()
+
+
+def test_serving_paged_ooo_skew_frees_all_pages(rng, key):
+    """Continuous batching on the event-driven loop with skewed, jittery
+    workers: completions arrive out of issue order across micro-batches,
+    yet the page accounting must stay exact — every page returned when
+    the pool drains, every request finished."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import Request
+
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    eng = ServingEngine(params, cfg, batch=4, cache_len=48,
+                        backend="hetero", paged_kv=True, page_size=4,
+                        num_r_workers=2, schedule="ooo")
+    for i, w in enumerate(eng.engine.workers):
+        w.slowdown = 1.0 + i            # worker 1 twice as slow
+        w.sim_deliver_jitter = 1e-3
+    try:
+        for i in range(5):
+            plen = int(rng.integers(3, 14))
+            prompt = np.asarray(rng.integers(1, cfg.vocab_size, (plen,)),
+                                np.int32)
+            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=4))
+        eng.run(max_steps=200)
+        assert len(eng.finished) == 5
+        assert eng.paged_resident_bytes() == 0.0
+        stats = eng.hotpath_stats()
+        assert stats.get("steps", 0) > 0 and stats.get("r_wait_s", 0) > 0
+    finally:
+        eng.close()

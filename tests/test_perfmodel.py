@@ -91,3 +91,35 @@ def test_tpu_adaptation_plan(llama7b):
     plan = P.plan(llama7b, P.TPU_V5E, P.TPU_V5E, seq_len=1024)
     assert plan["batch"] >= 64
     assert plan["tokens_per_s"] > 1000
+
+
+def test_orchestration_overhead_term(llama7b):
+    """The calibrate -> per_step round trip is exact, and the overhead
+    term strictly degrades the ideal token rate."""
+    whisper = get_arch("whisper-medium")
+    assert P.phases_per_layer_step(llama7b) == llama7b.num_layers
+    # every whisper decoder block is DEC_XATTN: two phases each
+    assert P.phases_per_layer_step(whisper) == 2 * whisper.num_layers
+
+    num_mb, workers = 2, 3
+    truth = P.OrchestrationOverhead(dispatch_s=2e-6, collect_s=5e-6,
+                                    s_dispatch_s=11e-6)
+    trans = P.phases_per_layer_step(llama7b) * num_mb
+    stats = {"steps": 7.0,
+             "dispatch_s": 7.0 * trans * workers * truth.dispatch_s,
+             "collect_s": 7.0 * trans * truth.collect_s,
+             "s_dispatch_s": 7.0 * trans * truth.s_dispatch_s}
+    fit = P.calibrate_orchestration(stats, llama7b, num_mb, workers)
+    assert abs(fit.dispatch_s - truth.dispatch_s) < 1e-12
+    assert abs(fit.per_step(llama7b, num_mb, workers)
+               - truth.per_step(llama7b, num_mb, workers)) < 1e-9
+
+    plan = P.plan(llama7b, P.GPU_A10, P.CPU_EPYC, seq_len=1024)
+    ideal, b = plan["tokens_per_s"], plan["batch"]
+    with_ovh = P.tokens_per_s_with_overhead(llama7b, P.GPU_A10, b,
+                                            num_mb, workers, truth)
+    assert 0 < with_ovh < ideal
+    zero = P.tokens_per_s_with_overhead(llama7b, P.GPU_A10, b, num_mb,
+                                        workers, P.OrchestrationOverhead())
+    assert abs(zero - b / (2 * llama7b.num_layers
+                           * P.t_of_b(llama7b, P.GPU_A10, b))) < 1e-9
