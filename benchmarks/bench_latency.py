@@ -30,6 +30,10 @@ def run(print_fn=print):
     cfg, params = bench_model(layers=2, d_model=128)
     cache_len, prompt = 160, 32
     out = {}
+    # these rows time engine.decode_step ONLY (prefill happens once,
+    # outside the timed loop) — i.e. they already report the decode-only
+    # step time ServingEngine.StepRecord.decode_wall now isolates
+    print_fn(csv_row("latency_config", 0.0, "scope=decode-step-only"))
     for name, batch in [("small_b4", 4), ("large_b32", 32)]:
         eng = HeteroPipelineEngine(params, cfg, batch=batch,
                                    cache_len=cache_len, num_r_workers=2,

@@ -67,11 +67,15 @@ def run(print_fn=print):
     # smoke run scales it down
     ramp = len(sls_r) // 2 if smoke() else 30
     ps = max(x.resident_len for x in sls_r[ramp:])
-    wg = np.mean([x.wall for x in greedy if x.active])
-    ws = np.mean([x.wall for x in sls_r if x.active])
+    # decode-only step time: StepRecord.wall is split since PR 4, so
+    # admission/prefill bursts no longer poison the step-latency rows
+    # (baseline reset — rows before the split are not comparable)
+    wg = np.mean([x.decode_wall for x in greedy if x.active])
+    ws = np.mean([x.decode_wall for x in sls_r if x.active])
     out["engine"] = (ps / pg,)
     print_fn(csv_row("sls_engine_peak_resident", ws * 1e6,
-                     f"sls_peak={ps},greedy_peak={pg},ratio={ps/pg:.2f}"))
+                     f"sls_peak={ps},greedy_peak={pg},ratio={ps/pg:.2f},"
+                     f"baseline_reset=pr4:decode-wall-only"))
     return out
 
 

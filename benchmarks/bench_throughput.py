@@ -99,7 +99,8 @@ def run(print_fn=print):
     # best-of-3 windows) — ratios before/after the reset are not
     # comparable
     print_fn(csv_row("throughput_config", 0.0,
-                     "baseline_reset=pr3:L4,d256,b128,cache256,best-of-3"))
+                     "baseline_reset=pr3:L4,d256,b128,cache256,best-of-3;"
+                     "scope=decode-step-only"))
     base = rows[0][1]
     for name, tps in rows:
         print_fn(csv_row(name, 1e6 / tps, f"{tps:.1f}tok/s,{tps/base:.2f}x"))

@@ -25,6 +25,8 @@ BENCHES = [
     ("fig8", "benchmarks.bench_fig8", "Fig. 8 layer-count linearity"),
     ("kernels", "benchmarks.bench_kernels", "§5.1/5.2 R-Part kernels"),
     ("paged", "benchmarks.bench_paged", "Paged vs dense R-worker KV"),
+    ("prefill", "benchmarks.bench_prefill",
+     "Chunked-vs-monolithic prefill, continuous arrivals"),
     ("fleet", "benchmarks.bench_fleet", "Fleet skew/rebalance/recovery"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),

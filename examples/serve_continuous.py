@@ -25,6 +25,10 @@ ap.add_argument("--batch", type=int, default=8)
 ap.add_argument("--max-new", type=int, default=24)
 ap.add_argument("--backend", default="hetero",
                 choices=["hetero", "colocated"])
+ap.add_argument("--prefill-chunk", type=int, default=8,
+                help="stream prompts into the pipeline this many tokens "
+                     "per step (0 = monolithic whole-prompt prefill; "
+                     "hetero only)")
 args = ap.parse_args()
 
 cfg = get_arch("qwen3-8b").reduced(layers=4, d_model=128, vocab=1024)
@@ -34,7 +38,9 @@ rng = np.random.default_rng(0)
 eng = ServingEngine(params, cfg, batch=args.batch, cache_len=128,
                     backend=args.backend, admission="loadctl",
                     target_len=8 + args.max_new, interval=6,
-                    num_r_workers=2, num_microbatches=2, kv_chunk=128)
+                    num_r_workers=2, num_microbatches=2, kv_chunk=128,
+                    prefill_chunk=(args.prefill_chunk
+                                   if args.backend == "hetero" else 0))
 for i in range(args.requests):
     plen = int(rng.integers(4, 12))
     eng.submit(Request(rid=i,

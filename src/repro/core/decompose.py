@@ -72,20 +72,67 @@ def r_attention(r_in: Dict[str, jnp.ndarray], r_state, *, window: int,
 
     r_in: q [B,1,Hq,Dh] (rope'd), k,v [B,1,Hkv,Dh] (k rope'd),
           lengths [B].  r_state: {k,v,pos} caches.
+
+    An optional boolean ``r_in["active"]`` [B] gates the append: inactive
+    rows (released slots, rows mid-chunked-prefill) write nothing and
+    keep their stored state verbatim — their attention output is garbage
+    the engine discards.
     """
     q, k, v, lengths = r_in["q"], r_in["k"], r_in["v"], r_in["lengths"]
     cache_n = r_state["k"].shape[1]
     b = q.shape[0]
     slot = (lengths % cache_n).astype(jnp.int32)
     bidx = jnp.arange(b)
-    kc = r_state["k"].at[bidx, slot].set(k[:, 0])
-    vc = r_state["v"].at[bidx, slot].set(v[:, 0])
-    pc = r_state["pos"].at[bidx, slot].set(lengths)
+    act = r_in.get("active")
+    if act is not None:
+        slot = jnp.where(act, slot, cache_n)            # OOB -> dropped
+        kc = r_state["k"].at[bidx, slot].set(k[:, 0], mode="drop")
+        vc = r_state["v"].at[bidx, slot].set(v[:, 0], mode="drop")
+        pc = r_state["pos"].at[bidx, slot].set(lengths, mode="drop")
+    else:
+        kc = r_state["k"].at[bidx, slot].set(k[:, 0])
+        vc = r_state["v"].at[bidx, slot].set(v[:, 0])
+        pc = r_state["pos"].at[bidx, slot].set(lengths)
     o = L.flash_attention(q, kc, vc, lengths[:, None], pc, causal=True,
                           window=window, softcap=softcap,
                           kv_chunk=max(cache_n, kv_chunk))
     new_state = dict(r_state)          # preserve e.g. static cross-KV (xk/xv)
     new_state.update({"k": kc, "v": vc, "pos": pc})
+    return {"o": o}, new_state
+
+
+def r_attention_chunk(r_in: Dict[str, jnp.ndarray], r_state, *, window: int,
+                      softcap: float, kv_chunk: int = 1024):
+    """Chunked-prefill R-Part: append C prompt tokens per row and attend
+    them against [old cache + chunk] (write-then-attend semantics, equal
+    to whole-prompt prefill up to float association).
+
+    r_in: q [B,C,Hq,Dh], k,v [B,C,Hkv,Dh] (rope'd), lengths [B] (tokens
+    already cached per row — the KV offset), valid [B,C] bool (False for
+    chunk padding and rows not being prefilled: they write nothing and
+    their output is discarded).  Old cache entries at positions >= the
+    row's offset (stale data from a previous occupant) are masked out;
+    ring discipline keeps only the last min(C_valid, cache_n) chunk
+    tokens, as whole-prompt prefill does.
+    """
+    q, k, v = r_in["q"], r_in["k"], r_in["v"]
+    base, valid = r_in["lengths"], r_in["valid"]
+    cache_n = r_state["k"].shape[1]
+    b, c = q.shape[:2]
+    qpos = base[:, None] + jnp.arange(c)[None, :]
+    slots, old_pos, kpos_new = L.chunk_ring_plan(
+        r_state["pos"], base, valid, qpos, cache_n)
+    bidx = jnp.arange(b)[:, None]
+    kcat = jnp.concatenate([r_state["k"], k], axis=1)
+    vcat = jnp.concatenate([r_state["v"], v], axis=1)
+    pcat = jnp.concatenate([old_pos, kpos_new], axis=1)
+    o = L.flash_attention(q, kcat, vcat, qpos, pcat, causal=True,
+                          window=window, softcap=softcap,
+                          kv_chunk=max(kcat.shape[1], kv_chunk))
+    new_state = dict(r_state)
+    new_state["k"] = r_state["k"].at[bidx, slots].set(k, mode="drop")
+    new_state["v"] = r_state["v"].at[bidx, slots].set(v, mode="drop")
+    new_state["pos"] = r_state["pos"].at[bidx, slots].set(qpos, mode="drop")
     return {"o": o}, new_state
 
 
@@ -101,16 +148,51 @@ def r_cross_attention(r_in, r_state, *, kv_chunk: int = 1024):
 
 
 def r_rglru(r_in, r_state):
-    """h_t = a ⊙ h_{t-1} + b — the parameter-free LRU recurrence."""
+    """h_t = a ⊙ h_{t-1} + b — the parameter-free LRU recurrence.
+    Optional ``active`` [B] gates the state update (inactive rows keep
+    their h verbatim)."""
     a, b_ = r_in["a"], r_in["b"]
     h = a * r_state["h"] + b_
+    act = r_in.get("active")
+    if act is not None:
+        h = jnp.where(act[:, None], h, r_state["h"])
     return {"h": h}, {"h": h}
 
 
+def r_rglru_chunk(r_in, r_state):
+    """Chunked-prefill LRU: scan h_t = a_t h_{t-1} + b_t over the chunk
+    from the stored h.  Invalid positions carry identity gates (a=1,
+    b=0), so short prompts and not-prefilled rows leave h untouched.
+    r_in: a, b [B,C,W], valid [B,C].  Returns per-position h for the
+    S-side gate multiply plus the final h as new state."""
+    valid = r_in["valid"]
+    a = jnp.where(valid[..., None], r_in["a"], 1.0)
+    b_ = jnp.where(valid[..., None], r_in["b"], 0.0)
+    h = L.rglru_scan_h0(a, b_, r_state["h"])
+    return {"h": h}, {"h": h[:, -1, :]}
+
+
 def r_ssd(r_in, r_state):
-    """SSD state update + readout (parameter-free given x,dt,B,C)."""
+    """SSD state update + readout (parameter-free given x,dt,B,C).
+    Optional ``active`` [B] gates the state update."""
     y, h = L.ssd_step(r_in["x"], r_in["dt"], r_in["A_log"], r_in["B"],
                       r_in["C"], r_in["D"], r_state["h"])
+    act = r_in.get("active")
+    if act is not None:
+        h = jnp.where(act[:, None, None, None], h, r_state["h"])
+    return {"y": y}, {"h": h}
+
+
+def r_ssd_chunk(r_in, r_state, *, chunk: int):
+    """Chunked-prefill SSD: chunk-parallel recurrence from the stored h.
+    Invalid positions have dt=0 and x=0 (identity steps).  r_in:
+    x [B,C,H,P], dt [B,C,H], B,C [B,C,N], valid [B,C]."""
+    valid = r_in["valid"]
+    dt = jnp.where(valid[..., None], r_in["dt"], 0.0)
+    x = jnp.where(valid[:, :, None, None], r_in["x"], 0.0)
+    y, h = L.ssd_chunked(x, dt, r_in["A_log"], r_in["B"], r_in["C"],
+                         r_in["D"], chunk=chunk, h0=r_state["h"],
+                         return_state=True)
     return {"y": y}, {"h": h}
 
 
@@ -185,6 +267,54 @@ def s_pre_stateful(kind: str, p, h, s_state, ctx: Ctx):
     return out, s_state
 
 
+def s_pre_chunk_stateful(kind: str, p, h, s_state, ctx: Ctx,
+                         valid: jnp.ndarray):
+    """Chunk-mode counterpart of :func:`s_pre_stateful`: h is [B, C, D]
+    (a prompt chunk), ``valid`` [B, C] marks real tokens (False = chunk
+    padding or a row not being prefilled).  S-side conv windows freeze at
+    each row's last valid position; the emitted r_in carries ``valid``
+    so the R-Part can gate its writes/updates the same way.
+
+    ``ctx.qpos`` must be the chunk's absolute positions (base + offset)
+    and ``ctx.lengths`` the per-row KV offsets (tokens already cached).
+    """
+    cfg = ctx.cfg
+    t_end = valid.sum(axis=1)
+    if kind in (ATTN, DEC_XATTN):
+        out = s_pre(kind, p, h, ctx)
+        r_in = dict(out.r_in)
+        r_in["valid"] = valid
+        return PhaseOut(out.carry, r_in), s_state
+    if kind == RGLRU:
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", hn, p["w_in_gate"])
+                           .astype(F32)).astype(h.dtype)
+        r = jnp.einsum("bsd,dw->bsw", hn, p["w_in_rnn"])
+        r, new_conv = L.causal_conv1d_chunk(p["conv"], r, s_state["conv"],
+                                            t_end)
+        a, b_ = L._rglru_gates(p, r)
+        return (PhaseOut({"h": h, "gate": gate},
+                         {"a": a, "b": b_, "valid": valid}),
+                {"conv": new_conv})
+    if kind == SSD:
+        di, n = cfg.d_inner, cfg.ssm_state
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("bsd,de->bse", hn, p["w_in"])
+        z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+        xbc, new_conv = L.causal_conv1d_chunk(
+            p["conv"], jax.nn.silu(xbc.astype(F32)).astype(h.dtype),
+            s_state["conv"], t_end)
+        xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+        b, c = h.shape[:2]
+        xs = xs.reshape(b, c, cfg.ssd_heads, cfg.ssd_head_dim)
+        dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :])
+        r_in = {"x": xs, "dt": dt, "B": Bm, "C": Cm,
+                "A_log": p["A_log"], "D": p["Dskip"], "valid": valid}
+        return PhaseOut({"h": h, "z": z}, r_in), {"conv": new_conv}
+    raise NotImplementedError(
+        f"chunked prefill does not support block kind {kind!r}")
+
+
 def s_advance(kind: str, phase: int, p, carry, r_out, ctx: Ctx):
     """Consume an R result; emit either the next phase payload or the
     final block output.  Returns (PhaseOut | h_final)."""
@@ -236,6 +366,34 @@ def s_advance(kind: str, phase: int, p, carry, r_out, ctx: Ctx):
     raise ValueError(kind)
 
 
+def s_advance_chunk(kind: str, phase: int, p, carry, r_out, ctx: Ctx):
+    """Chunk-mode counterpart of :func:`s_advance`: consumes per-position
+    R results ([B, C, ...]) and emits the block output [B, C, D].
+    Attention kinds reuse :func:`s_advance` verbatim (their math is
+    already sequence-general); RGLRU/SSD need the per-position variants
+    (decode's take position 0 only)."""
+    cfg = ctx.cfg
+    h = carry["h"]
+    if kind in (ATTN, XATTN, DEC_XATTN):
+        return s_advance(kind, phase, p, carry, r_out, ctx)
+    if kind == RGLRU:
+        hr = r_out["h"]                                   # [B, C, W] fp32
+        out = jnp.einsum("bsw,wd->bsd",
+                         hr.astype(h.dtype) * carry["gate"], p["w_out"])
+        return _finish(p, h + out, cfg)
+    if kind == SSD:
+        y = r_out["y"]                                    # [B, C, H, P]
+        b, c = y.shape[:2]
+        y = y.reshape(b, c, cfg.d_inner).astype(h.dtype)
+        z = carry["z"]
+        y = L.rms_norm(y * jax.nn.silu(z.astype(F32)).astype(h.dtype),
+                       p["gate_norm"], cfg.norm_eps)
+        out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+        return h + out
+    raise NotImplementedError(
+        f"chunked prefill does not support block kind {kind!r}")
+
+
 def _finish(p, h, cfg):
     if cfg.ffn_kind == "none" or "ln2" not in p:
         return h
@@ -259,6 +417,22 @@ def r_dispatch(kind: str, phase: int, r_in, r_state, cfg: ModelConfig,
     if kind == SSD:
         return r_ssd(r_in, r_state)
     raise ValueError((kind, phase))
+
+
+def r_dispatch_chunk(kind: str, phase: int, r_in, r_state,
+                     cfg: ModelConfig, kv_chunk: int = 1024):
+    """Chunk-work counterpart of :func:`r_dispatch` (dense storage)."""
+    if kind == ATTN:
+        return r_attention_chunk(r_in, r_state, window=cfg.window,
+                                 softcap=cfg.attn_logit_softcap,
+                                 kv_chunk=kv_chunk)
+    if kind == RGLRU:
+        return r_rglru_chunk(r_in, r_state)
+    if kind == SSD:
+        return r_ssd_chunk(r_in, r_state, chunk=cfg.ssd_chunk)
+    raise NotImplementedError(
+        f"chunked prefill does not support block kind {kind!r} "
+        f"(phase {phase})")
 
 
 def split_block_state(kind: str, st: Dict):

@@ -136,6 +136,16 @@ def shard_rin(r_in: dict, slices) -> tuple:
     return tuple(rin_slice(r_in, lo, hi) for lo, hi in slices)
 
 
+def mask_rows(new, old, active):
+    """Row-gated state update: rows with active=False keep their old
+    value.  Used by the fused decode callables so a decode step's S-side
+    state churn (conv windows) never touches rows that are mid-chunked-
+    prefill or released — their state belongs to the prefill path."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
+
+
 class CompletionSink:
     """The single completion channel shared by all R-workers of one
     engine — the heart of the event-driven hot path.
@@ -166,9 +176,9 @@ class CompletionSink:
         self._lock = threading.Lock()
         self._bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
 
-    def _buffer(self, key, host: Dict[str, np.ndarray]):
+    def _buffer(self, key, host: Dict[str, np.ndarray], fresh: bool = False):
         # caller (post) holds self._lock
-        buf = self._bufs.get(key)
+        buf = None if fresh else self._bufs.get(key)
         if buf is None:
             buf = {k: np.empty((self.mb_size,) + v.shape[1:], v.dtype)
                    for k, v in host.items()}
@@ -190,8 +200,19 @@ class CompletionSink:
             if epoch != self.epoch:
                 return                   # fenced-off straggler
             buf = self._buffer((parity, mb, li, phase), host)
-            for k, v in host.items():
-                buf[k][lo:hi] = v
+            try:
+                for k, v in host.items():
+                    buf[k][lo:hi] = v
+            except (KeyError, ValueError):
+                # the payload layout under this key changed — e.g. a
+                # prefill chunk of a different length reusing a virtual
+                # micro-batch slot.  Reallocate and rewrite; keeping
+                # this on the exception path leaves the steady-state
+                # critical section at just the memcpy.
+                buf = self._buffer((parity, mb, li, phase), host,
+                                   fresh=True)
+                for k, v in host.items():
+                    buf[k][lo:hi] = v
         self.q.put((wid, tag, None))
 
     def post_error(self, wid: int, tag, err: BaseException) -> None:
@@ -287,6 +308,7 @@ class RWorker(threading.Thread):
         self.paged_keys: set = set()             # layer keys stored paged
         self.allocators: Dict[int, Any] = {}     # micro-batch -> allocator
         self._first_paged: Dict[int, Any] = {}   # mb -> min paged key
+        self._chunk_tables: Dict[int, Any] = {}  # mb -> sliced device table
         self.inq: "queue.Queue" = queue.Queue()
         self.outq: "queue.Queue" = queue.Queue()  # legacy (FIFO) replies
         self._jit_cache: Dict[Tuple[str, int], Any] = {}
@@ -442,6 +464,7 @@ class RWorker(threading.Thread):
         self.paged_keys.clear()
         self.allocators.clear()
         self._first_paged.clear()
+        self._chunk_tables.clear()
 
     def kill(self) -> None:
         """Simulate an abrupt worker crash (tests/benchmarks): the thread
@@ -450,11 +473,21 @@ class RWorker(threading.Thread):
         self._killed = True
         self.inq.put(None)
 
-    def _fn(self, kind: str, phase: int):
-        key = (kind, phase)
+    def _fn(self, kind: str, phase: int, chunk: bool = False):
+        key = (kind, phase, chunk)
         if key not in self._jit_cache:
             from repro.core.config import ATTN
-            if self.quantized and kind == ATTN:
+            if chunk:
+                if self.quantized and kind == ATTN:
+                    from repro.serving.kv_cache import r_attention_int8_chunk
+                    f = partial(r_attention_int8_chunk,
+                                window=self.cfg.window,
+                                softcap=self.cfg.attn_logit_softcap,
+                                kv_chunk=self.kv_chunk)
+                else:
+                    f = partial(D.r_dispatch_chunk, kind, phase,
+                                cfg=self.cfg, kv_chunk=self.kv_chunk)
+            elif self.quantized and kind == ATTN:
                 from repro.serving.kv_cache import r_attention_int8
                 f = partial(r_attention_int8, window=self.cfg.window,
                             softcap=self.cfg.attn_logit_softcap)
@@ -481,14 +514,57 @@ class RWorker(threading.Thread):
         All of a micro-batch's attention layers share one allocator and
         identical lengths, so the (host-synced) table grow runs only on
         the micro-batch's FIRST paged layer each step; the rest reuse
-        the cached device table."""
+        the cached device table.  Rows the engine marked decode-inactive
+        (``r_in["active"]`` False: released slots, rows mid-chunked-
+        prefill) are excluded from the grow AND the length bump — their
+        allocator bookkeeping belongs to the prefill path."""
         mb = layer // self.cfg.num_layers
         alloc = self.allocators[mb]
         if layer == self._first_paged_key(mb):
-            alloc.ensure_lengths(np.asarray(r_in["lengths"]) + 1)
+            act = r_in.get("active")
+            alloc.ensure_lengths(np.asarray(r_in["lengths"]) + 1,
+                                 mask=None if act is None
+                                 else np.asarray(act))
         r_out, new_pool = self._paged_fn()(r_in, self.state[layer],
                                            alloc.tables_device())
         return r_out, new_pool
+
+    def _paged_chunk_fn(self):
+        if "paged_chunk" not in self._jit_cache:
+            from repro.serving import paged_cache as PC
+            f = partial(PC.r_attention_paged_chunk, window=self.cfg.window,
+                        softcap=self.cfg.attn_logit_softcap,
+                        kv_chunk=self.kv_chunk)
+            self._jit_cache["paged_chunk"] = jax.jit(
+                lambda r_in, pool, tables: f(r_in, pool, tables))
+        return self._jit_cache["paged_chunk"]
+
+    def _step_paged_chunk(self, layer: int, r_in):
+        """One chunked-prefill append+attend on paged storage: grow the
+        shared block tables for the chunk's rows on the micro-batch's
+        first paged layer (a row starting at offset 0 is re-admitted
+        fresh), then scatter+attend via the jitted paged chunk op.
+
+        The chunk op's gathered attention view is bounded to the pow2-
+        rounded USED page prefix (a row's pages are a contiguous table
+        prefix, so columns past the longest row are all unmapped):
+        chunk attention then costs O(max live length), not O(configured
+        capacity), at the price of log2(max_pages) traces."""
+        mb = layer // self.cfg.num_layers
+        alloc = self.allocators[mb]
+        if layer == self._first_paged_key(mb):
+            alloc.append_chunk(np.asarray(r_in["lengths"]),
+                               np.asarray(r_in["valid"]).sum(axis=1))
+            # the prefix bound is invariant until the next table
+            # mutation — scan once per chunk, not once per layer
+            used = int((alloc.tables >= 0).sum(axis=1).max())
+            k = 1
+            while k < used:
+                k *= 2
+            self._chunk_tables[mb] = alloc.tables_device()[
+                :, :min(k, alloc.max_pages)]
+        return self._paged_chunk_fn()(r_in, self.state[layer],
+                                      self._chunk_tables[mb])
 
     def _first_paged_key(self, mb: int) -> int:
         if self._first_paged.get(mb) is None:
@@ -518,10 +594,15 @@ class RWorker(threading.Thread):
         tag, layer, kind, phase, r_in, sink = item
         try:
             t0 = time.perf_counter()
+            # a chunked-prefill payload is recognized by its validity
+            # mask — same inbox, same tags, different (multi-token) op
+            is_chunk = isinstance(r_in, dict) and "valid" in r_in
             if layer in self.paged_keys:
-                r_out, new_state = self._step_paged(layer, r_in)
+                step = self._step_paged_chunk if is_chunk else \
+                    self._step_paged
+                r_out, new_state = step(layer, r_in)
             else:
-                r_out, new_state = self._fn(kind, phase)(
+                r_out, new_state = self._fn(kind, phase, chunk=is_chunk)(
                     r_in, self.state[layer])
             if self.profile_timing or sink is None:
                 # explicit sync for precise timing; the sink path's host
@@ -584,6 +665,26 @@ class _MbState:
     carry: Any = None
     lengths: Optional[jnp.ndarray] = None
     done: bool = False
+
+
+@dataclass
+class _PrefillChunk:
+    """One queued chunk of prompt prefill for micro-batch ``mb``.
+
+    Full-micro-batch arrays (rows not being prefilled carry valid=False
+    everywhere: they write nothing, their compute is discarded) so the
+    chunk rides the exact same per-layer fused-callable + CompletionSink
+    tag machinery as a decode micro-batch — it IS a decode step with a
+    sequence dimension.  ``vmb`` is the virtual micro-batch id routing
+    its completions (>= num_mb, assigned per decode_step)."""
+    mb: int
+    tokens: Any                  # [mb_size, C] int32
+    base: Any                    # [mb_size] int32 — per-row KV offset
+    valid: Any                   # [mb_size, C] bool
+    rows: Any                    # np[int] local rows being prefilled
+    new_lens: Any                # np[int] base+count per entry of rows
+    logits: Any = None           # [mb_size, vocab] once the last layer lands
+    vmb: int = -1
 
 
 class HeteroPipelineEngine:
@@ -671,6 +772,11 @@ class HeteroPipelineEngine:
             [None] * self.num_layers for _ in range(self.num_mb)]
         self.mb_lengths = [jnp.zeros((self.mb_size,), jnp.int32)
                            for _ in range(self.num_mb)]
+        # per-row decode participation: inactive rows (released slots,
+        # rows mid-chunked-prefill) get no KV append, no recurrent-state
+        # update, no length bump — their logits are discarded upstream
+        self.mb_active = [jnp.ones((self.mb_size,), bool)
+                          for _ in range(self.num_mb)]
         self._jit_pre: Dict[int, Any] = {}               # legacy path
         self._jit_adv: Dict[Tuple[int, int], Any] = {}   # legacy path
         self._jit_prefill = None
@@ -684,6 +790,13 @@ class HeteroPipelineEngine:
         self._parity = 0
         self._jit_start_cache: Dict[Tuple, Any] = {}
         self._jit_step_cache: Dict[Tuple, Any] = {}
+        # chunked prefill: queued chunk work (executed inside the next
+        # decode_step, interleaved on the completion sink) + its fused
+        # S-side callables, keyed by (chunk len, partition)
+        self._prefill_inbox: deque = deque()
+        self.prefill_results: List[_PrefillChunk] = []
+        self._jit_chunk_start: Dict[Tuple, Any] = {}
+        self._jit_chunk_step: Dict[Tuple, Any] = {}
         # most-recent partitions whose traces we keep (an oscillating
         # rebalancer reuses A<->B without retracing; older topologies
         # are evicted so executables don't accumulate over a long serve)
@@ -710,6 +823,7 @@ class HeteroPipelineEngine:
                 w.load_state(self._lkey(mb, li), batch_slice(r_st, w.lo, w.hi))
             self.s_states[mb][li] = s_st
         self.mb_lengths[mb] = prompt_lens.astype(jnp.int32)
+        self.mb_active[mb] = jnp.ones((self.mb_size,), bool)
 
     def _lkey(self, mb: int, layer: int) -> int:
         return mb * self.num_layers + layer
@@ -758,25 +872,33 @@ class HeteroPipelineEngine:
         self._topo_lru.append(topo)
         while len(self._topo_lru) > self._TOPO_KEEP:
             dead = self._topo_lru.pop(0)
-            for cache in (self._jit_start_cache, self._jit_step_cache):
+            for cache in (self._jit_start_cache, self._jit_step_cache,
+                          self._jit_chunk_start, self._jit_chunk_step):
                 for k in [k for k in cache if k[-1] == dead]:
                     del cache[k]
 
     def _start_fn(self, li: int):
         """embed -> s_pre(0), emitting per-worker r_in shards, one
         dispatch.  Only ever traced for layer 0 — every later layer is
-        entered through a fused transition (:meth:`_step_fn`)."""
+        entered through a fused transition (:meth:`_step_fn`).
+
+        ``active`` [mb_size] bool rides into every r_in shard (gating
+        R-side appends/updates) and gates the S-side state writes, so
+        rows mid-chunked-prefill or released stay untouched."""
         key = (li, self._topo())
         f = self._jit_start_cache.get(key)
         if f is None:
             kind, _ = self.layers[li]
             cfg, slices = self.cfg, self._topo()
 
-            def start(params, p, tokens, s_state, lengths):
+            def start(params, p, tokens, s_state, lengths, active):
                 h = params["embed"][tokens]
                 ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths, None, 0)
                 po, new_s = D.s_pre_stateful(kind, p, h, s_state, ctx)
-                return po.carry, shard_rin(po.r_in, slices), new_s
+                new_s = mask_rows(new_s, s_state, active)
+                r_in = dict(po.r_in)
+                r_in["active"] = active
+                return po.carry, shard_rin(r_in, slices), new_s
 
             f = _quiet_donation_jit(start, (3,))
             self._jit_start_cache[key] = f
@@ -798,15 +920,17 @@ class HeteroPipelineEngine:
             more = phase + 1 < D.num_phases(kind)
             last = li + 1 >= self.num_layers
             if more:
-                def f(p, carry, r_out, lengths):
+                def f(p, carry, r_out, lengths, active):
                     ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths,
                                 None, 0)
                     po = D.s_advance(kind, phase, p, carry, r_out, ctx)
-                    return po.carry, shard_rin(po.r_in, slices)
+                    r_in = dict(po.r_in)
+                    r_in["active"] = active
+                    return po.carry, shard_rin(r_in, slices)
 
                 ent = (_quiet_donation_jit(f, (1, 2)), "phase")
             elif last:
-                def f(params, p, carry, r_out, lengths):
+                def f(params, p, carry, r_out, lengths, active):
                     ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths,
                                 None, 0)
                     h = D.s_advance(kind, phase, p, carry, r_out, ctx)
@@ -816,17 +940,168 @@ class HeteroPipelineEngine:
             else:
                 kind2, _ = self.layers[li + 1]
 
-                def f(p, p2, carry, r_out, s_state2, lengths):
+                def f(p, p2, carry, r_out, s_state2, lengths, active):
                     ctx = M.Ctx(cfg, "decode", lengths[:, None], lengths,
                                 None, 0)
                     h = D.s_advance(kind, phase, p, carry, r_out, ctx)
                     po, new_s2 = D.s_pre_stateful(kind2, p2, h, s_state2,
                                                   ctx)
-                    return po.carry, shard_rin(po.r_in, slices), new_s2
+                    new_s2 = mask_rows(new_s2, s_state2, active)
+                    r_in = dict(po.r_in)
+                    r_in["active"] = active
+                    return po.carry, shard_rin(r_in, slices), new_s2
 
                 ent = (_quiet_donation_jit(f, (2, 3, 4)), "fused")
             self._jit_step_cache[key] = ent
         return ent
+
+    # -- fused chunked-prefill S-side callables ------------------------------
+    def _chunk_ctx(self, cfg, base, c):
+        qpos = base[:, None] + jnp.arange(c)[None, :]
+        return M.Ctx(cfg, "chunk", qpos, base, None, 0)
+
+    def _chunk_start_fn(self, c: int):
+        """embed -> s_pre_chunk(0) for a C-token prompt chunk — the
+        chunk-work twin of :meth:`_start_fn` (same shard fan-out, same
+        donation discipline), keyed by chunk length and partition."""
+        key = (c, self._topo())
+        f = self._jit_chunk_start.get(key)
+        if f is None:
+            kind, _ = self.layers[0]
+            cfg, slices = self.cfg, self._topo()
+
+            def start(params, p, tokens, s_state, base, valid):
+                h = params["embed"][tokens]
+                ctx = self._chunk_ctx(cfg, base, tokens.shape[1])
+                po, new_s = D.s_pre_chunk_stateful(kind, p, h, s_state,
+                                                   ctx, valid)
+                return po.carry, shard_rin(po.r_in, slices), new_s
+
+            f = _quiet_donation_jit(start, (3,))
+            self._jit_chunk_start[key] = f
+        return f
+
+    def _chunk_step_fn(self, li: int, phase: int, c: int):
+        """Fused chunk layer transition, mirroring :meth:`_step_fn`'s
+        "phase"/"fused"/"final" shapes.  "final" gathers each row's
+        LAST VALID chunk position and returns its logits [mb_size, V]
+        (rows with no valid tokens return garbage the caller ignores).
+        S-side conv freezing is row-gated inside s_pre_chunk_stateful,
+        so no extra masking is needed here."""
+        key = (li, phase, c, self._topo())
+        ent = self._jit_chunk_step.get(key)
+        if ent is None:
+            kind, _ = self.layers[li]
+            cfg, slices = self.cfg, self._topo()
+            more = phase + 1 < D.num_phases(kind)
+            last = li + 1 >= self.num_layers
+            if more:
+                def f(p, carry, r_out, base, valid):
+                    ctx = self._chunk_ctx(cfg, base, c)
+                    po = D.s_advance_chunk(kind, phase, p, carry, r_out, ctx)
+                    r_in = dict(po.r_in)
+                    r_in["valid"] = valid
+                    return po.carry, shard_rin(r_in, slices)
+
+                ent = (_quiet_donation_jit(f, (1, 2)), "phase")
+            elif last:
+                def f(params, p, carry, r_out, base, valid):
+                    ctx = self._chunk_ctx(cfg, base, c)
+                    h = D.s_advance_chunk(kind, phase, p, carry, r_out, ctx)
+                    cnt = valid.sum(axis=1)
+                    idx = jnp.clip(cnt - 1, 0, h.shape[1] - 1)
+                    hsel = h[jnp.arange(h.shape[0]), idx][:, None]
+                    return M._logits(params, h=hsel, cfg=cfg)[:, 0]
+
+                ent = (_quiet_donation_jit(f, (2, 3)), "final")
+            else:
+                kind2, _ = self.layers[li + 1]
+
+                def f(p, p2, carry, r_out, s_state2, base, valid):
+                    ctx = self._chunk_ctx(cfg, base, c)
+                    h = D.s_advance_chunk(kind, phase, p, carry, r_out, ctx)
+                    po, new_s2 = D.s_pre_chunk_stateful(kind2, p2, h,
+                                                        s_state2, ctx, valid)
+                    return po.carry, shard_rin(po.r_in, slices), new_s2
+
+                ent = (_quiet_donation_jit(f, (2, 3, 4)), "fused")
+            self._jit_chunk_step[key] = ent
+        return ent
+
+    # -- chunked-prefill work queue ------------------------------------------
+    def queue_prefill_chunk(self, mb: int, rows, tokens, bases, counts
+                            ) -> _PrefillChunk:
+        """Queue one chunk of prompt prefill for local ``rows`` of
+        micro-batch ``mb``: ``tokens`` [n, C] right-padded, ``bases``
+        [n] per-row KV offsets (tokens already prefilled), ``counts``
+        [n] valid tokens this chunk (<= C; the tail chunk of a prompt
+        is shorter).  The chunk executes INSIDE the next decode_step —
+        pipelined through the same per-layer tags as the decode
+        micro-batches, its KV streamed to the owning R-workers layer by
+        layer — and the work item (with per-row last-valid logits)
+        appears in ``self.prefill_results`` after that step."""
+        rows = np.asarray(rows, np.int64)
+        tokens = np.asarray(tokens, np.int32)
+        n, c = tokens.shape
+        if n != len(rows):
+            raise ValueError(f"{len(rows)} rows vs {n} token rows")
+        tok = np.zeros((self.mb_size, c), np.int32)
+        val = np.zeros((self.mb_size, c), bool)
+        base = np.asarray(self.mb_lengths[mb], np.int32).copy()
+        for i, r in enumerate(rows):
+            r = int(r)
+            tok[r] = tokens[i]
+            base[r] = int(bases[i])
+            val[r, :int(counts[i])] = True
+        work = _PrefillChunk(
+            mb=int(mb), tokens=jnp.asarray(tok), base=jnp.asarray(base),
+            valid=jnp.asarray(val), rows=rows,
+            new_lens=np.asarray(bases, np.int64)
+            + np.asarray(counts, np.int64))
+        self._prefill_inbox.append(work)
+        return work
+
+    def set_row_active(self, row: int, flag: bool) -> None:
+        """Gate a global batch row's decode participation (False while
+        the row is mid-chunked-prefill or its slot is released)."""
+        mb, local = divmod(int(row), self.mb_size)
+        self.mb_active[mb] = self.mb_active[mb].at[local].set(bool(flag))
+
+    def begin_prefill_rows(self, rows) -> None:
+        """Prepare global batch rows for incremental (chunked) prefill:
+        mark them decode-inactive, zero their lengths, and zero the
+        recurrent (RGLRU/SSD) R-/S-side state rows so chunk 0 continues
+        from h0 = 0.  Attention rows need no reset — chunk appends are
+        write-then-attend and a previous occupant's stale entries are
+        masked by position.  Must be called between decode steps."""
+        from repro.core.config import RGLRU, SSD
+        by_mb: Dict[int, List[int]] = {}
+        for row in rows:
+            mb, local = divmod(int(row), self.mb_size)
+            by_mb.setdefault(mb, []).append(local)
+            self.mb_active[mb] = self.mb_active[mb].at[local].set(False)
+        for mb, local_rows in by_mb.items():
+            locs = np.asarray(sorted(local_rows))
+            lens = np.array(self.mb_lengths[mb])
+            lens[locs] = 0
+            self.mb_lengths[mb] = jnp.asarray(lens, jnp.int32)
+            for li, (kind, _) in enumerate(self.layers):
+                if kind not in (RGLRU, SSD):
+                    continue
+                st = M._block_state(self.cfg, kind, len(locs),
+                                    self.cache_len)
+                r_st, s_st = D.split_block_state(kind, st)
+                for w in self.workers:
+                    sel = np.asarray([i for i, l in enumerate(locs)
+                                      if w.lo <= l < w.hi])
+                    if len(sel):
+                        w.write_rows(
+                            self._lkey(mb, li), locs[sel] - w.lo,
+                            jax.tree.map(lambda x: x[sel], r_st))
+                if s_st:
+                    self.s_states[mb][li] = jax.tree.map(
+                        lambda cur, z: cur.at[locs].set(z),
+                        self.s_states[mb][li], s_st)
 
     # -- the pipelined decode step -------------------------------------------
     def decode_step(self, tokens_per_mb: Sequence[jnp.ndarray]):
@@ -840,7 +1115,7 @@ class HeteroPipelineEngine:
         assert len(tokens_per_mb) == self.num_mb
         pc = time.perf_counter
         stats = {"dispatch_s": 0.0, "collect_s": 0.0, "s_dispatch_s": 0.0,
-                 "r_wait_s": 0.0, "ooo_advances": 0.0}
+                 "r_wait_s": 0.0, "ooo_advances": 0.0, "prefill_s": 0.0}
         t_step0 = pc()
         sink = self._sink
         self._parity ^= 1
@@ -852,17 +1127,31 @@ class HeteroPipelineEngine:
         carries: List[Any] = [None] * self.num_mb
         logits_out: List[Any] = [None] * self.num_mb
         emit_at: List[float] = [0.0] * self.num_mb
-        active = self.num_mb
+        # queued prefill chunks ride this step as virtual micro-batches
+        # num_mb+i: same tags, same sink, same event loop — their layer
+        # advances interleave with decode advances wherever R-worker
+        # completions leave the S-worker free
+        works: List[_PrefillChunk] = []
+        while self._prefill_inbox:
+            wk = self._prefill_inbox.popleft()
+            wk.vmb = self.num_mb + len(works)
+            works.append(wk)
+        self.prefill_results = []
+        chunk_carries: Dict[int, Any] = {}
+        active = self.num_mb + len(works)
 
         def dispatch(mb: int, li: int, phase: int, shards) -> None:
             t0 = pc()
             tag = (epoch, parity, mb, li, phase)
             pending[(mb, li, phase)] = {w.wid for w in self.workers}
             issue_seq[(mb, li, phase)] = len(issue_seq)
-            if self.schedule == "fifo":
+            if self.schedule == "fifo" and mb < self.num_mb:
+                # chunk work is exempt from FIFO pinning: it has no
+                # emission-order contract, it fills bubbles
                 fifo.append((mb, li, phase))
             kind, _ = self.layers[li]
-            lkey = self._lkey(mb, li)
+            real_mb = mb if mb < self.num_mb else works[mb - self.num_mb].mb
+            lkey = self._lkey(real_mb, li)
             for w, shard in zip(self.workers, shards):
                 w.inq.put((tag, lkey, kind, phase, shard, sink))
             stats["dispatch_s"] += pc() - t0
@@ -883,21 +1172,22 @@ class HeteroPipelineEngine:
             p = self.layers[li][1]
             if mode == "phase":
                 carry, shards = fn(p, carries[mb], r_out,
-                                   self.mb_lengths[mb])
+                                   self.mb_lengths[mb], self.mb_active[mb])
                 carries[mb] = carry
                 stats["s_dispatch_s"] += pc() - t1
                 dispatch(mb, li, phase + 1, shards)
             elif mode == "fused":
                 carry, shards, new_s = fn(
                     p, self.layers[li + 1][1], carries[mb], r_out,
-                    self.s_states[mb][li + 1], self.mb_lengths[mb])
+                    self.s_states[mb][li + 1], self.mb_lengths[mb],
+                    self.mb_active[mb])
                 carries[mb] = carry
                 self.s_states[mb][li + 1] = new_s
                 stats["s_dispatch_s"] += pc() - t1
                 dispatch(mb, li + 1, 0, shards)
             else:
                 logits_out[mb] = fn(self.params, p, carries[mb], r_out,
-                                    self.mb_lengths[mb])
+                                    self.mb_lengths[mb], self.mb_active[mb])
                 stats["s_dispatch_s"] += pc() - t1
                 # when this micro-batch's token becomes emittable — the
                 # streaming-latency metric the OoO schedule improves
@@ -905,15 +1195,65 @@ class HeteroPipelineEngine:
                 emit_at[mb] = pc() - t_step0
                 active -= 1
 
+        def advance_chunk(vmb: int, li: int, phase: int) -> None:
+            nonlocal active
+            wk = works[vmb - self.num_mb]
+            # a chunk advance is a FREE RIDE (billed to prefill) only if
+            # nothing else was already waiting for the S-worker when it
+            # started — chunk compute that makes a completed decode
+            # micro-batch queue behind it is decode latency, and leaving
+            # it out of prefill_s keeps the serving layer's decode_wall
+            # honest about oversized-chunk interference
+            free_ride = (sink.q.empty()
+                         or all(lg is not None for lg in logits_out))
+            t0 = pc()
+            r_out = sink.gather((epoch, parity, vmb, li, phase))
+            fn, mode = self._chunk_step_fn(li, phase, wk.tokens.shape[1])
+            p = self.layers[li][1]
+            if mode == "phase":
+                carry, shards = fn(p, chunk_carries[vmb], r_out,
+                                   wk.base, wk.valid)
+                chunk_carries[vmb] = carry
+                if free_ride:
+                    stats["prefill_s"] += pc() - t0
+                dispatch(vmb, li, phase + 1, shards)
+            elif mode == "fused":
+                carry, shards, new_s = fn(
+                    p, self.layers[li + 1][1], chunk_carries[vmb], r_out,
+                    self.s_states[wk.mb][li + 1], wk.base, wk.valid)
+                chunk_carries[vmb] = carry
+                self.s_states[wk.mb][li + 1] = new_s
+                if free_ride:
+                    stats["prefill_s"] += pc() - t0
+                dispatch(vmb, li + 1, 0, shards)
+            else:
+                wk.logits = fn(self.params, p, chunk_carries[vmb], r_out,
+                               wk.base, wk.valid)
+                if free_ride:
+                    stats["prefill_s"] += pc() - t0
+                active -= 1
+
         for mb in range(self.num_mb):
             t0 = pc()
             carry, shards, new_s = self._start_fn(0)(
                 self.params, self.layers[0][1], tokens_per_mb[mb],
-                self.s_states[mb][0], self.mb_lengths[mb])
+                self.s_states[mb][0], self.mb_lengths[mb],
+                self.mb_active[mb])
             carries[mb] = carry
             self.s_states[mb][0] = new_s
             stats["s_dispatch_s"] += pc() - t0
             dispatch(mb, 0, 0, shards)
+
+        for wk in works:
+            t0 = pc()
+            carry, shards, new_s = self._chunk_start_fn(
+                wk.tokens.shape[1])(
+                self.params, self.layers[0][1], wk.tokens,
+                self.s_states[wk.mb][0], wk.base, wk.valid)
+            chunk_carries[wk.vmb] = carry
+            self.s_states[wk.mb][0] = new_s
+            stats["prefill_s"] += pc() - t0
+            dispatch(wk.vmb, 0, 0, shards)
 
         try:
             while active:
@@ -931,7 +1271,13 @@ class HeteroPipelineEngine:
                         f"timed out after {self.collect_timeout_s:.0f}s "
                         f"waiting for R-worker results — outstanding: "
                         f"{waiting or 'none'}") from None
-                stats["r_wait_s"] += pc() - t0
+                wait = pc() - t0
+                stats["r_wait_s"] += wait
+                if works and all(lg is not None for lg in logits_out):
+                    # every decode micro-batch has already emitted: this
+                    # wait served ONLY chunk work — bill it to prefill
+                    # so the serving layer's decode_wall split is honest
+                    stats["prefill_s"] += wait
                 t_epoch, t_parity, mb, li, phase = tag
                 if t_epoch != epoch or t_parity != parity:
                     continue  # fenced-off straggler from an older step
@@ -955,7 +1301,9 @@ class HeteroPipelineEngine:
                 if outstanding:
                     continue
                 del pending[(mb, li, phase)]
-                if self.schedule == "fifo":
+                if mb >= self.num_mb:
+                    advance_chunk(mb, li, phase)
+                elif self.schedule == "fifo":
                     ready.add((mb, li, phase))
                     while fifo and fifo[0] in ready:
                         nxt = fifo.popleft()
@@ -971,7 +1319,21 @@ class HeteroPipelineEngine:
         outs = []
         for mb in range(self.num_mb):
             outs.append(logits_out[mb])
-            self.mb_lengths[mb] = self.mb_lengths[mb] + 1
+            # inactive rows (released / mid-prefill) did not append a
+            # token; their lengths are owned by the prefill path
+            self.mb_lengths[mb] = (self.mb_lengths[mb]
+                                   + self.mb_active[mb].astype(jnp.int32))
+        for wk in works:
+            # apply chunk progress AFTER the event loop: mb_lengths is
+            # an input of every in-flight fused callable, so it must
+            # stay frozen while the step is advancing.  Host-side numpy
+            # on purpose — a jnp scatter would compile per distinct row
+            # count (~100ms stalls sprinkled over the serve)
+            if len(wk.rows):
+                lens = np.array(self.mb_lengths[wk.mb])
+                lens[wk.rows] = wk.new_lens
+                self.mb_lengths[wk.mb] = jnp.asarray(lens, jnp.int32)
+            self.prefill_results.append(wk)
         stats["step_s"] = pc() - t_step0
         stats["emit_mean_s"] = sum(emit_at) / self.num_mb
         self.last_step_stats = stats

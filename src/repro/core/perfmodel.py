@@ -216,11 +216,64 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
         "e_of_b": e_of_b(cfg, hw_s, b),
         "tokens_per_s": b / (2 * cfg.num_layers * t_of_b(cfg, hw_s, b)),
     }
+    workers = int(out["workers"])
+    out["prefill_bubble_s"] = decode_bubble_per_block(
+        cfg, hw_s, hw_r, b, workers, seq_len, page=page)
+    out["prefill_chunk"] = optimal_prefill_chunk(
+        cfg, hw_s, hw_r, b, workers, seq_len, page=page)
     if page > 0:
         out["r_paged"] = r_per_token(cfg, hw_r, page=page)
         out["paged_round_up"] = paged_round_up_factor(max(1, seq_len // 2),
                                                       page)
     return out
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill overlap (temporal scheduling, §4.2 extended): prompt
+# chunks execute on the S-worker inside the decode pipeline's bubbles —
+# the idle S time per block transition while R-workers chew attention.
+# The chunk size trades prefill latency (big chunks finish prompts in
+# fewer steps) against decode interference (a chunk bigger than the
+# bubble delays every resident sequence's next token).
+# ---------------------------------------------------------------------------
+def prefill_chunk_latency(cfg: ModelConfig, hw_s: Hardware, c: int,
+                          bytes_per_el: int = 2) -> float:
+    """S-side latency of a c-token prompt chunk through ONE block — the
+    same roofline as t_of_b at batch c (prefill is just a wide batch of
+    one-token columns to the S-Part)."""
+    return t_of_b(cfg, hw_s, max(1, c), bytes_per_el)
+
+
+def decode_bubble_per_block(cfg: ModelConfig, hw_s: Hardware,
+                            hw_r: Hardware, b: int, workers: int,
+                            seq_len: int, bytes_per_el: int = 2,
+                            page: int = 0) -> float:
+    """Idle S-worker time per block transition: the R-Part of a block
+    (average resident length S/2 under SLS, split across the workers)
+    minus the S-Part it overlaps with.  Zero when the pipeline is
+    S-bound (eq. 11 balances them; fewer workers -> bigger bubble)."""
+    r_lat = (b * seq_len / 2.0) * r_per_token(cfg, hw_r, bytes_per_el,
+                                              page) / max(1, workers)
+    return max(0.0, r_lat - t_of_b(cfg, hw_s, b, bytes_per_el))
+
+
+def optimal_prefill_chunk(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware,
+                          b: int, workers: int, seq_len: int,
+                          bytes_per_el: int = 2, page: int = 0,
+                          c_min: int = 8, c_max: int = 1024) -> int:
+    """Largest power-of-two chunk whose per-block S cost still fits the
+    decode bubble — such a chunk rides the pipeline for free (its FLOPs
+    fill time the S-worker would have spent idle).  When the pipeline
+    is S-bound (no bubble) the chunk floor ``c_min`` keeps prefill
+    progressing with minimal per-step interference."""
+    bubble = decode_bubble_per_block(cfg, hw_s, hw_r, b, workers, seq_len,
+                                     bytes_per_el, page)
+    c = c_min
+    while 2 * c <= c_max \
+            and prefill_chunk_latency(cfg, hw_s, 2 * c,
+                                      bytes_per_el) <= bubble:
+        c *= 2
+    return c
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,7 @@ class _Mb:
     size: int          # M[i]
     end: int           # E[i] — step index at which this micro-batch finishes
     w_at_end: int      # W[i] — total resident length at step E[i]
+    prompt: int = 0    # P[i] — prompt tokens resident for its lifetime
 
 
 @dataclass
@@ -50,7 +51,16 @@ class LoadController:
     """Decides the earliest step at which a new micro-batch may start so
     that the resident-length peak at every current micro-batch's final
     step stays under ``w_lim``.  Faithful to Algorithm 1, plus the
-    retirement of finished micro-batches (implicit in the paper)."""
+    retirement of finished micro-batches (implicit in the paper).
+
+    ``prompt_tokens`` extends Algorithm 1 to be prefill-cost-aware: a
+    micro-batch's sequences carry their prompt KV from admission, so
+    they contribute ``prompt_tokens`` of R-Part load immediately (a
+    constant for the micro-batch's lifetime) on top of the 1-token-per-
+    step generation ramp the paper models.  The paper's schedule (whose
+    W counts generated tokens only) is the ``prompt_tokens=0`` special
+    case — admission policies that ignore prompts overload the
+    R-workers exactly when long-prompt traffic arrives."""
     w_lim: float
     seq_len: int                       # S — target generated length
     mbs: List[_Mb] = field(default_factory=list)
@@ -58,21 +68,29 @@ class LoadController:
     def retire(self, t: int) -> None:
         self.mbs = [m for m in self.mbs if m.end > t]
 
-    def add_microbatch(self, t: int, m: int) -> None:
-        """ADDMICROBATCH: start a micro-batch of m sequences at step t."""
+    def add_microbatch(self, t: int, m: int, prompt_tokens: int = 0) -> None:
+        """ADDMICROBATCH: start a micro-batch of m sequences (carrying
+        ``prompt_tokens`` of prompt KV) at step t."""
         s = self.seq_len
         for mb in self.mbs:
             if mb.end > t:
-                mb.w_at_end += (mb.end - t) * m
-        self.mbs.append(_Mb(size=m, end=t + s, w_at_end=m * s))
+                mb.w_at_end += (mb.end - t) * m + prompt_tokens
+        self.mbs.append(_Mb(size=m, end=t + s, w_at_end=m * s + prompt_tokens,
+                            prompt=prompt_tokens))
 
-    def earliest_step(self, t: int, m: int) -> int:
+    def earliest_step(self, t: int, m: int, prompt_tokens: int = 0) -> int:
         """GETEARLIESTSTEP: first step >= t at which a micro-batch of m
-        sequences can start without pushing any tracked peak over w_lim."""
+        sequences carrying ``prompt_tokens`` of prompt KV can start
+        without pushing any tracked peak over w_lim."""
         self.retire(t)
         r = t
         for mb in self.mbs:
-            x = math.floor((self.w_lim - mb.w_at_end) / m)  # max allowed len
+            # (E[i] - t + 1)*m + P <= w_lim - W[i]  ->  solve for t.
+            # (A micro-batch started at t holds t'-t+1 tokens/seq at t';
+            # W[i] is the recorded load at the incumbent's LAST ACTIVE
+            # step E[i]-1, so evaluating the newcomer at E[i] makes this
+            # check one step conservative — peaks never exceed w_lim.)
+            x = math.floor((self.w_lim - mb.w_at_end - prompt_tokens) / m)
             r = max(r, mb.end - x + 1)
         return r
 
@@ -82,7 +100,7 @@ class LoadController:
         for mb in self.mbs:
             start = mb.end - self.seq_len
             if start <= t < mb.end:
-                tot += mb.size * (t - start + 1)
+                tot += mb.size * (t - start + 1) + mb.prompt
         return tot
 
 

@@ -35,6 +35,36 @@ def rms_norm(x, scale, eps: float = 1e-6):
     return (out * (1.0 + scale.astype(F32))).astype(x.dtype)
 
 
+def chunk_ring_plan(old_pos, base, valid, qpos, cache_n: int):
+    """The chunked-prefill write/mask derivation shared by every dense
+    chunk-attention implementation (fp, int8, and the model oracle) —
+    duplicate copies of this invariant WILL diverge, keep it here.
+
+    old_pos [B,Sk] stored positions, base [B] per-row KV offsets,
+    valid [B,C] real-token mask, qpos [B,C] absolute chunk positions,
+    cache_n the ring size.  Returns:
+
+      slots      [B,C]  ring slots to scatter the chunk at, with
+                        ``cache_n`` (out-of-bounds -> mode="drop") for
+                        masked writes.  Ring discipline keeps only the
+                        last min(C_valid, cache_n) chunk tokens — two
+                        chunk tokens aliasing one slot would make the
+                        scatter order-dependent (whole-prompt prefill
+                        writes the last min(S, cache) the same way).
+      old_pos_m  [B,Sk] stored positions with entries >= the row's
+                        offset masked to -1: stale data from a previous
+                        occupant of the row (or a ring slot this chunk
+                        overwrites) must not be attended.
+      kpos_new   [B,C]  chunk key positions (-1 where invalid).
+    """
+    cnt = valid.sum(axis=1)
+    wvalid = valid & (qpos >= (base + cnt - cache_n)[:, None])
+    slots = jnp.where(wvalid, qpos % cache_n, cache_n)
+    old_pos_m = jnp.where(old_pos < base[:, None], old_pos, -1)
+    kpos_new = jnp.where(valid, qpos, -1)
+    return slots, old_pos_m, kpos_new
+
+
 def rope(x, positions, theta: float):
     """Rotate-half RoPE.  x [..., S, H, D], positions [..., S]."""
     d = x.shape[-1]
@@ -274,6 +304,20 @@ def rglru_scan(p, xc):
     return b_s  # h_t with h_{-1}=0 is just the accumulated b
 
 
+def rglru_scan_h0(a, b, h0):
+    """RG-LRU recurrence h_t = a_t*h_{t-1} + b_t from an explicit initial
+    state (chunked prefill continuation).  a, b [B,S,W] fp32 gates
+    (identity steps: a=1, b=0), h0 [B,W] fp32.  Returns h [B,S,W]."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_s, b_s = lax.associative_scan(combine, (a, b), axis=1)
+    return a_s * h0[:, None, :].astype(F32) + b_s
+
+
 def rglru_step(p, xc, h_prev):
     """One decode step.  xc [B,W], h_prev [B,W] (fp32) -> (h, h)."""
     a, b = _rglru_gates(p, xc)
@@ -295,6 +339,28 @@ def causal_conv1d(w, x, state=None):
     ys = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
              for i in range(cw))
     new_state = xp[:, -(cw - 1):, :] if cw > 1 else jnp.zeros_like(x[:, :0])
+    return ys, new_state
+
+
+def causal_conv1d_chunk(w, x, state, t_end):
+    """Streaming causal conv over a chunk whose VALID length varies per
+    row (chunked prefill of ragged prompts).  w [CW, D], x [B,C,D],
+    state [B, CW-1, D], t_end [B] int in [0, C] — valid tokens this
+    chunk.  Outputs y for all C positions (garbage past t_end, causally
+    confined); new_state per row is the conv window ending at that row's
+    LAST VALID position, not the chunk end — a row whose prompt ended
+    mid-chunk keeps a clean state for the next decode step, and a row
+    with t_end == 0 keeps its old state untouched.
+    """
+    cw = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    ys = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+             for i in range(cw))
+    if cw > 1:
+        idx = t_end[:, None] + jnp.arange(cw - 1)[None, :]     # [B, CW-1]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    else:
+        new_state = jnp.zeros_like(x[:, :0])
     return ys, new_state
 
 

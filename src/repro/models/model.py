@@ -295,6 +295,32 @@ def _self_attention(p, x, st, ctx: Ctx, *, causal=True):
         new_st["k"] = st["k"].at[:, slots].set(k[:, s - m:])
         new_st["v"] = st["v"].at[:, slots].set(v[:, s - m:])
         new_st["pos"] = st["pos"].at[:, slots].set(kpos[:, s - m:])
+    elif ctx.mode == "chunk":
+        # chunked prefill: append C prompt tokens at absolute positions
+        # ctx.qpos (-1 marks padding / not-prefilled rows) and attend
+        # them against [old cache + chunk].  Old entries at positions
+        # the chunk covers (stale data from a previous occupant of the
+        # row, or ring slots about to be overwritten) are masked by
+        # pos >= base; intra-chunk causality comes from the positions.
+        cache_n = st["k"].shape[1]
+        b, s = x.shape[:2]
+        qpos = ctx.qpos
+        valid = qpos >= 0
+        base = ctx.lengths
+        slots, old_pos, kpos_new = L.chunk_ring_plan(st["pos"], base,
+                                                     valid, qpos, cache_n)
+        bidx = jnp.arange(b)[:, None]
+        kcat = jnp.concatenate([st["k"], k], axis=1)
+        vcat = jnp.concatenate([st["v"], v], axis=1)
+        pcat = jnp.concatenate([old_pos, kpos_new], axis=1)
+        out = L.flash_attention(q, kcat, vcat, qpos, pcat, causal=causal,
+                                window=win, softcap=cfg.attn_logit_softcap,
+                                q_chunk=ctx.q_chunk,
+                                kv_chunk=max(kcat.shape[1], 1))
+        new_st = dict(st)
+        new_st["k"] = st["k"].at[bidx, slots].set(k, mode="drop")
+        new_st["v"] = st["v"].at[bidx, slots].set(v, mode="drop")
+        new_st["pos"] = st["pos"].at[bidx, slots].set(qpos, mode="drop")
     else:  # decode
         cache_n = st["k"].shape[1]
         b = x.shape[0]
@@ -330,6 +356,10 @@ def _self_attention(p, x, st, ctx: Ctx, *, causal=True):
 
 def _cross_attention(p, x, st, ctx: Ctx, prefix="", feats=None):
     """Cross attention against static features (image patches / encoder)."""
+    if ctx.mode == "chunk":
+        raise NotImplementedError(
+            "chunked prefill does not support cross-attention blocks "
+            "(enc-dec / vision archs) — use whole-prompt prefill")
     cfg = ctx.cfg
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     b, s, _ = x.shape
@@ -366,7 +396,28 @@ def _rglru_mixer(p, x, st, ctx: Ctx):
                        .astype(F32)).astype(x.dtype)
     r = jnp.einsum("bsd,dw->bsw", x, p["w_in_rnn"])
     conv_state = st["conv"] if st is not None else None
-    r, new_conv = L.causal_conv1d(p["conv"], r, conv_state)
+    if ctx.mode == "chunk":
+        # chunked prefill: continue the recurrence from st["h"]; invalid
+        # positions (qpos < 0) are identity steps (a=1, b=0) so the chunk
+        # tail of a short prompt never perturbs the state, and the conv
+        # window freezes at each row's last valid position
+        valid = ctx.qpos >= 0
+        t_end = valid.sum(axis=1)
+        r, new_conv = L.causal_conv1d_chunk(p["conv"], r, conv_state, t_end)
+        a, b_ = L._rglru_gates(p, r)
+        a = jnp.where(valid[..., None], a, 1.0)
+        b_ = jnp.where(valid[..., None], b_, 0.0)
+        h = L.rglru_scan_h0(a, b_, st["h"])
+        new_h = h[:, -1, :]
+        out = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype) * gate, p["w_out"])
+        return out, {"h": new_h.astype(F32), "conv": new_conv}
+    if ctx.mode == "prefill" and conv_state is not None:
+        # ragged prompts: freeze the conv window at each prompt's end —
+        # the trailing pad tokens must not leak into the decode state
+        t_end = jnp.clip(ctx.lengths, 0, x.shape[1])
+        r, new_conv = L.causal_conv1d_chunk(p["conv"], r, conv_state, t_end)
+    else:
+        r, new_conv = L.causal_conv1d(p["conv"], r, conv_state)
     if ctx.mode == "decode":
         h, new_h = L.rglru_step(p, r[:, 0], st["h"])
         h = h[:, None, :]
@@ -389,11 +440,26 @@ def _ssd_mixer(p, x, st, ctx: Ctx):
     zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
     z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
     conv_state = st["conv"] if st is not None else None
-    xbc, new_conv = L.causal_conv1d(p["conv"], jax.nn.silu(
-        xbc.astype(F32)).astype(x.dtype), conv_state)
+    xbc_in = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    valid = None
+    if st is not None and ctx.mode in ("prefill", "chunk"):
+        # ragged prompts / chunk tails: positions past a row's prompt
+        # must be identity steps (dt=0, x=0) and must not advance the
+        # conv window — otherwise pad tokens leak into the decode state
+        if ctx.mode == "chunk":
+            valid = ctx.qpos >= 0
+        else:
+            valid = jnp.arange(s)[None, :] < ctx.lengths[:, None]
+        xbc, new_conv = L.causal_conv1d_chunk(p["conv"], xbc_in, conv_state,
+                                              valid.sum(axis=1))
+    else:
+        xbc, new_conv = L.causal_conv1d(p["conv"], xbc_in, conv_state)
     xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
     xs = xs.reshape(b, s, hh, pp)
     dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :])
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
+        xs = jnp.where(valid[:, :, None, None], xs, 0.0)
     if ctx.mode == "decode":
         y, new_h = L.ssd_step(xs[:, 0], dt[:, 0], p["A_log"], Bm[:, 0],
                               Cm[:, 0], p["Dskip"], st["h"])
@@ -627,6 +693,38 @@ def prefill(params, cfg: ModelConfig, tokens, prompt_lens, cache_len: int,
     h, state, _ = _run_layers(params, h, state, ctx)
     logits = _logits(params, cfg, h)
     last = jnp.clip(prompt_lens - 1, 0, s - 1)
+    return logits[jnp.arange(b), last], state
+
+
+def prefill_chunk(params, cfg: ModelConfig, state, tokens, chunk_pos,
+                  kv_chunk=1024):
+    """One chunked-prefill step: append a chunk of prompt tokens to an
+    EXISTING decode state (KV offset = the row's current length) and
+    return each row's logits at its last valid chunk position.
+
+    tokens [B, C] (right-padded); chunk_pos [B, C] absolute positions of
+    each token, -1 marking padding and rows not being prefilled — such
+    positions write no KV and leave all recurrent state untouched.  A
+    prefilled row's first valid position must equal its current filled
+    length (contiguous append).  Returns (last_logits [B, V], new_state)
+    with new_state["lengths"] advanced by each row's valid count.
+
+    This is the single-device oracle for the pipelined chunked prefill
+    (core.hetero) and the A/B counterpart of whole-prompt :func:`prefill`:
+    chaining chunks reproduces prefill's final state and last-token
+    logits up to float association.  Cross-attention archs (enc-dec /
+    vision) are not supported.
+    """
+    b, c = tokens.shape
+    valid = chunk_pos >= 0
+    base = state["lengths"].astype(jnp.int32)
+    ctx = Ctx(cfg, "chunk", chunk_pos, base, None, 0, kv_chunk, c)
+    h = params["embed"][tokens]
+    h, state, _ = _run_layers(params, h, state, ctx)
+    logits = _logits(params, cfg, h)
+    cnt = valid.sum(axis=1).astype(jnp.int32)
+    last = jnp.clip(cnt - 1, 0, c - 1)
+    state["lengths"] = base + cnt
     return logits[jnp.arange(b), last], state
 
 

@@ -28,6 +28,16 @@ history (``_replay_rows``), and admission is re-costed after a topology
 change (``_recost_admission``).  See repro.fleet and
 docs/ARCHITECTURE.md ("Fleet management").
 
+With ``prefill_chunk=C`` (hetero only) prompts are prefilled CHUNKED:
+admission assigns a slot and marks the request PREFILLING, then each
+step streams one C-token chunk through the pipelined engine — executed
+on the S-worker inside the decode event loop wherever R-worker waits
+leave it idle, each chunk's per-layer KV rows shipped incrementally to
+the owning R-worker — and the sequence joins the decode batch the step
+its last chunk lands.  Decode for resident sequences never stalls on a
+prompt (``prefill_chunk=0`` keeps the monolithic whole-prompt path as
+the A/B baseline; see benchmarks/bench_prefill.py).
+
 The hetero decode step is event-driven (core.hetero ``CompletionSink``):
 ``schedule="ooo"`` (default) advances whichever micro-batch's R-results
 land first, ``"fifo"`` pins issue order (the A/B baseline);
@@ -67,11 +77,25 @@ def _pad_pow2(n: int, lo: int = 1) -> int:
 
 @dataclass
 class StepRecord:
+    """Per-step accounting.  ``prefill_wall`` is time spent admitting/
+    prefilling (monolithic _place, chunk queueing + the S-side chunk
+    work inside the pipelined step), ``decode_wall`` is the decode step
+    net of that chunk work, ``fleet_wall`` covers the fleet pre/post
+    hooks.  ``wall`` (the pre-split total) remains as a property so old
+    consumers keep working — but latency benchmarks should report
+    ``decode_wall``, which no longer conflates admission bursts with
+    steady-state decode."""
     step: int
-    wall: float
+    prefill_wall: float
+    decode_wall: float
+    fleet_wall: float
     active: int
     resident_len: int
     admitted: int
+
+    @property
+    def wall(self) -> float:
+        return self.prefill_wall + self.decode_wall + self.fleet_wall
 
 
 class ServingEngine:
@@ -91,9 +115,19 @@ class ServingEngine:
         plan = P.plan(cfg, hw_s, hw_r, seq_len=seq_len,
                       latency_slo=latency_slo, page=page)
         batch = int(min(max_batch, max(2, plan["batch"])))
-        workers = int(max(1, min(8, plan["workers"])))
         if batch % 2:
             batch += 1
+        # clamp the planned fleet to one row per worker within a
+        # micro-batch (the constructor's hard floor — a clipped batch
+        # can undercut an eq. 11 worker count computed for the full one)
+        mb_size = batch // kw.get("num_microbatches", 2)
+        workers = int(max(1, min(8, mb_size, plan["workers"])))
+        if kw.get("prefill_chunk") == "plan":
+            # let the §4.3 model pick the chunk: largest pow2 whose
+            # S-cost fits the decode bubble (perfmodel.
+            # optimal_prefill_chunk) — clamped so one chunk never
+            # exceeds the prompt budget
+            kw["prefill_chunk"] = int(min(plan["prefill_chunk"], seq_len))
         eng = cls(params, cfg, batch=batch, cache_len=seq_len,
                   backend=kw.pop("backend", "hetero"),
                   num_r_workers=workers, **kw)
@@ -110,10 +144,26 @@ class ServingEngine:
                  pages_per_worker: Optional[int] = None, seed: int = 0,
                  fleet=None, schedule: str = "ooo",
                  collect_timeout_s: float = 600.0,
-                 profile_timing: bool = False):
+                 profile_timing: bool = False, prefill_chunk: int = 0):
         if backend not in ("colocated", "hetero"):
             raise ValueError(
                 f"backend must be 'colocated' or 'hetero', got {backend!r}")
+        if prefill_chunk:
+            if backend != "hetero":
+                raise ValueError(
+                    "prefill_chunk requires backend='hetero' — the "
+                    "colocated engine keeps the monolithic prefill "
+                    "(it IS the A/B baseline)")
+            if prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1 (0 disables), got "
+                    f"{prefill_chunk}")
+            from repro.core.config import DEC_XATTN as _DX, XATTN as _XA
+            if cfg.is_encdec or _DX in cfg.layer_pattern \
+                    or _XA in cfg.layer_pattern:
+                raise ValueError(
+                    "chunked prefill does not support cross-attention "
+                    "archs (enc-dec / vision) — use prefill_chunk=0")
         if batch < 1 or cache_len < 1:
             raise ValueError(
                 f"batch ({batch}) and cache_len ({cache_len}) must be >= 1")
@@ -129,6 +179,7 @@ class ServingEngine:
         self.batch, self.cache_len = batch, cache_len
         self.backend = backend
         self.paged_kv = paged_kv and backend == "hetero"
+        self.prefill_chunk = int(prefill_chunk)
         self.admission = admission
         self.target_len = target_len            # S in the paper's schedule
         self.interval = interval                # F
@@ -196,6 +247,16 @@ class ServingEngine:
         # guards apply only when something is actually paged — on archs
         # where paging fell back to dense (windowed attention) the ring
         # legally wraps past cache_len
+        if self.prefill_chunk and self.cfg.window == 0 \
+                and req.prompt_len + req.max_new_tokens > self.cache_len:
+            # chunked prefill streams KV incrementally and relies on the
+            # ring never wrapping (windowed archs wrap by design and are
+            # exempt); the monolithic path's silent wrap is not
+            # reproducible chunk-wise, so reject up front
+            raise ValueError(
+                f"request {req.rid}: prompt ({req.prompt_len}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds cache_len "
+                f"({self.cache_len}) — required with prefill_chunk > 0")
         pool_min = self._paged_pool_min() if self.paged_kv else None
         if pool_min is not None:
             if req.prompt_len + req.max_new_tokens > self.cache_len:
@@ -218,6 +279,13 @@ class ServingEngine:
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
+
+    @property
+    def prefill_queue(self) -> List[Request]:
+        """Sequences currently mid-chunked-prefill (PREFILLING state,
+        slot-resident, advancing one chunk per step), in row order."""
+        return [r for r in self.slots
+                if r is not None and r.status is Status.PREFILLING]
 
     def resident_len(self) -> int:
         tot = 0
@@ -289,11 +357,28 @@ class ServingEngine:
             lc = self.load_ctl
             f = max(1, self.interval)
             mb = microbatch_size(self.batch, max(1, self.target_len), f)
+            queued = list(self.queue)
             while m < avail:
                 chunk = min(mb, avail - m)   # tail of the queue may be < M
-                if lc.earliest_step(self.step_idx, chunk) > self.step_idx:
+                # prefill-cost-aware admission: the candidates' prompt
+                # tokens are resident KV from step one and count against
+                # w_lim (the paper's schedule models generated tokens
+                # only — long prompts used to ride in for free).  Under
+                # chunked prefill, generation starts only after the
+                # prompt has streamed in — track the micro-batch at its
+                # TRUE generation span (shifted by the prefill delay) so
+                # the controller doesn't retire it d steps early and
+                # over-admit while it is still fully resident
+                cand = queued[m:m + chunk]
+                ptoks = sum(r.prompt_len for r in cand)
+                d = 0
+                if self.prefill_chunk:
+                    d = -(-max(r.prompt_len for r in cand)
+                          // self.prefill_chunk)
+                t = self.step_idx + d
+                if lc.earliest_step(t, chunk, prompt_tokens=ptoks) > t:
                     break
-                lc.add_microbatch(self.step_idx, chunk)
+                lc.add_microbatch(t, chunk, prompt_tokens=ptoks)
                 m += chunk
             n = m
         else:
@@ -301,13 +386,28 @@ class ServingEngine:
         return n
 
     # ------------------------------------------------------------------ #
+    _PREFILL_FN_KEEP = 4     # jitted prefill fns retained (LRU)
+
     def _prefill_fn(self, n_pad: int):
-        if n_pad not in self._prefill_cache:
-            self._prefill_cache[n_pad] = jax.jit(partial(
+        """Whole-prompt prefill callable for a batch padded to ``n_pad``
+        rows — LRU-bounded: each entry accumulates one trace per s_pad
+        it ever sees, so an unbounded dict leaks executables over a
+        long serve with varied admission-group sizes (same policy as
+        the hetero engine's per-partition trace caches)."""
+        cache = self._prefill_cache
+        fn = cache.pop(n_pad, None)
+        if fn is None:
+            fn = jax.jit(partial(
                 M.prefill, cfg=self.cfg, cache_len=self.cache_len))
-        return self._prefill_cache[n_pad]
+        cache[n_pad] = fn                     # most-recently-used last
+        while len(cache) > self._PREFILL_FN_KEEP:
+            cache.pop(next(iter(cache)))
+        return fn
 
     def _place(self, reqs: List[Request]) -> None:
+        if self.prefill_chunk:
+            self._place_chunked(reqs)
+            return
         rows = self._free_slots()[:len(reqs)]
         max_p = max(r.prompt_len for r in reqs)
         n_pad = _pad_pow2(len(reqs))
@@ -383,25 +483,110 @@ class ServingEngine:
                 int(np.asarray(sub["lengths"])[gi]))
 
     # ------------------------------------------------------------------ #
+    # chunked prefill (prefill_chunk > 0, hetero): admission assigns a
+    # slot and marks the request PREFILLING; each step every prefilling
+    # sequence advances by one prompt chunk, executed INSIDE the decode
+    # step wherever R-worker waits leave the S-worker idle, its KV
+    # streamed to the owning R-worker layer by layer.  A sequence
+    # transitions PREFILLING -> RUNNING the step its last chunk lands
+    # (token 0 sampled from that chunk's last-valid logits) — decode for
+    # the rest of the batch never stalls on a prompt.
+    # ------------------------------------------------------------------ #
+    def _place_chunked(self, reqs: List[Request]) -> None:
+        rows = self._free_slots()[:len(reqs)]
+        for row, r in zip(rows, reqs):
+            r.status = Status.PREFILLING
+            r.prefill_pos = 0
+            r.slot = row
+            r.start_step = self.step_idx
+            self.slots[row] = r
+        self.engine.begin_prefill_rows(rows)
+
+    def _queue_prefill_chunks(self) -> None:
+        """Queue one chunk per prefilling sequence (grouped per
+        micro-batch) for the upcoming decode step."""
+        c = self.prefill_chunk
+        per_mb: Dict[int, List[int]] = {}
+        for row, r in enumerate(self.slots):
+            if r is not None and r.status is Status.PREFILLING:
+                per_mb.setdefault(row // self.mb_size, []).append(row)
+        for mb, rows in per_mb.items():
+            toks = np.zeros((len(rows), c), np.int32)
+            bases, counts, locs = [], [], []
+            for i, row in enumerate(rows):
+                r = self.slots[row]
+                base = r.prefill_pos
+                cnt = min(c, r.prompt_len - base)
+                toks[i, :cnt] = r.prompt[base:base + cnt]
+                locs.append(row % self.mb_size)
+                bases.append(base)
+                counts.append(cnt)
+            self.engine.queue_prefill_chunk(mb, locs, toks, bases, counts)
+
+    def _process_prefill_results(self) -> None:
+        """Advance prefill progress from the chunks that landed in the
+        decode step just executed; sequences whose last chunk arrived
+        sample token 0 from its logits and join the decode batch."""
+        for wk in self.engine.prefill_results:
+            logits = wk.logits
+            sampled = None
+            for i, local in enumerate(wk.rows):
+                row = wk.mb * self.mb_size + int(local)
+                r = self.slots[row]
+                if r is None or r.status is not Status.PREFILLING:
+                    continue          # finished/replaced under our feet
+                r.prefill_pos = int(wk.new_lens[i])
+                if r.prefill_pos < r.prompt_len:
+                    continue
+                # the chunk's last-token logits ARE the first generation
+                # step (same rule as the monolithic _place)
+                if sampled is None:
+                    self.rng, sub = jax.random.split(self.rng)
+                    sampled = np.asarray(sample(logits, sub))
+                tok0 = int(sampled[int(local)])
+                r.status = Status.RUNNING
+                r.generated.append(tok0)
+                self._last_tok[row] = tok0
+                if r.is_finished(tok0):
+                    r.status = Status.DONE
+                    r.finish_step = self.step_idx
+                    self.finished.append(r)
+                    self.slots[row] = None
+                    if self.paged_kv:
+                        self.engine.release_row(row)
+                else:
+                    self.engine.set_row_active(row, True)
+
+    # ------------------------------------------------------------------ #
     def _replay_rows(self, rows) -> int:
         """Failure recovery: recompute lost R-state exactly by re-running
         prefill on prompt + generated-so-far for the live sequences among
         ``rows`` (this engine owns the token history — the dead worker's
         KV is just a deterministic function of it).  The last sampled
         token stays in ``_last_tok`` and is NOT re-fed: it has not been
-        appended to any KV yet."""
+        appended to any KV yet.  A half-prefilled sequence (chunked
+        prefill in flight) replays exactly its streamed prefix —
+        ``prefill_pos`` tokens — and resumes chunking from there."""
         live = [(int(r), self.slots[int(r)]) for r in rows
                 if self.slots[int(r)] is not None]
+        live = [(r, req) for r, req in live
+                if req.status is not Status.PREFILLING
+                or req.prefill_pos > 0]       # nothing streamed yet
         if not live or self.backend != "hetero":
             return 0
-        lens = [req.prompt_len + len(req.generated) - 1 for _, req in live]
+        lens = [req.prefill_pos if req.status is Status.PREFILLING
+                else req.prompt_len + len(req.generated) - 1
+                for _, req in live]
         n_pad = _pad_pow2(len(live))
         s_pad = _pad_pow2(max(lens), 8)
         toks = np.zeros((n_pad, s_pad), np.int32)
         plens = np.zeros((n_pad,), np.int32)
         for i, ((row, req), ln) in enumerate(zip(live, lens)):
-            toks[i, :req.prompt_len] = req.prompt
-            toks[i, req.prompt_len:ln] = req.generated[:-1]
+            if req.status is Status.PREFILLING:
+                toks[i, :ln] = req.prompt[:ln]
+            else:
+                toks[i, :req.prompt_len] = req.prompt
+                toks[i, req.prompt_len:ln] = req.generated[:-1]
             plens[i] = ln
         _, sub = self._prefill_fn(n_pad)(self.params,
                                          tokens=jnp.asarray(toks),
@@ -419,17 +604,25 @@ class ServingEngine:
             self.load_ctl.w_lim = self._w_lim0 * max(0.0, weight_frac)
 
     def step(self) -> StepRecord:
-        t0 = time.perf_counter()
+        pc = time.perf_counter
+        fleet_wall = prefill_wall = 0.0
         if self.fleet is not None:
+            t0 = pc()
             self.fleet.pre_step(reprefill=self._replay_rows,
                                 on_topology=self._recost_admission)
+            fleet_wall += pc() - t0
         admitted = 0
+        t0 = pc()
         n = self._admit_count()
         if n > 0:
             reqs = [self.queue.popleft() for _ in range(n)]
             self._place(reqs)
             admitted = n
+        if self.prefill_chunk:
+            self._queue_prefill_chunks()
+        prefill_wall += pc() - t0
 
+        t0 = pc()
         toks = jnp.asarray(self._last_tok[:, None])
         if self.backend == "hetero":
             parts = self.engine.decode_step(
@@ -439,12 +632,20 @@ class ServingEngine:
         else:
             # keep lengths frozen for inactive rows (avoid cache drift)
             logits = self.engine.decode_step(toks)
+        decode_wall = pc() - t0
+        if self.backend == "hetero":
+            # chunk work executed inside the pipelined step — S-side
+            # chunk callables plus event-loop waits that served only
+            # chunk work — is prefill time, not decode time
+            chunk_s = self.engine.last_step_stats.get("prefill_s", 0.0)
+            decode_wall -= min(chunk_s, decode_wall)
+            prefill_wall += chunk_s
         self.rng, sub = jax.random.split(self.rng)
         new_tok = np.asarray(sample(logits, sub))
 
         for i, r in enumerate(self.slots):
-            if r is None:
-                continue
+            if r is None or r.status is not Status.RUNNING:
+                continue              # PREFILLING rows own no decode token
             tok = int(new_tok[i])
             r.generated.append(tok)
             self._last_tok[i] = tok
@@ -455,10 +656,24 @@ class ServingEngine:
                 self.slots[i] = None
                 if self.paged_kv:
                     self.engine.release_row(i)
+                if self.prefill_chunk:
+                    # freed slots stop decoding entirely (no KV append,
+                    # no length bump) until readmission re-prefills them
+                    self.engine.set_row_active(i, False)
+        if self.prefill_chunk:
+            # AFTER the token loop: a sequence whose last chunk landed
+            # this step gets token 0 from the chunk logits and decodes
+            # its first real token NEXT step — this step's batch logits
+            # for its row predate the transition
+            t0 = pc()
+            self._process_prefill_results()
+            prefill_wall += pc() - t0
         if self.fleet is not None:
+            t0 = pc()
             self.fleet.post_step(self.step_idx)
-        wall = time.perf_counter() - t0
-        rec = StepRecord(self.step_idx, wall,
+            fleet_wall += pc() - t0
+        rec = StepRecord(self.step_idx, prefill_wall, decode_wall,
+                         fleet_wall,
                          sum(r is not None for r in self.slots),
                          self.resident_len(), admitted)
         self.records.append(rec)
@@ -476,8 +691,14 @@ class ServingEngine:
         return dict(getattr(self.engine, "step_stats", {}) or {})
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Serve until the queue and slots drain, or ``max_steps`` MORE
+        steps have run.  The budget is relative to the current step —
+        a second run() on the same engine gets the full allowance again
+        (it used to compare against the absolute step counter, so rerun
+        budgets silently shrank toward zero)."""
+        end_step = self.step_idx + max_steps
         while (self.queue or any(r is not None for r in self.slots)) \
-                and self.step_idx < max_steps:
+                and self.step_idx < end_step:
             self.step()
         return self.finished
 

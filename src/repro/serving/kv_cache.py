@@ -44,25 +44,70 @@ def r_attention_int8(r_in: Dict, r_state: Dict, *, window: int,
                      softcap: float, use_kernel: str = "ref"):
     """Quantized R-Part attention: write the new (k,v) as int8, attend with
     fp32 accumulation.  Drop-in for decompose.r_attention on an R-worker
-    that stores its cache quantized (4x less memory traffic)."""
+    that stores its cache quantized (4x less memory traffic).  An optional
+    ``r_in["active"]`` [B] gates the append (see decompose.r_attention)."""
     q, k, v, lengths = r_in["q"], r_in["k"], r_in["v"], r_in["lengths"]
     cache_n = r_state["k_q"].shape[1]
     b = q.shape[0]
     slot = (lengths % cache_n).astype(jnp.int32)
     bidx = jnp.arange(b)
+    act = r_in.get("active")
+    mode = None
+    if act is not None:
+        slot = jnp.where(act, slot, cache_n)             # OOB -> dropped
+        mode = "drop"
     k_new_q, k_new_s = ops.quantize_kv(k[:, 0])
     v_new_q, v_new_s = ops.quantize_kv(v[:, 0])
     new_state = dict(r_state)
-    new_state["k_q"] = r_state["k_q"].at[bidx, slot].set(k_new_q)
-    new_state["k_s"] = r_state["k_s"].at[bidx, slot].set(k_new_s)
-    new_state["v_q"] = r_state["v_q"].at[bidx, slot].set(v_new_q)
-    new_state["v_s"] = r_state["v_s"].at[bidx, slot].set(v_new_s)
-    new_state["pos"] = r_state["pos"].at[bidx, slot].set(lengths)
+    new_state["k_q"] = r_state["k_q"].at[bidx, slot].set(k_new_q, mode=mode)
+    new_state["k_s"] = r_state["k_s"].at[bidx, slot].set(k_new_s, mode=mode)
+    new_state["v_q"] = r_state["v_q"].at[bidx, slot].set(v_new_q, mode=mode)
+    new_state["v_s"] = r_state["v_s"].at[bidx, slot].set(v_new_s, mode=mode)
+    new_state["pos"] = r_state["pos"].at[bidx, slot].set(lengths, mode=mode)
     o = ops.decode_attention_int8(
         q[:, 0], new_state["k_q"], new_state["k_s"], new_state["v_q"],
         new_state["v_s"], new_state["pos"], lengths, window=window,
         softcap=softcap, use_kernel=use_kernel)
     return {"o": o[:, None]}, new_state
+
+
+def r_attention_int8_chunk(r_in: Dict, r_state: Dict, *, window: int,
+                           softcap: float, kv_chunk: int = 1024):
+    """Chunked-prefill counterpart of :func:`r_attention_int8`: quantize
+    and append C prompt tokens per row (same per-(token, head) scales a
+    whole-prompt load produces, so storage is bit-identical), then attend
+    the chunk queries against [dequantized old cache + fp chunk].
+
+    r_in: q/k/v [B,C,...], lengths [B] (KV offset), valid [B,C].  Note
+    cross-chunk attention reads *quantized* keys where whole-prompt
+    prefill attended fp — logits agree within the quantization bound,
+    storage and later decode steps are exact.
+    """
+    q, k, v = r_in["q"], r_in["k"], r_in["v"]
+    base, valid = r_in["lengths"], r_in["valid"]
+    cache_n = r_state["k_q"].shape[1]
+    b, c = q.shape[:2]
+    qpos = base[:, None] + jnp.arange(c)[None, :]
+    slots, old_pos, kpos_new = L.chunk_ring_plan(
+        r_state["pos"], base, valid, qpos, cache_n)
+    bidx = jnp.arange(b)[:, None]
+    k_q, k_s = ops.quantize_kv(k)
+    v_q, v_s = ops.quantize_kv(v)
+    new_state = dict(r_state)
+    new_state["k_q"] = r_state["k_q"].at[bidx, slots].set(k_q, mode="drop")
+    new_state["k_s"] = r_state["k_s"].at[bidx, slots].set(k_s, mode="drop")
+    new_state["v_q"] = r_state["v_q"].at[bidx, slots].set(v_q, mode="drop")
+    new_state["v_s"] = r_state["v_s"].at[bidx, slots].set(v_s, mode="drop")
+    new_state["pos"] = r_state["pos"].at[bidx, slots].set(qpos, mode="drop")
+    old_k = ops.dequantize_kv(r_state["k_q"], r_state["k_s"])
+    old_v = ops.dequantize_kv(r_state["v_q"], r_state["v_s"])
+    kcat = jnp.concatenate([old_k, k.astype(old_k.dtype)], axis=1)
+    vcat = jnp.concatenate([old_v, v.astype(old_v.dtype)], axis=1)
+    pcat = jnp.concatenate([old_pos, kpos_new], axis=1)
+    o = L.flash_attention(q, kcat, vcat, qpos, pcat, causal=True,
+                          window=window, softcap=softcap,
+                          kv_chunk=max(kcat.shape[1], kv_chunk))
+    return {"o": o}, new_state
 
 
 def _token_slot_bytes(cfg: ModelConfig, quantized: bool) -> int:

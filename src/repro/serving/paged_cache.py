@@ -266,9 +266,17 @@ class PagedAllocator:
         self.frozen[row] = False
         self.lengths[row] = 0
 
-    def ensure_lengths(self, new_lengths: np.ndarray) -> bool:
+    def ensure_lengths(self, new_lengths: np.ndarray,
+                       mask: Optional[np.ndarray] = None) -> bool:
         """Grow active rows to hold ``new_lengths`` tokens (called right
         before each decode append; inactive rows are left table-less).
+
+        ``mask`` (bool [rows], optional) limits the update to rows the
+        engine is actually decoding: rows with mask False are untouched
+        entirely — neither grown nor length-bumped.  The serving layer
+        uses it to keep rows mid-chunked-prefill (whose lengths advance
+        chunk-wise via :meth:`append_chunk`) and released-but-still-fed
+        rows out of the decode bookkeeping.
 
         Decode-time growth never kills the pipeline: growth is clamped
         to the per-sequence capacity (max_pages_per_seq * page), and a
@@ -281,7 +289,10 @@ class PagedAllocator:
         still raises on exhaustion."""
         cap = self.max_pages * self.page
         changed = False
-        for row in np.nonzero(self.active & ~self.frozen)[0]:
+        rows = self.active & ~self.frozen
+        if mask is not None:
+            rows = rows & np.asarray(mask, bool)
+        for row in np.nonzero(rows)[0]:
             try:
                 changed |= self._ensure_row(int(row),
                                             min(int(new_lengths[row]), cap))
@@ -291,6 +302,34 @@ class PagedAllocator:
                 # were just dropped (stale-KV hole inside the valid mask)
                 self.frozen[row] = True
             self.lengths[row] = int(new_lengths[row])
+        return changed
+
+    def append_chunk(self, base: np.ndarray, counts: np.ndarray) -> bool:
+        """Chunked-prefill growth: rows with counts[row] > 0 receive
+        ``counts[row]`` tokens at offset ``base[row]`` this step.  A row
+        starting from offset 0 is (re-)admitted fresh — any pages of a
+        previous occupant are released first; later chunks grow the
+        mapping in place.  Rows with counts == 0 are untouched.  Pool
+        exhaustion degrades (freezes) the row like decode-time growth;
+        the serving layer's admission backpressure makes that
+        unreachable under policy-admitted load."""
+        cap = self.max_pages * self.page
+        changed = False
+        for row in np.nonzero(np.asarray(counts) > 0)[0]:
+            row = int(row)
+            b0, cnt = int(base[row]), int(counts[row])
+            if b0 == 0:
+                self.release(row)
+                changed = True
+            self.active[row] = True
+            if self.frozen[row]:
+                self.lengths[row] = b0 + cnt
+                continue
+            try:
+                changed |= self._ensure_row(row, min(b0 + cnt, cap))
+            except MemoryError:
+                self.frozen[row] = True
+            self.lengths[row] = b0 + cnt
         return changed
 
     # -- accounting --------------------------------------------------------
@@ -337,10 +376,14 @@ def page_pool_token_bytes(pool: Dict) -> float:
     return per_page / page
 
 
-def write_token_paged(pool: Dict, tables, lengths, k_new, v_new) -> Dict:
+def write_token_paged(pool: Dict, tables, lengths, k_new, v_new,
+                      active=None) -> Dict:
     """Append one token per row at position ``lengths[row]``.  Rows whose
     target slot is unmapped (released but still engine-stepped) write to
-    an out-of-pool index and are dropped.  k_new/v_new [B, Hkv, Dh]."""
+    an out-of-pool index and are dropped; an optional ``active`` [B]
+    bool additionally gates the write (rows mid-chunked-prefill own
+    mapped pages a stray decode write must not land in).
+    k_new/v_new [B, Hkv, Dh]."""
     quantized = "k_q" in pool
     any_pages = pool["k_q"] if quantized else pool["k"]
     num_pages, page = any_pages.shape[0], any_pages.shape[1]
@@ -350,6 +393,8 @@ def write_token_paged(pool: Dict, tables, lengths, k_new, v_new) -> Dict:
     pidx_c = jnp.minimum(pidx, mp - 1)
     ids = jnp.take_along_axis(tables, pidx_c[:, None], axis=1)[:, 0]
     ok = (ids >= 0) & (pidx < mp)
+    if active is not None:
+        ok = ok & active
     ids = jnp.where(ok, ids, num_pages)          # OOB => mode="drop"
     out = dict(pool)
     if quantized:
@@ -462,7 +507,8 @@ def r_attention_paged_tables(r_in: Dict, pool: Dict, tables, *,
     """
     lengths = r_in["lengths"]
     pool = write_token_paged(pool, tables, lengths,
-                             r_in["k"][:, 0], r_in["v"][:, 0])
+                             r_in["k"][:, 0], r_in["v"][:, 0],
+                             active=r_in.get("active"))
     from repro.kernels import ops
     if "k_q" in pool:
         o = ops.paged_decode_attention_int8(
@@ -474,3 +520,65 @@ def r_attention_paged_tables(r_in: Dict, pool: Dict, tables, *,
             r_in["q"][:, 0], pool["k"], pool["v"], tables, lengths,
             window=window, softcap=softcap, use_kernel=use_kernel)
     return {"o": o[:, None]}, pool
+
+
+def r_attention_paged_chunk(r_in: Dict, pool: Dict, tables, *,
+                            window: int = 0, softcap: float = 0.0,
+                            kv_chunk: int = 1024) -> Tuple[Dict, Dict]:
+    """Chunked-prefill R-Part over block tables: scatter the chunk's
+    (k, v) into the (already-grown, see PagedAllocator.append_chunk)
+    mapped pages at derived positions, then attend the chunk queries
+    against the gathered cache — write-then-attend, so intra-chunk
+    causality falls out of the position mask.  Unlike the dense ring
+    there is no slot aliasing (positions are derived), so no concat
+    trick is needed.
+
+    r_in: q/k/v [B,C,...], lengths [B] (KV offset), valid [B,C].
+    Composes with int8 pools (chunk tokens quantized per (token, head)
+    exactly as a whole-prompt load would; the gather view dequantizes).
+    """
+    q = r_in["q"]
+    base, valid = r_in["lengths"], r_in["valid"]
+    quantized = "k_q" in pool
+    any_pages = pool["k_q"] if quantized else pool["k"]
+    num_pages, page = any_pages.shape[0], any_pages.shape[1]
+    mp = tables.shape[1]
+    b, c = q.shape[:2]
+    qpos = base[:, None] + jnp.arange(c)[None, :]
+    pidx = jnp.clip(qpos // page, 0, mp - 1)
+    ids = jnp.take_along_axis(tables, pidx, axis=1)          # [B, C]
+    ok = valid & (ids >= 0) & (qpos // page < mp)
+    ids = jnp.where(ok, ids, num_pages)                      # OOB -> drop
+    slot = (qpos % page).astype(jnp.int32)
+    out = dict(pool)
+    if quantized:
+        from repro.kernels import ops
+        k_q, k_s = ops.quantize_kv(r_in["k"])
+        v_q, v_s = ops.quantize_kv(r_in["v"])
+        out["k_q"] = pool["k_q"].at[ids, slot].set(k_q, mode="drop")
+        out["k_s"] = pool["k_s"].at[ids, slot].set(k_s, mode="drop")
+        out["v_q"] = pool["v_q"].at[ids, slot].set(v_q, mode="drop")
+        out["v_s"] = pool["v_s"].at[ids, slot].set(v_s, mode="drop")
+    else:
+        out["k"] = pool["k"].at[ids, slot].set(
+            r_in["k"].astype(pool["k"].dtype), mode="drop")
+        out["v"] = pool["v"].at[ids, slot].set(
+            r_in["v"].astype(pool["v"].dtype), mode="drop")
+    # gather the (post-write) cache into a contiguous per-row view
+    safe = jnp.maximum(tables, 0)                            # [B, MP]
+    if quantized:
+        from repro.kernels import ops
+        kd = ops.dequantize_kv(out["k_q"][safe], out["k_s"][safe])
+        vd = ops.dequantize_kv(out["v_q"][safe], out["v_s"][safe])
+    else:
+        kd, vd = out["k"][safe], out["v"][safe]   # [B, MP, page, H, Dh]
+    kd = kd.reshape(b, mp * page, *kd.shape[3:])
+    vd = vd.reshape(b, mp * page, *vd.shape[3:])
+    new_len = base + valid.sum(axis=1)
+    derived = jnp.arange(mp * page)[None, :]
+    mapped = jnp.repeat(tables >= 0, page, axis=1)
+    kpos = jnp.where(mapped & (derived < new_len[:, None]), derived, -1)
+    o = L.flash_attention(q, kd, vd, qpos, kpos, causal=True,
+                          window=window, softcap=softcap,
+                          kv_chunk=max(kd.shape[1], kv_chunk))
+    return {"o": o}, out

@@ -10,6 +10,7 @@ import numpy as np
 
 class Status(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"    # admitted; prompt streaming in chunk-wise
     RUNNING = "running"
     DONE = "done"
 
@@ -29,6 +30,8 @@ class Request:
     start_step: int = -1
     finish_step: int = -1
     slot: int = -1                           # (mb, row) once scheduled
+    prefill_pos: int = 0                     # prompt tokens prefilled so far
+                                             # (chunked prefill progress)
 
     @property
     def prompt_len(self) -> int:

@@ -123,3 +123,26 @@ def test_orchestration_overhead_term(llama7b):
                                         workers, P.OrchestrationOverhead())
     assert abs(zero - b / (2 * llama7b.num_layers
                            * P.t_of_b(llama7b, P.GPU_A10, b))) < 1e-9
+
+
+def test_prefill_chunk_overlap_term(llama7b):
+    """plan() picks a prefill chunk that fits the decode bubble: an
+    eq.-11-balanced fleet has ~no bubble (chunk floor), a starved fleet
+    has a big one (bigger chunks ride for free), and the chosen chunk's
+    S-latency never exceeds a non-trivial bubble."""
+    plan = P.plan(llama7b, P.TPU_V5E, P.CPU_XEON, seq_len=512)
+    assert plan["prefill_chunk"] >= 8
+    assert plan["prefill_bubble_s"] >= 0.0
+    b = int(plan["batch"])
+    chunks = [P.optimal_prefill_chunk(llama7b, P.TPU_V5E, P.CPU_XEON,
+                                      b, w, 512) for w in (1, 2, 4, 8, 16)]
+    assert chunks == sorted(chunks, reverse=True)   # fewer workers, bigger
+    for w, c in zip((1, 2, 4, 8, 16), chunks):
+        bubble = P.decode_bubble_per_block(llama7b, P.TPU_V5E, P.CPU_XEON,
+                                           b, w, 512)
+        if c > 8:       # above the floor: the chunk must fit the bubble
+            assert P.prefill_chunk_latency(llama7b, P.TPU_V5E, c) <= bubble
+    # balanced per eq. 11: bubble collapses
+    w_star = int(plan["workers"])
+    assert P.decode_bubble_per_block(
+        llama7b, P.TPU_V5E, P.CPU_XEON, b, 2 * w_star, 512) == 0.0

@@ -150,3 +150,27 @@ def test_microbatch_sizing_interval_longer_than_seq():
     total = sum(s.resident_seqs for s in stats)
     expected = sum(m_ * seq for t, m_ in adm if t + seq <= 3 * F + seq)
     assert total >= expected
+
+
+def test_load_controller_charges_prompt_tokens():
+    """Prefill-cost-aware Algorithm 1: prompt tokens are resident KV
+    from admission and count against w_lim (prompt_tokens=0 recovers
+    the paper's generated-tokens-only schedule exactly)."""
+    seq, w_lim = 10, 100
+    lc = S.LoadController(w_lim=w_lim, seq_len=seq)
+    lc.add_microbatch(0, 5)                      # W[0] = 50 at end=10
+    # without prompts: (10 - t + 1)*5 <= 50  ->  t >= 1
+    assert lc.earliest_step(0, 5) == 1
+    # 40 prompt tokens: (10 - t + 1)*5 + 40 <= 50  ->  t >= 9
+    assert lc.earliest_step(0, 5, prompt_tokens=40) == 9
+
+    lc2 = S.LoadController(w_lim=w_lim, seq_len=seq)
+    lc2.add_microbatch(0, 5, prompt_tokens=30)
+    assert lc2.mbs[0].w_at_end == 5 * seq + 30
+    # resident load counts the prompt for the micro-batch's lifetime
+    assert lc2.resident_load(0) == 5 * 1 + 30
+    assert lc2.resident_load(seq - 1) == 5 * seq + 30
+    # and the incumbent's prompt pushes later admissions out further
+    lc3 = S.LoadController(w_lim=w_lim, seq_len=seq)
+    lc3.add_microbatch(0, 5)
+    assert lc2.earliest_step(0, 5) > lc3.earliest_step(0, 5)
