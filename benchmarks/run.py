@@ -27,6 +27,8 @@ BENCHES = [
     ("paged", "benchmarks.bench_paged", "Paged vs dense R-worker KV"),
     ("prefill", "benchmarks.bench_prefill",
      "Chunked-vs-monolithic prefill, continuous arrivals"),
+    ("prefix", "benchmarks.bench_prefix",
+     "Shared-prefix KV reuse: capacity + TTFT vs share ratio"),
     ("fleet", "benchmarks.bench_fleet", "Fleet skew/rebalance/recovery"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),

@@ -275,6 +275,7 @@ class RWorker(threading.Thread):
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  max_pages_per_seq: Optional[int] = None,
+                 prefix_cache: bool = False,
                  profile: Any = None, slowdown: float = 1.0,
                  sim_row_cost: float = 0.0,
                  sim_deliver_jitter: float = 0.0,
@@ -287,6 +288,7 @@ class RWorker(threading.Thread):
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
         self.num_pages = num_pages
+        self.prefix_cache = prefix_cache
         self.profile = profile                   # fleet.WorkerProfile or None
         self.slowdown = max(1.0, float(slowdown))  # simulated skew (tests)
         self.sim_row_cost = max(0.0, float(sim_row_cost))  # s/row/call
@@ -309,6 +311,7 @@ class RWorker(threading.Thread):
         self.allocators: Dict[int, Any] = {}     # micro-batch -> allocator
         self._first_paged: Dict[int, Any] = {}   # mb -> min paged key
         self._chunk_tables: Dict[int, Any] = {}  # mb -> sliced device table
+        self._step_clones: Dict[Tuple, Any] = {}  # (mb, pass) -> CoW pairs
         self.inq: "queue.Queue" = queue.Queue()
         self.outq: "queue.Queue" = queue.Queue()  # legacy (FIFO) replies
         self._jit_cache: Dict[Tuple[str, int], Any] = {}
@@ -332,8 +335,9 @@ class RWorker(threading.Thread):
             rows = self.hi - self.lo
             mp = self.max_pages_per_seq or -(-self._cache_len // self.page_size)
             num = self.num_pages or rows * mp
-            self.allocators[mb] = PC.PagedAllocator(rows, num,
-                                                    self.page_size, mp)
+            self.allocators[mb] = PC.PagedAllocator(
+                rows, num, self.page_size, mp,
+                prefix_cache=self.prefix_cache)
         return self.allocators[mb]
 
     def _to_pages(self, layer: int, rows: np.ndarray, r_state_rows):
@@ -361,12 +365,16 @@ class RWorker(threading.Thread):
                 alloc.release(int(r))
 
     def paged_resident_bytes(self) -> float:
-        """Bytes of KV actually backed by allocated pages (all layers)."""
+        """Bytes of KV actually occupying pool pages (all layers):
+        row-referenced pages PLUS refcount-zero cached prefix pages —
+        the latter still hold live KV until the LRU evicts them, so
+        they are resident memory, merely reclaimable on demand."""
         from repro.serving import paged_cache as PC
         total = 0.0
         for layer in self.paged_keys:
             alloc = self.allocators[layer // self.cfg.num_layers]
-            total += (alloc.used_pages() * self.page_size
+            total += ((alloc.used_pages() + alloc.cached_pages())
+                      * self.page_size
                       * PC.page_pool_token_bytes(self.state[layer]))
         return total
 
@@ -465,6 +473,7 @@ class RWorker(threading.Thread):
         self.allocators.clear()
         self._first_paged.clear()
         self._chunk_tables.clear()
+        self._step_clones.clear()
 
     def kill(self) -> None:
         """Simulate an abrupt worker crash (tests/benchmarks): the thread
@@ -518,6 +527,7 @@ class RWorker(threading.Thread):
         (``r_in["active"]`` False: released slots, rows mid-chunked-
         prefill) are excluded from the grow AND the length bump — their
         allocator bookkeeping belongs to the prefill path."""
+        from repro.serving import paged_cache as PC
         mb = layer // self.cfg.num_layers
         alloc = self.allocators[mb]
         if layer == self._first_paged_key(mb):
@@ -525,6 +535,14 @@ class RWorker(threading.Thread):
             alloc.ensure_lengths(np.asarray(r_in["lengths"]) + 1,
                                  mask=None if act is None
                                  else np.asarray(act))
+            # CoW clones computed once on the shared allocator; every
+            # paged layer of this step applies them to its OWN pool
+            # below (the block table already points at the fresh pages)
+            self._step_clones[(mb, "decode")] = alloc.take_clones()
+        clones = self._step_clones.get((mb, "decode"))
+        if clones:
+            self.state[layer] = PC.clone_pool_pages(self.state[layer],
+                                                    clones)
         r_out, new_pool = self._paged_fn()(r_in, self.state[layer],
                                            alloc.tables_device())
         return r_out, new_pool
@@ -550,11 +568,13 @@ class RWorker(threading.Thread):
         prefix, so columns past the longest row are all unmapped):
         chunk attention then costs O(max live length), not O(configured
         capacity), at the price of log2(max_pages) traces."""
+        from repro.serving import paged_cache as PC
         mb = layer // self.cfg.num_layers
         alloc = self.allocators[mb]
         if layer == self._first_paged_key(mb):
             alloc.append_chunk(np.asarray(r_in["lengths"]),
                                np.asarray(r_in["valid"]).sum(axis=1))
+            self._step_clones[(mb, "chunk")] = alloc.take_clones()
             # the prefix bound is invariant until the next table
             # mutation — scan once per chunk, not once per layer
             used = int((alloc.tables >= 0).sum(axis=1).max())
@@ -563,6 +583,10 @@ class RWorker(threading.Thread):
                 k *= 2
             self._chunk_tables[mb] = alloc.tables_device()[
                 :, :min(k, alloc.max_pages)]
+        clones = self._step_clones.get((mb, "chunk"))
+        if clones:
+            self.state[layer] = PC.clone_pool_pages(self.state[layer],
+                                                    clones)
         return self._paged_chunk_fn()(r_in, self.state[layer],
                                       self._chunk_tables[mb])
 
@@ -695,6 +719,7 @@ class HeteroPipelineEngine:
                  num_microbatches: int = 2, kv_chunk: int = 1024,
                  quantized_kv: bool = False, paged_kv: bool = False,
                  page_size: int = 16, pages_per_worker: Optional[int] = None,
+                 prefix_cache: bool = False,
                  fleet: Any = None, schedule: str = "ooo",
                  collect_timeout_s: float = 600.0,
                  profile_timing: bool = False):
@@ -726,6 +751,7 @@ class HeteroPipelineEngine:
         self.cache_len = cache_len
         self.paged_kv = paged_kv
         self.page_size = page_size
+        self.prefix_cache = prefix_cache and paged_kv
         self.layers = per_layer_params(params, cfg)
         self.num_layers = cfg.num_layers
         self.fleet = fleet
@@ -738,7 +764,8 @@ class HeteroPipelineEngine:
         self._worker_kwargs = dict(
             kv_chunk=kv_chunk, quantized=quantized_kv, paged=paged_kv,
             page_size=page_size, num_pages=pages_per_worker,
-            max_pages_per_seq=max_pages, profile_timing=profile_timing)
+            max_pages_per_seq=max_pages, prefix_cache=self.prefix_cache,
+            profile_timing=profile_timing)
         if fleet is not None:
             # the fleet owns worker construction: profiles -> planned
             # (possibly uneven) partition -> RWorker instances
@@ -1485,6 +1512,46 @@ class HeteroPipelineEngine:
         (the dense path's equivalent is batch*cache_len regardless of
         occupancy)."""
         return sum(w.paged_resident_bytes() for w in self.workers)
+
+    # -- shared-prefix KV reuse ----------------------------------------------
+    def _row_allocator(self, row: int):
+        w, mb, local = self.worker_for(row)
+        return w.allocators.get(mb), local
+
+    def probe_prefix(self, row: int, prompt_tokens):
+        """Longest cached prefix of ``prompt_tokens`` in the allocator
+        that owns global batch row ``row`` — a cached prefix is only
+        adoptable by rows of the same (worker, micro-batch) pool.
+        Returns (page_ids, cached_token_count)."""
+        alloc, _ = self._row_allocator(row)
+        if alloc is None or alloc.prefix is None:
+            return [], 0
+        return alloc.probe_prefix(prompt_tokens)
+
+    def adopt_prefix(self, row: int, page_ids, length: int) -> None:
+        """Map a probed prefix into ``row``'s block table (refcount++;
+        no KV moves) so only positions >= ``length`` need prefilling."""
+        alloc, local = self._row_allocator(row)
+        alloc.adopt_prefix(local, page_ids, length)
+
+    def register_prefix(self, row: int, prompt_tokens) -> int:
+        """Index ``row``'s pages under its prompt's block-hash chain so
+        later admissions can share them."""
+        alloc, local = self._row_allocator(row)
+        if alloc is None or alloc.prefix is None:
+            return 0
+        return alloc.register_prefix(local, prompt_tokens)
+
+    def prefix_cache_stats(self) -> Dict[str, int]:
+        """Aggregate allocator-level sharing counters (pages shared by
+        >1 row, refcount-zero cached pages, free pages)."""
+        out = {"shared_pages": 0, "cached_pages": 0, "free_pages": 0}
+        for w in self.workers:
+            for a in w.allocators.values():
+                out["shared_pages"] += a.shared_pages()
+                out["cached_pages"] += a.cached_pages()
+                out["free_pages"] += a.free_pages()
+        return out
 
     # -- fleet: live migration + failure recovery ---------------------------
     def zero_r_state(self) -> List[Any]:

@@ -95,6 +95,21 @@ def r_part_flops_per_cached_token(cfg: ModelConfig) -> float:
     return 2.0 * cfg.num_heads * cfg.head_dim * 2.0      # q·k and a·v
 
 
+def prefix_dedup_factor(seq_len: int, prefix_len: int,
+                        hit_rate: float) -> float:
+    """Residency multiplier under shared-prefix KV reuse: the fraction
+    of a request's resident tokens that are UNIQUE when ``hit_rate`` of
+    admissions share a ``prefix_len``-token prefix with a resident copy
+    (ref-counted pages store the shared prefix once, so eq. 9's C·𝓟
+    capacity — and Algorithm 1's W_lim peak — only charge the unique
+    remainder).  1.0 when nothing is shared; approaches
+    ``1 - prefix_len/seq_len`` as every admission hits."""
+    if seq_len <= 0 or prefix_len <= 0 or hit_rate <= 0:
+        return 1.0
+    shared_frac = min(prefix_len, seq_len) / float(seq_len)
+    return max(1e-6, 1.0 - min(1.0, hit_rate) * shared_frac)
+
+
 # ---------------------------------------------------------------------------
 # 𝕋(𝓑), R, 𝔼(𝓑)  (analytic roofline forms)
 # ---------------------------------------------------------------------------
@@ -154,7 +169,7 @@ def knee_batch(cfg: ModelConfig, hw: Hardware, rel_gain: float = 0.05,
 
 def min_workers_memory(cfg: ModelConfig, b: int, seq_len: int,
                        worker_mem: float, bytes_per_el: int = 2,
-                       page: int = 0) -> int:
+                       page: int = 0, dedup: float = 1.0) -> int:
     """eq. (9): ½·𝓑·S <= C·𝓟 with C tokens per worker memory.
 
     The ½·𝓑·S demand is the PAPER's model: R-side memory holds exactly
@@ -169,7 +184,7 @@ def min_workers_memory(cfg: ModelConfig, b: int, seq_len: int,
     kv_per_tok = (2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
                   * cfg.num_layers)
     c = worker_mem / kv_per_tok
-    demand = 0.5 * b * seq_len
+    demand = 0.5 * b * seq_len * max(1e-6, min(1.0, dedup))
     if page > 0:
         demand *= paged_round_up_factor(max(1, seq_len // 2), page)
     return max(1, math.ceil(demand / c))
@@ -193,20 +208,31 @@ def optimal_workers(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware,
 
 def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
          latency_slo: Optional[float] = None, worker_mem: float = 256e9,
-         page: int = 0) -> Dict[str, float]:
+         page: int = 0, prefix_hit_rate: float = 0.0,
+         prefix_len: int = 0) -> Dict[str, float]:
     """Full §4.3 planning pass -> {batch, workers, workers_mem_min, ...}.
 
     ``page > 0`` plans for paged R-worker KV: R gains the amortized
     block-table read, and the eq. 9 memory bound is evaluated at the
     page-rounded average resident length (the paper's live-token ideal
     plus paging's rounding overhead — see min_workers_memory).
+
+    ``prefix_hit_rate``/``prefix_len`` describe an expected shared-
+    prefix workload (the fraction of admissions that reuse a resident
+    ``prefix_len``-token prefix).  Deduplicated residency shrinks the
+    eq. 9 memory demand by :func:`prefix_dedup_factor` and is exposed
+    as ``w_lim_scale`` — the factor by which Algorithm 1's peak bound
+    can be relaxed (shared tokens are resident once, not per row), so
+    the load controller admits proportionally larger batches.
     """
     if latency_slo is not None:
         b = max_batch_for_slo(cfg, hw_s, seq_len, latency_slo)
     else:
         b = knee_batch(cfg, hw_s)
+    dedup = prefix_dedup_factor(seq_len, prefix_len, prefix_hit_rate)
     p = optimal_workers(cfg, hw_s, hw_r, b, seq_len, page=page)
-    p_mem = min_workers_memory(cfg, b, seq_len, worker_mem, page=page)
+    p_mem = min_workers_memory(cfg, b, seq_len, worker_mem, page=page,
+                               dedup=dedup)
     out = {
         "batch": b,
         "workers": max(1.0, math.ceil(p)),
@@ -221,6 +247,8 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
         cfg, hw_s, hw_r, b, workers, seq_len, page=page)
     out["prefill_chunk"] = optimal_prefill_chunk(
         cfg, hw_s, hw_r, b, workers, seq_len, page=page)
+    out["prefix_dedup"] = dedup
+    out["w_lim_scale"] = 1.0 / dedup
     if page > 0:
         out["r_paged"] = r_per_token(cfg, hw_r, page=page)
         out["paged_round_up"] = paged_round_up_factor(max(1, seq_len // 2),

@@ -147,6 +147,10 @@ class FleetManager:
     # -- actions ----------------------------------------------------------- #
     def rebalance_now(self, new_slices, skew: Optional[float] = None) -> int:
         t0 = time.perf_counter()
+        # shared prefix pages are duplicated by the per-row wire format:
+        # record how much sharing the move un-shares (the serving layer
+        # re-registers prompts afterwards so future admissions re-share)
+        shared_before = self._shared_pages()
         moved = self.engine.apply_partition(new_slices)
         self._tele_busy = None               # worker list may have shrunk
         if self.rebalancer is not None:
@@ -154,8 +158,15 @@ class FleetManager:
         self.telemetry.record_event(
             self.step, "migration", moved_rows=moved, skew=skew,
             slices=list(self.engine.slices),
+            unshared_pages=shared_before - self._shared_pages(),
             duration_s=time.perf_counter() - t0)
         return moved
+
+    def _shared_pages(self) -> int:
+        eng = self.engine
+        if eng is None or not getattr(eng, "prefix_cache", False):
+            return 0
+        return int(eng.prefix_cache_stats().get("shared_pages", 0))
 
     def snapshot_now(self) -> None:
         self.snapshots.snapshot(self.engine, self.step)

@@ -37,7 +37,15 @@ class KVSnapshotStore:
     """Periodic host copy of the fleet's full R-state, keyed by layer key
     (micro-batch * num_layers + layer), each value covering the whole
     micro-batch in the dense wire format — so a restore works whatever
-    partition the survivors adopt."""
+    partition the survivors adopt.
+
+    Shared-prefix note: the wire format is PER-ROW, so rows sharing
+    ref-counted prefix pages are exported (and snapshotted) with their
+    own full copy — token-exact, but a snapshot of a heavily-shared
+    pool is larger than the pool's resident bytes (``nbytes`` measures
+    the difference), and a restore re-installs each row privately.  The
+    serving layer re-registers restored rows' prompts after a topology
+    change so future admissions share again."""
 
     def __init__(self, interval: int = 0):
         self.interval = int(interval)
@@ -46,6 +54,19 @@ class KVSnapshotStore:
 
     def available(self) -> bool:
         return self.data is not None
+
+    def nbytes(self) -> int:
+        """Host bytes the stored snapshot occupies (0 when empty) —
+        per-row dense wire, so shared prefix pages count once per
+        sharer here even though the live pool stores them once."""
+        if self.data is None:
+            return 0
+        total = 0
+        for wire in self.data.values():
+            for leaf in (wire.values() if isinstance(wire, dict)
+                         else [wire]):
+                total += np.asarray(leaf).nbytes
+        return total
 
     def maybe_snapshot(self, engine, step: int) -> bool:
         if self.interval <= 0 or step % self.interval != 0:

@@ -29,6 +29,16 @@ each step's K/V DMA source address is ``tables[b, i]`` — the gather never
 materializes a contiguous copy of the sequence (the jnp reference in
 kernels/ref.py does exactly that gather, and is the oracle).  Online
 softmax state lives in VMEM scratch as in decode_attention.py.
+
+Shared-prefix aliasing: the kernel makes NO exclusivity assumption about
+page ids — two rows' tables may legally point at the same page (the
+ref-counted prefix cache of ``serving/paged_cache.py`` does exactly
+that), since pages are only ever READ here and each row's valid mask is
+derived from its own table slots and length.  Writes happen host-ordered
+in the allocator's step path (``write_token_paged`` /
+``r_attention_paged_chunk``), which copy-on-write-clones a shared page
+before any row writes into it — so an aliased page is immutable for as
+long as it is aliased, and no new kernel work is needed for reuse.
 """
 from __future__ import annotations
 

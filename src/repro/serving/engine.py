@@ -20,6 +20,16 @@ pages a prompt needs, decode grows tables page-by-page, and a finished
 sequence's pages are freed the step it completes — so R-side resident KV
 tracks the actual token count instead of batch*cache_len.
 
+With ``prefix_cache=True`` (hetero + paged, pure self-attention archs)
+shared prompt prefixes are deduplicated across requests: the paged
+allocator ref-counts pages with copy-on-write, a per-(worker,
+micro-batch) prefix index maps page-aligned token blocks to resident
+pages, admission is prefix-AWARE (a queued request takes the free slot
+whose pool caches the longest prefix of its prompt, and the page
+budget credits adopted pages), and a hit prefills ONLY the uncached
+suffix through the chunk machinery.  See docs/ARCHITECTURE.md
+"Shared-prefix KV reuse".
+
 With ``fleet=FleetManager(...)`` (hetero only) the R-worker pool is
 fleet-managed: heterogeneity-aware partition planning, straggler
 rebalancing, and failure recovery run around each step (``pre_step`` /
@@ -112,8 +122,17 @@ class ServingEngine:
         # _pageable), so don't plan with paged terms there either
         page = (kw.get("page_size", 16)
                 if kw.get("paged_kv") and cfg.window == 0 else 0)
+        # expected shared-prefix workload terms (fraction of admissions
+        # that hit the cache, and the shared prefix length) — they
+        # shrink eq. 9's residency demand and scale w_lim (see
+        # perfmodel.prefix_dedup_factor)
+        prefix_hit = kw.pop("prefix_hit_rate", 0.0)
+        prefix_len = kw.pop("prefix_len", 0)
+        if not kw.get("prefix_cache"):
+            prefix_hit = 0.0        # no cache, no dedup to plan for
         plan = P.plan(cfg, hw_s, hw_r, seq_len=seq_len,
-                      latency_slo=latency_slo, page=page)
+                      latency_slo=latency_slo, page=page,
+                      prefix_hit_rate=prefix_hit, prefix_len=prefix_len)
         batch = int(min(max_batch, max(2, plan["batch"])))
         if batch % 2:
             batch += 1
@@ -128,6 +147,14 @@ class ServingEngine:
             # optimal_prefill_chunk) — clamped so one chunk never
             # exceeds the prompt budget
             kw["prefill_chunk"] = int(min(plan["prefill_chunk"], seq_len))
+        if kw.get("admission") == "loadctl" and kw.get("w_lim") is None \
+                and plan.get("w_lim_scale", 1.0) != 1.0 \
+                and kw.get("target_len"):
+            # credit deduplicated residency against the Algorithm 1 peak
+            # bound: shared prefix tokens are resident once, not per row
+            s = max(1, kw["target_len"])
+            f = max(1, kw.get("interval", 1) or 1)
+            kw["w_lim"] = w_prime_max(batch, s, f) * plan["w_lim_scale"]
         eng = cls(params, cfg, batch=batch, cache_len=seq_len,
                   backend=kw.pop("backend", "hetero"),
                   num_r_workers=workers, **kw)
@@ -144,10 +171,25 @@ class ServingEngine:
                  pages_per_worker: Optional[int] = None, seed: int = 0,
                  fleet=None, schedule: str = "ooo",
                  collect_timeout_s: float = 600.0,
-                 profile_timing: bool = False, prefill_chunk: int = 0):
+                 profile_timing: bool = False, prefill_chunk: int = 0,
+                 prefix_cache: bool = False):
         if backend not in ("colocated", "hetero"):
             raise ValueError(
                 f"backend must be 'colocated' or 'hetero', got {backend!r}")
+        if prefix_cache:
+            from repro.core.config import ATTN as _ATTN
+            if backend != "hetero" or not paged_kv:
+                raise ValueError(
+                    "prefix_cache=True requires backend='hetero' with "
+                    "paged_kv=True — shared prefixes live in the paged "
+                    "R-worker pools")
+            if any(k != _ATTN for k in cfg.layer_pattern) \
+                    or cfg.window > 0 or cfg.is_encdec:
+                raise ValueError(
+                    "prefix_cache=True requires a pure self-attention "
+                    "arch with window=0: recurrent/windowed/cross-"
+                    "attention R-state cannot be shared page-wise, so "
+                    "the skipped-prefill admission would be wrong")
         if prefill_chunk:
             if backend != "hetero":
                 raise ValueError(
@@ -180,6 +222,13 @@ class ServingEngine:
         self.backend = backend
         self.paged_kv = paged_kv and backend == "hetero"
         self.prefill_chunk = int(prefill_chunk)
+        self.prefix_cache = bool(prefix_cache)
+        # prefix-hit admissions stream their uncached suffix through the
+        # chunk machinery even when prefill_chunk=0 (one whole-suffix
+        # chunk), so the chunk plumbing runs whenever either is on
+        self._uses_chunks = bool(prefill_chunk) or self.prefix_cache
+        self.prefix_stats = {"hits": 0, "misses": 0, "cached_tokens": 0,
+                             "prompt_tokens": 0}
         self.admission = admission
         self.target_len = target_len            # S in the paper's schedule
         self.interval = interval                # F
@@ -199,6 +248,7 @@ class ServingEngine:
                 num_microbatches=num_microbatches, kv_chunk=kv_chunk,
                 quantized_kv=quantized_kv, paged_kv=paged_kv,
                 page_size=page_size, pages_per_worker=pages_per_worker,
+                prefix_cache=self.prefix_cache,
                 fleet=fleet, schedule=schedule,
                 collect_timeout_s=collect_timeout_s,
                 profile_timing=profile_timing)
@@ -223,6 +273,9 @@ class ServingEngine:
             self.load_ctl = None
         self._w_lim0 = w_lim if self.load_ctl is not None else None
         self._prefill_cache: Dict[int, callable] = {}
+        self._topo_seen = (tuple(self.engine.slices)
+                           if backend == "hetero" else None)
+        self._choice_cache: Tuple[int, list] = (-1, [])
 
     # ------------------------------------------------------------------ #
     def _hetero_init_empty(self, mb: int) -> None:
@@ -303,34 +356,52 @@ class ServingEngine:
         return -(-min(req.target_len, self.cache_len) // page)
 
     def _paged_admit_cap(self, n: int) -> int:
-        """Page-aware admission backpressure with COMMITMENT accounting:
-        every resident request reserves the pages of its full target
-        length up front, and a queued request is admitted only if its
-        own worst case fits the scarcest per-(worker, micro-batch) pool
-        on top of those reservations.  Conservative (queue position
-        doesn't pick its slot yet, so the min pool gates everyone), but
-        it guarantees decode-time growth can never exhaust the pool —
-        the degrade path in PagedAllocator.ensure_lengths stays
-        unreachable under policy-admitted load."""
+        """Page-aware admission backpressure with COMMITMENT accounting
+        from LIVE allocator state: every resident request still owes
+        (full-target pages − pages already mapped) of future growth —
+        plus one potential CoW clone while any of its pages is shared —
+        and a queued request is admitted only if its own worst case,
+        net of the prefix pages it would adopt, fits its prospective
+        (worker, micro-batch) pool on top of those debts.  Without
+        prefix sharing this reduces exactly to the old full-reservation
+        rule; with it, adopted pages held by another resident cost
+        nothing and refcount-zero cached pages come out of the
+        LRU-evictable budget — so shared-prefix workloads admit
+        strictly larger batches while decode-time growth still can
+        never exhaust the pool (PagedAllocator.ensure_lengths' degrade
+        path stays unreachable under policy-admitted load).  A fleet
+        migration duplicates shared pages (the wire format is per-row)
+        and can transiently exceed this model — see
+        docs/ARCHITECTURE.md "Shared-prefix KV reuse"."""
         if self._paged_pool_min() is None:
             return n        # dense fallback (e.g. windowed arch): no cap
-        committed: Dict[Tuple[int, int], int] = {}
+        budget: Dict[Tuple[int, int], int] = {}
+        for w in self.engine.workers:
+            for mb, a in w.allocators.items():
+                budget[(w.wid, mb)] = a.available_pages()
         for row, req in enumerate(self.slots):
             if req is None:
                 continue
-            w, mb, _ = self.engine.worker_for(row)
-            key = (w.wid, mb)
-            committed[key] = (committed.get(key, 0)
-                              + self._paged_pages_for(req))
-        budget = min(a.num_pages - committed.get((w.wid, mb), 0)
-                     for w in self.engine.workers
-                     for mb, a in w.allocators.items())
+            w, mb, local = self.engine.worker_for(row)
+            a = w.allocators[mb]
+            debt = self._paged_pages_for(req) - a.mapped_pages(local)
+            ids = a.tables[local][a.tables[local] >= 0]
+            if len(ids) and bool((a.refcount[ids] > 1).any()):
+                debt += 1             # a divergence may CoW one clone
+            budget[(w.wid, mb)] -= max(0, debt)
         m = 0
-        for r in list(self.queue)[:n]:
+        for row, r, ids, eff in self._choose_rows(list(self.queue)[:n]):
+            w, mb, _ = self.engine.worker_for(row)
+            a = w.allocators.get(mb)
             need = self._paged_pages_for(r)   # submit() bounds it by pool
-            if need > budget:
+            if eff > 0 and a is not None:
+                held = sum(1 for pid in ids if a.refcount[pid] > 0)
+                # pages held by a resident sharer are free to adopt;
+                # +1 covers the boundary-page CoW clone
+                need += 1 - held
+            if need > budget[(w.wid, mb)]:
                 break
-            budget -= need
+            budget[(w.wid, mb)] -= need
             m += 1
         return m
 
@@ -375,6 +446,12 @@ class ServingEngine:
                 if self.prefill_chunk:
                     d = -(-max(r.prompt_len for r in cand)
                           // self.prefill_chunk)
+                elif self.prefix_cache:
+                    # a prefix-cache hit streams its whole suffix as ONE
+                    # chunk and starts generating a step later; track
+                    # the span shifted by that step (misses shift too —
+                    # conservative, holds capacity one step longer)
+                    d = 1
                 t = self.step_idx + d
                 if lc.earliest_step(t, chunk, prompt_tokens=ptoks) > t:
                     break
@@ -404,11 +481,125 @@ class ServingEngine:
             cache.pop(next(iter(cache)))
         return fn
 
+    def _sample_tokens(self, logits, reqs) -> np.ndarray:
+        """Sample one token per row of ``logits``; ``reqs`` aligns a
+        Request (or None) with each row — callers pass None for rows
+        whose token will be DISCARDED (mid-prefill, released), so no
+        RNG is split and no per-row dispatch runs for them and the
+        surviving rows' draw sequence is independent of unrelated
+        rows' prefill state.  Greedy rows ride one batch argmax; rows
+        whose request sets temperature > 0 are re-drawn individually
+        with their own temperature/top_k/top_p."""
+        self.rng, sub = jax.random.split(self.rng)
+        toks = np.asarray(sample(logits, sub)).copy()
+        for i, r in enumerate(reqs):
+            if r is None or r.temperature <= 0.0:
+                continue
+            self.rng, sub = jax.random.split(self.rng)
+            toks[i] = int(np.asarray(sample(
+                logits[i:i + 1], sub, temperature=r.temperature,
+                top_k=r.top_k, top_p=r.top_p))[0])
+        return toks
+
+    # -- shared-prefix probing ------------------------------------------- #
+    def _probe_prefix(self, row: int, req: Request):
+        """(page_ids, cached_eff) for ``req`` landing on ``row`` —
+        clamped so at least the prompt's LAST token is always
+        recomputed: its logits seed generation (the same rule as the
+        monolithic prefill), and recomputing it through the chunk path
+        is what forces the shared partial tail page onto a private CoW
+        clone before this sequence writes into it."""
+        if not self.prefix_cache:
+            return [], 0
+        ids, cached = self.engine.probe_prefix(row, req.prompt)
+        eff = min(int(cached), req.prompt_len - 1)
+        if eff <= 0:
+            return [], 0
+        return ids[:-(-eff // self.engine.page_size)], eff
+
+    def _note_prefix(self, req: Request, eff: int) -> None:
+        st = self.prefix_stats
+        st["hits" if eff else "misses"] += 1
+        st["cached_tokens"] += eff
+        st["prompt_tokens"] += req.prompt_len
+
+    def _choose_rows(self, reqs: List[Request]):
+        """Prefix-AWARE row assignment: a cached prefix is only
+        adoptable by rows of the (worker, micro-batch) pool that holds
+        it, so each request takes the free slot whose pool caches the
+        longest prefix of its prompt (misses and the prefix-cache-off
+        path fall back to first-free-slot order).  Returns
+        [(row, req, page_ids, cached_eff)] in queue order — the same
+        deterministic choice `_paged_admit_cap` budgets against (its
+        result is memoized per step so placement does not re-walk the
+        blake2b hash chains the cap already probed)."""
+        step, cached = self._choice_cache
+        if step == self.step_idx and len(cached) >= len(reqs) \
+                and all(c[1] is r for c, r in zip(cached, reqs)):
+            return cached[:len(reqs)]
+        free = self._free_slots()
+        out = []
+        for r in reqs:
+            if not free:
+                break
+            best, best_ids, best_eff = free[0], [], 0
+            if self.prefix_cache:
+                seen: Dict[Tuple[int, int], Tuple[list, int]] = {}
+                for row in free:
+                    w, mb, _ = self.engine.worker_for(row)
+                    key = (w.wid, mb)
+                    if key not in seen:      # one probe per pool
+                        seen[key] = self._probe_prefix(row, r)
+                    ids, eff = seen[key]
+                    if eff > best_eff:
+                        best, best_ids, best_eff = row, ids, eff
+            out.append((best, r, best_ids, best_eff))
+            free.remove(best)
+        self._choice_cache = (self.step_idx, out)
+        return out
+
+    def _reregister_prefixes(self) -> None:
+        """A topology change (migration/recovery) rebuilt the changed
+        workers' allocators, dropping their prefix indexes and
+        un-sharing their pages (the dense wire format is per-row).
+        Re-index every live row's streamed prompt prefix so FUTURE
+        admissions share again."""
+        for row, r in enumerate(self.slots):
+            if r is None:
+                continue
+            n = (r.prefill_pos if r.status is Status.PREFILLING
+                 else r.prompt_len)
+            if n > 0:
+                self.engine.register_prefix(row, r.prompt[:n])
+
     def _place(self, reqs: List[Request]) -> None:
         if self.prefill_chunk:
             self._place_chunked(reqs)
             return
-        rows = self._free_slots()[:len(reqs)]
+        if self.prefix_cache:
+            # prefix hits stream their (suffix-only) prefill through the
+            # chunk machinery — one whole-suffix chunk rides the next
+            # decode step; misses keep the monolithic same-step prefill
+            hit_reqs, hit_rows, miss_reqs, miss_rows = [], [], [], []
+            for row, r, ids, eff in self._choose_rows(reqs):
+                self._note_prefix(r, eff)
+                if eff > 0:
+                    self.engine.adopt_prefix(row, ids, eff)
+                    r.prefill_pos = eff
+                    hit_reqs.append(r)
+                    hit_rows.append(row)
+                else:
+                    miss_reqs.append(r)
+                    miss_rows.append(row)
+            if hit_reqs:
+                self._begin_chunked(hit_reqs, hit_rows)
+            if miss_reqs:
+                self._place_monolithic(miss_reqs, miss_rows)
+            return
+        self._place_monolithic(reqs, self._free_slots()[:len(reqs)])
+
+    def _place_monolithic(self, reqs: List[Request],
+                          rows: List[int]) -> None:
         max_p = max(r.prompt_len for r in reqs)
         n_pad = _pad_pow2(len(reqs))
         s_pad = _pad_pow2(max_p, 8)
@@ -430,8 +621,8 @@ class ServingEngine:
         # the prefill's last-token logits ARE the first generation step:
         # sample token 0 here (re-feeding the prompt tail through decode
         # would write a duplicate KV entry and shift all positions)
-        self.rng, sub_rng = jax.random.split(self.rng)
-        tok0 = np.asarray(sample(last_logits, sub_rng))
+        tok0 = self._sample_tokens(
+            last_logits, reqs + [None] * (last_logits.shape[0] - len(reqs)))
         for i, r in enumerate(reqs):
             r.status = Status.RUNNING
             r.start_step = self.step_idx
@@ -446,8 +637,21 @@ class ServingEngine:
                 self.slots[rows[i]] = None
                 if self.paged_kv:
                     self.engine.release_row(rows[i])
+                if self._uses_chunks:
+                    self.engine.set_row_active(rows[i], False)
             else:
                 self.slots[rows[i]] = r
+                if self._uses_chunks:
+                    # a slot freed by a finished sequence was marked
+                    # decode-inactive — this monolithic readmission must
+                    # re-activate it, or the row decodes against frozen
+                    # KV forever (the chunked path re-activates in
+                    # _process_prefill_results)
+                    self.engine.set_row_active(rows[i], True)
+        if self.prefix_cache:
+            for row, r in zip(rows, reqs):
+                if self.slots[row] is not None:
+                    self.engine.register_prefix(row, r.prompt)
 
     def _hetero_scatter(self, rows: np.ndarray, sub, sub_rows: np.ndarray):
         eng = self.engine
@@ -493,10 +697,21 @@ class ServingEngine:
     # the rest of the batch never stalls on a prompt.
     # ------------------------------------------------------------------ #
     def _place_chunked(self, reqs: List[Request]) -> None:
-        rows = self._free_slots()[:len(reqs)]
+        rows = []
+        for row, r, ids, eff in self._choose_rows(reqs):
+            if self.prefix_cache:
+                self._note_prefix(r, eff)
+            if eff > 0:
+                # map the cached prefix pages (refcount++, zero KV
+                # movement) — chunking resumes at the uncached suffix
+                self.engine.adopt_prefix(row, ids, eff)
+            r.prefill_pos = eff
+            rows.append(row)
+        self._begin_chunked(reqs, rows)
+
+    def _begin_chunked(self, reqs: List[Request], rows: List[int]) -> None:
         for row, r in zip(rows, reqs):
             r.status = Status.PREFILLING
-            r.prefill_pos = 0
             r.slot = row
             r.start_step = self.step_idx
             self.slots[row] = r
@@ -504,13 +719,19 @@ class ServingEngine:
 
     def _queue_prefill_chunks(self) -> None:
         """Queue one chunk per prefilling sequence (grouped per
-        micro-batch) for the upcoming decode step."""
-        c = self.prefill_chunk
+        micro-batch) for the upcoming decode step.  With
+        ``prefill_chunk=0`` (prefix-cache hits on an otherwise
+        monolithic engine) the chunk spans the whole remaining suffix,
+        pow2-padded so the jitted chunk callables retrace O(log) times,
+        not per distinct suffix length."""
         per_mb: Dict[int, List[int]] = {}
         for row, r in enumerate(self.slots):
             if r is not None and r.status is Status.PREFILLING:
                 per_mb.setdefault(row // self.mb_size, []).append(row)
         for mb, rows in per_mb.items():
+            c = self.prefill_chunk or _pad_pow2(
+                max(self.slots[row].prompt_len - self.slots[row].prefill_pos
+                    for row in rows), 8)
             toks = np.zeros((len(rows), c), np.int32)
             bases, counts, locs = [], [], []
             for i, row in enumerate(rows):
@@ -541,8 +762,18 @@ class ServingEngine:
                 # the chunk's last-token logits ARE the first generation
                 # step (same rule as the monolithic _place)
                 if sampled is None:
-                    self.rng, sub = jax.random.split(self.rng)
-                    sampled = np.asarray(sample(logits, sub))
+                    # eligible = rows of THIS work item whose last
+                    # chunk just landed (their logits row seeds token
+                    # 0); everyone else's row is discarded
+                    base = wk.mb * self.mb_size
+                    elig = [None] * logits.shape[0]
+                    for j, loc in enumerate(wk.rows):
+                        rr = self.slots[base + int(loc)]
+                        if rr is not None \
+                                and rr.status is Status.PREFILLING \
+                                and int(wk.new_lens[j]) >= rr.prompt_len:
+                            elig[int(loc)] = rr
+                    sampled = self._sample_tokens(logits, elig)
                 tok0 = int(sampled[int(local)])
                 r.status = Status.RUNNING
                 r.generated.append(tok0)
@@ -556,6 +787,10 @@ class ServingEngine:
                         self.engine.release_row(row)
                 else:
                     self.engine.set_row_active(row, True)
+                    if self.prefix_cache:
+                        # the prompt's pages are complete now — index
+                        # them so later admissions can share
+                        self.engine.register_prefix(row, r.prompt)
 
     # ------------------------------------------------------------------ #
     def _replay_rows(self, rows) -> int:
@@ -611,6 +846,13 @@ class ServingEngine:
             self.fleet.pre_step(reprefill=self._replay_rows,
                                 on_topology=self._recost_admission)
             fleet_wall += pc() - t0
+        if self.prefix_cache:
+            topo = tuple(self.engine.slices)
+            if topo != self._topo_seen:
+                # migration/recovery rebuilt allocators: re-index live
+                # rows' prompts before this step's admission probes
+                self._topo_seen = topo
+                self._reregister_prefixes()
         admitted = 0
         t0 = pc()
         n = self._admit_count()
@@ -618,7 +860,7 @@ class ServingEngine:
             reqs = [self.queue.popleft() for _ in range(n)]
             self._place(reqs)
             admitted = n
-        if self.prefill_chunk:
+        if self._uses_chunks:
             self._queue_prefill_chunks()
         prefill_wall += pc() - t0
 
@@ -640,8 +882,9 @@ class ServingEngine:
             chunk_s = self.engine.last_step_stats.get("prefill_s", 0.0)
             decode_wall -= min(chunk_s, decode_wall)
             prefill_wall += chunk_s
-        self.rng, sub = jax.random.split(self.rng)
-        new_tok = np.asarray(sample(logits, sub))
+        new_tok = self._sample_tokens(
+            logits, [r if r is not None and r.status is Status.RUNNING
+                     else None for r in self.slots])
 
         for i, r in enumerate(self.slots):
             if r is None or r.status is not Status.RUNNING:
@@ -656,11 +899,11 @@ class ServingEngine:
                 self.slots[i] = None
                 if self.paged_kv:
                     self.engine.release_row(i)
-                if self.prefill_chunk:
+                if self._uses_chunks:
                     # freed slots stop decoding entirely (no KV append,
                     # no length bump) until readmission re-prefills them
                     self.engine.set_row_active(i, False)
-        if self.prefill_chunk:
+        if self._uses_chunks:
             # AFTER the token loop: a sequence whose last chunk landed
             # this step gets token 0 from the chunk logits and decodes
             # its first real token NEXT step — this step's batch logits
@@ -689,6 +932,16 @@ class ServingEngine:
         S-dispatch / R-wait seconds and step count) from the pipelined
         engine; empty for the colocated backend."""
         return dict(getattr(self.engine, "step_stats", {}) or {})
+
+    def prefix_cache_stats(self) -> Dict[str, float]:
+        """Admission-level hit counters plus allocator-level sharing
+        state (pages shared by >1 row, refcount-zero cached pages)."""
+        out: Dict[str, float] = dict(self.prefix_stats)
+        if self.backend == "hetero":
+            out.update(self.engine.prefix_cache_stats())
+        denom = max(1, out.get("prompt_tokens", 0))
+        out["token_hit_rate"] = out.get("cached_tokens", 0) / denom
+        return out
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Serve until the queue and slots drain, or ``max_steps`` MORE

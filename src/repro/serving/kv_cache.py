@@ -138,3 +138,20 @@ def paged_kv_bytes_per_seq(cfg: ModelConfig, seq_len: int, page: int,
     n_attn = sum(1 for k in cfg.pattern if k == "attn")
     return n_attn * (n_pages * page * _token_slot_bytes(cfg, quantized)
                      + n_pages * table_entry_bytes)
+
+
+def shared_prefix_bytes_saved(cfg: ModelConfig, prefix_len: int,
+                              n_sharers: int, page: int,
+                              quantized: bool = False) -> int:
+    """Resident KV bytes the ref-counted prefix cache deduplicates when
+    ``n_sharers`` sequences share a ``prefix_len``-token prefix: the
+    shared full pages are stored ONCE instead of once per row (each
+    sharer still pays its own block-table row, and the partial tail
+    page diverges onto a private CoW clone per writer, so only full
+    pages count)."""
+    if n_sharers <= 1 or prefix_len < page:
+        return 0
+    full_pages = prefix_len // page
+    n_attn = sum(1 for k in cfg.pattern if k == "attn")
+    per_page = page * _token_slot_bytes(cfg, quantized)
+    return (n_sharers - 1) * full_pages * per_page * n_attn

@@ -48,11 +48,33 @@ Allocation/free protocol (the invariants the fuzz tests pin down):
     all-masked zero — never a stale read.
   * ``release`` returns all pages to the free list; no fragmentation, by
     construction (§2.2's argument for paging).
+
+Shared-prefix KV reuse (vLLM automatic-prefix-caching style) extends the
+allocator with per-page REFERENCE COUNTS and copy-on-write:
+
+  * every mapped table slot holds one reference; ``release`` decrements
+    instead of freeing, and a page is free only at refcount zero.
+  * ``adopt_prefix`` maps another sequence's already-written prefix pages
+    into a row's table (refcount++) so admission prefills only the
+    uncached suffix.
+  * a write landing inside a page with refcount > 1 — a decode append
+    past a shared page, or a suffix prefill starting at a partial-page
+    boundary — CLONES only that page: the writer gets a fresh copy, the
+    other sharers keep the original (``take_clones`` hands the (src,
+    dst) pairs to the worker, which applies them to every layer's
+    device pool via :func:`clone_pool_pages` before the write).
+  * the :class:`PrefixIndex` maps a hash chain over page-aligned token
+    blocks (plus an exact-length tail entry for the final partial page)
+    to page ids.  Pages whose refcount drops to zero while indexed are
+    not freed immediately — they park in an LRU and are evicted (index
+    entries dropped, page reused) only when the free list runs dry.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -204,12 +226,83 @@ def pool_utilization(kv: PagedKV) -> float:
 # ===========================================================================
 # engine-integrated path (RWorker storage format) — see module docstring
 # ===========================================================================
+def _block_digest(parent: bytes, tokens: np.ndarray, tail: bool = False
+                  ) -> bytes:
+    """Chained content hash of one page-aligned token block.  The parent
+    digest rides into the hash, so a block is only reachable through the
+    exact token prefix leading to it.  Tail blocks (final partial page)
+    are domain-separated AND length-tagged: a tail entry matches only a
+    prompt whose remaining tokens are exactly the registered ones."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    if tail:
+        h.update(b"#tail:%d" % len(tokens))
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+class PrefixIndex:
+    """hash-chain-of-token-blocks -> page id, plus the LRU of refcount-
+    zero pages that are kept cached instead of freed.
+
+    The index never owns a refcount: the allocator moves a page into
+    ``lru`` when its last table reference goes away and pulls it back
+    out on re-adoption; eviction (free list dry) drops every digest of
+    the victim page so no probe can reach recycled storage."""
+
+    def __init__(self):
+        self.entries: Dict[bytes, int] = {}            # digest -> page id
+        self.page_digests: Dict[int, set] = {}         # page id -> digests
+        self.lru: "OrderedDict[int, None]" = OrderedDict()  # refcount-0 cached
+
+    def get(self, digest: bytes) -> Optional[int]:
+        return self.entries.get(digest)
+
+    def put(self, digest: bytes, page_id: int) -> bool:
+        """Register; first writer wins (remapping a digest would strand
+        the old page's cached marker)."""
+        if digest in self.entries:
+            return False
+        self.entries[digest] = page_id
+        self.page_digests.setdefault(page_id, set()).add(digest)
+        return True
+
+    def is_cached(self, page_id: int) -> bool:
+        return bool(self.page_digests.get(page_id))
+
+    def touch(self, page_id: int) -> None:
+        if page_id in self.lru:
+            self.lru.move_to_end(page_id)
+
+    def park(self, page_id: int) -> None:
+        """A cached page's refcount hit zero: LRU-park instead of free."""
+        self.lru[page_id] = None
+        self.lru.move_to_end(page_id)
+
+    def unpark(self, page_id: int) -> None:
+        self.lru.pop(page_id, None)
+
+    def evict_lru(self) -> int:
+        """Drop the oldest refcount-zero cached page's digests and return
+        the page for reuse."""
+        page_id, _ = self.lru.popitem(last=False)
+        self.drop_page(page_id)
+        return page_id
+
+    def drop_page(self, page_id: int) -> None:
+        for d in self.page_digests.pop(page_id, ()):
+            self.entries.pop(d, None)
+        self.lru.pop(page_id, None)
+
+
 class PagedAllocator:
     """Host-side block-table allocator for one worker's rows of one
-    micro-batch, shared across that worker's attention layers."""
+    micro-batch, shared across that worker's attention layers.  With
+    ``prefix_cache=True`` pages are reference-counted copy-on-write and
+    a :class:`PrefixIndex` keeps refcount-zero prompt pages reusable
+    (see the module docstring's shared-prefix section)."""
 
     def __init__(self, rows: int, num_pages: int, page: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int, prefix_cache: bool = False):
         self.rows, self.num_pages, self.page = rows, num_pages, page
         self.max_pages = max_pages_per_seq
         self.tables = np.full((rows, max_pages_per_seq), -1, np.int32)
@@ -220,9 +313,24 @@ class PagedAllocator:
         # dropped, exposing stale KV inside the (pos <= qpos) valid mask
         self.frozen = np.zeros((rows,), bool)
         self.free: List[int] = list(range(num_pages))
+        # one count per page = number of table slots mapping it; shared
+        # prefix pages sit at > 1 and are immutable until CoW-cloned
+        self.refcount = np.zeros((num_pages,), np.int32)
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex() if prefix_cache else None)
+        self._clones: List[Tuple[int, int]] = []   # (src, dst) this step
         self._dev_tables: Optional[jnp.ndarray] = None   # upload cache
 
     # -- low level ---------------------------------------------------------
+    def _take_page(self) -> int:
+        """A fresh page: free list first, then LRU-evict a refcount-zero
+        cached prefix page (its index entries are dropped with it)."""
+        if self.free:
+            return self.free.pop()
+        if self.prefix is not None and self.prefix.lru:
+            return self.prefix.evict_lru()
+        raise MemoryError("paged KV pool exhausted")
+
     def _ensure_row(self, row: int, new_len: int) -> bool:
         need = -(-new_len // self.page)
         if need > self.max_pages:
@@ -233,10 +341,41 @@ class PagedAllocator:
         if need > have:
             self._dev_tables = None     # BEFORE mutating: a mid-loop
         for slot in range(have, need):  # MemoryError must not leave a
-            if not self.free:           # stale device table
-                raise MemoryError("paged KV pool exhausted")
-            self.tables[row, slot] = self.free.pop()
+            pid = self._take_page()     # stale device table
+            self.tables[row, slot] = pid
+            self.refcount[pid] = 1
         return need > have
+
+    def _cow_row(self, row: int, start: int, new_len: int) -> None:
+        """Copy-on-write: writes for ``row`` will land at positions
+        [start, new_len) — clone any mapped SHARED page they intersect
+        (in practice only the page containing ``start``: everything past
+        it is either unmapped or this row's private suffix).  The clone
+        pairs accumulate in ``take_clones`` for the worker to apply to
+        each layer's device pool before the write."""
+        if self.prefix is None:
+            return      # sharing (refcount > 1) only exists via adoption
+        if new_len <= start or not bool((self.refcount > 1).any()):
+            return
+        page = self.page
+        s1 = min((new_len - 1) // page, self.max_pages - 1)
+        for slot in range(start // page, s1 + 1):
+            pid = int(self.tables[row, slot])
+            if pid < 0 or self.refcount[pid] <= 1:
+                continue
+            fresh = self._take_page()
+            self.refcount[fresh] = 1
+            self.refcount[pid] -= 1
+            self.tables[row, slot] = fresh
+            self._dev_tables = None
+            self._clones.append((pid, fresh))
+
+    def take_clones(self) -> List[Tuple[int, int]]:
+        """Drain the (src, dst) CoW clone pairs accumulated since the
+        last call — the worker applies them to every paged layer's pool
+        (:func:`clone_pool_pages`) before this step's writes."""
+        out, self._clones = self._clones, []
+        return out
 
     # -- protocol ----------------------------------------------------------
     def admit(self, row: int, length: int) -> bool:
@@ -256,11 +395,41 @@ class PagedAllocator:
             self.lengths[row] = length
         return True
 
+    def adopt_prefix(self, row: int, page_ids: Sequence[int],
+                     length: int) -> None:
+        """Prefix-cache admission: map ``page_ids`` (another sequence's
+        already-written prefix, ceil(length/page) of them) into ``row``'s
+        table prefix, incrementing refcounts — no KV moves.  The caller
+        then prefills only positions >= ``length``."""
+        self.release(row)
+        if length <= 0:
+            return
+        page_ids = [int(p) for p in page_ids]
+        if len(page_ids) != -(-length // self.page):
+            raise ValueError(
+                f"{len(page_ids)} prefix pages for length {length} "
+                f"(page={self.page})")
+        self._dev_tables = None
+        for slot, pid in enumerate(page_ids):
+            self.tables[row, slot] = pid
+            if self.refcount[pid] == 0 and self.prefix is not None:
+                self.prefix.unpark(pid)   # cached -> referenced again
+            self.refcount[pid] += 1
+        self.active[row] = True
+        self.lengths[row] = length
+
     def release(self, row: int) -> None:
         ids = self.tables[row][self.tables[row] >= 0]
         if len(ids):
             self._dev_tables = None
-        self.free.extend(int(i) for i in ids)
+        for pid in (int(i) for i in ids):
+            self.refcount[pid] -= 1
+            if self.refcount[pid] > 0:
+                continue                  # another sequence still maps it
+            if self.prefix is not None and self.prefix.is_cached(pid):
+                self.prefix.park(pid)     # keep cached, LRU-evictable
+            else:
+                self.free.append(pid)
         self.tables[row] = -1
         self.active[row] = False
         self.frozen[row] = False
@@ -294,8 +463,13 @@ class PagedAllocator:
             rows = rows & np.asarray(mask, bool)
         for row in np.nonzero(rows)[0]:
             try:
-                changed |= self._ensure_row(int(row),
-                                            min(int(new_lengths[row]), cap))
+                start = min(int(self.lengths[row]), cap)
+                new = min(int(new_lengths[row]), cap)
+                # a decode append landing inside a still-shared page
+                # (e.g. the partial tail another sequence adopted) must
+                # diverge onto a private clone first
+                self._cow_row(int(row), start, new)
+                changed |= self._ensure_row(int(row), new)
             except MemoryError:
                 # degrade this row, don't crash — and freeze it: a later
                 # regrow would map pages over the positions whose writes
@@ -326,15 +500,101 @@ class PagedAllocator:
                 self.lengths[row] = b0 + cnt
                 continue
             try:
+                # a suffix prefill starting at a partial-page boundary
+                # writes into the adopted (shared) tail page — CoW it
+                self._cow_row(row, min(b0, cap), min(b0 + cnt, cap))
                 changed |= self._ensure_row(row, min(b0 + cnt, cap))
             except MemoryError:
                 self.frozen[row] = True
             self.lengths[row] = b0 + cnt
         return changed
 
+    # -- shared-prefix index ------------------------------------------------
+    def register_prefix(self, row: int, tokens) -> int:
+        """Index ``row``'s pages under the hash chain of ``tokens`` (the
+        prompt prefix they back): one entry per full page-aligned block
+        plus an exact-length tail entry for the final partial page.
+        First writer wins per digest.  Returns entries added."""
+        if self.prefix is None or not self.active[row]:
+            return 0
+        tokens = np.asarray(tokens, np.int32)
+        page = self.page
+        mapped = int((self.tables[row] >= 0).sum())
+        n_full = min(len(tokens) // page, mapped)
+        digest, added = b"", 0
+        for i in range(n_full):
+            digest = _block_digest(digest, tokens[i * page:(i + 1) * page])
+            if self.prefix.put(digest, int(self.tables[row, i])):
+                added += 1
+        tail = len(tokens) - n_full * page
+        if 0 < tail and len(tokens) // page == n_full and n_full < mapped:
+            d = _block_digest(digest, tokens[n_full * page:], tail=True)
+            if self.prefix.put(d, int(self.tables[row, n_full])):
+                added += 1
+        return added
+
+    def probe_prefix(self, tokens) -> Tuple[List[int], int]:
+        """Longest cached prefix of ``tokens``: walk the hash chain block
+        by block, stopping at the first miss (entries orphaned by an
+        evicted ancestor are unreachable by construction).  A tail entry
+        matches only when the remaining tokens are exactly the
+        registered partial page.  Returns (page_ids, cached_tokens)."""
+        if self.prefix is None:
+            return [], 0
+        tokens = np.asarray(tokens, np.int32)
+        page = self.page
+        ids: List[int] = []
+        digest = b""
+        n_full = len(tokens) // page
+        for i in range(n_full):
+            d = _block_digest(digest, tokens[i * page:(i + 1) * page])
+            pid = self.prefix.get(d)
+            if pid is None:
+                self._touch(ids)
+                return ids, len(ids) * page
+            ids.append(pid)
+            digest = d
+        tail = len(tokens) - n_full * page
+        if tail:
+            d = _block_digest(digest, tokens[n_full * page:], tail=True)
+            pid = self.prefix.get(d)
+            if pid is not None:
+                ids.append(pid)
+                self._touch(ids)
+                return ids, int(len(tokens))
+        self._touch(ids)
+        return ids, len(ids) * page
+
+    def _touch(self, ids: List[int]) -> None:
+        if self.prefix is not None:
+            for pid in ids:
+                self.prefix.touch(pid)
+
     # -- accounting --------------------------------------------------------
     def used_pages(self) -> int:
-        return self.num_pages - len(self.free)
+        """Pages referenced by at least one table slot.  Refcount-zero
+        cached prefix pages (parked in the index LRU) are neither used
+        nor free — see :meth:`cached_pages`."""
+        return self.num_pages - len(self.free) - self.cached_pages()
+
+    def cached_pages(self) -> int:
+        """Refcount-zero pages kept only for the prefix index (LRU-
+        evictable on demand)."""
+        return len(self.prefix.lru) if self.prefix is not None else 0
+
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def available_pages(self) -> int:
+        """Pages allocatable right now: free plus LRU-evictable cached."""
+        return len(self.free) + self.cached_pages()
+
+    def mapped_pages(self, row: int) -> int:
+        return int((self.tables[row] >= 0).sum())
+
+    def shared_pages(self) -> int:
+        """Pages mapped by more than one table slot (the dedup win)."""
+        return int((self.refcount > 1).sum())
 
     def resident_tokens(self) -> int:
         """Tokens actually backed by pages (a clamped or exhausted grow
@@ -411,6 +671,20 @@ def write_token_paged(pool: Dict, tables, lengths, k_new, v_new,
         out["v"] = pool["v"].at[ids, slot].set(
             v_new.astype(pool["v"].dtype), mode="drop")
     return out
+
+
+def clone_pool_pages(pool: Dict, clones: Sequence[Tuple[int, int]]) -> Dict:
+    """Apply copy-on-write clones to one layer's page pool: copy page
+    ``src`` -> ``dst`` for every (src, dst) pair (every array of the
+    pool, so int8 pools clone quantized values and scales verbatim —
+    bit-exact divergence).  The allocator hands out the pairs once per
+    step (``PagedAllocator.take_clones``); the worker applies them to
+    each paged layer before that layer's write."""
+    if not clones:
+        return pool
+    src = jnp.asarray([s for s, _ in clones], jnp.int32)
+    dst = jnp.asarray([d for _, d in clones], jnp.int32)
+    return {k: v.at[dst].set(v[src]) for k, v in pool.items()}
 
 
 def _scatter_pages(pool: Dict, ids: jnp.ndarray, k_pages, v_pages) -> Dict:

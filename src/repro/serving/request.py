@@ -3,9 +3,11 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
+
+from repro.serving.sampler import is_stop_token
 
 
 class Status(enum.Enum):
@@ -21,8 +23,10 @@ class Request:
     prompt: np.ndarray                       # [S_p] int32
     max_new_tokens: int
     eos_token: Optional[int] = None
+    stop_tokens: Optional[Sequence[int]] = None  # generalized EOS list
     temperature: float = 0.0                 # 0 = greedy
     top_k: int = 0
+    top_p: float = 0.0                       # 0/1 = disabled
     status: Status = Status.QUEUED
     generated: List[int] = field(default_factory=list)
     # step indices for latency accounting
@@ -42,6 +46,7 @@ class Request:
         return self.prompt_len + self.max_new_tokens
 
     def is_finished(self, last_token: int) -> bool:
-        if self.eos_token is not None and last_token == self.eos_token:
+        if is_stop_token(last_token, self.eos_token,
+                         self.stop_tokens or ()):
             return True
         return len(self.generated) >= self.max_new_tokens

@@ -1,16 +1,52 @@
-"""Token sampling (greedy / temperature / top-k), jit-friendly."""
+"""Token sampling (greedy / temperature / top-k / top-p), jit-friendly,
+plus stop-token handling for the serving engine.
+
+``top_p`` (nucleus sampling, Holtzman et al. 2019) keeps the smallest
+set of tokens whose cumulative probability reaches ``p`` and renormalizes
+over it — composing with ``top_k`` (k-filter first, then the nucleus) and
+``temperature`` (applied before both, as in every mainstream stack).
+"""
 from __future__ import annotations
+
+from typing import Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def sample(logits, rng, temperature: float = 0.0, top_k: int = 0):
-    """logits [B, V] -> tokens [B] int32."""
+def sample(logits, rng, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 0.0):
+    """logits [B, V] -> tokens [B] int32.
+
+    temperature <= 0 is greedy (argmax); otherwise logits/temperature
+    are filtered by top-k (keep the k best) and top-p (keep the nucleus
+    reaching cumulative probability p) before categorical sampling.
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if 0.0 < top_p < 1.0:
+        desc = jnp.sort(logits, axis=-1)[:, ::-1]          # high -> low
+        probs = jax.nn.softmax(desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep a token iff the mass BEFORE it is < p (so the nucleus is
+        # the smallest prefix whose cumulative probability reaches p —
+        # the argmax token is always kept: its exclusive mass is 0)
+        keep = (cum - probs) < top_p
+        thresh = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits < thresh, -jnp.inf, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def is_stop_token(token: int, eos_token: Optional[int] = None,
+                  stop_tokens: Iterable[int] = ()) -> bool:
+    """Whether ``token`` terminates generation: the model's EOS or any
+    per-request stop token (a generalized EOS list — e.g. end-of-turn
+    markers — checked by ``Request.is_finished`` every decode step)."""
+    if eos_token is not None and token == eos_token:
+        return True
+    return token in stop_tokens if stop_tokens else False

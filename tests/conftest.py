@@ -25,3 +25,54 @@ def tiny_cfg(arch: str, **kw):
     defaults = dict(layers=3, d_model=64, vocab=97)
     defaults.update(kw)
     return get_arch(arch).reduced(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# the shared serving-equivalence harness (tests/test_equiv_matrix.py owns
+# the full storage x schedule x prefill x shared-prefix matrix; other
+# test modules reuse the same helpers for their specialized scenarios)
+# ---------------------------------------------------------------------------
+# R-worker storage backends as ServingEngine kwargs
+STORAGE_KW = {
+    "dense": {},
+    "paged": dict(paged_kv=True, page_size=4),
+    "int8": dict(quantized_kv=True),
+    "paged-int8": dict(paged_kv=True, page_size=4, quantized_kv=True),
+}
+
+
+def random_spec(rng, cfg, n, p_lo=3, p_hi=15, max_new=5, spread=10):
+    """Randomized (prompt, max_new, arrive_step) specs: ragged prompt
+    lengths (incl. ones not divisible by chunk/page sizes) and staggered
+    arrivals — the continuous-arrival regime."""
+    return [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(p_lo, p_hi))).astype(np.int32),
+             max_new, int(rng.integers(0, spread))) for _ in range(n)]
+
+
+def serve_trace(params, cfg, spec, batch=4, cache_len=48, max_steps=400,
+                **kw):
+    """Serve (prompt, max_new, arrive_step) specs on a ServingEngine
+    built with ``kw``; returns {rid: generated tokens}.  The canonical
+    equivalence probe: every backend/storage/schedule combination must
+    produce the same dict as the colocated oracle."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import Request
+    eng = ServingEngine(params, cfg, batch=batch, cache_len=cache_len,
+                        **kw)
+    try:
+        qi = 0
+        order = sorted(range(len(spec)), key=lambda i: spec[i][2])
+        while (qi < len(order) or eng.queue
+               or any(s is not None for s in eng.slots)) \
+                and eng.step_idx < max_steps:
+            while qi < len(order) and spec[order[qi]][2] <= eng.step_idx:
+                i = order[qi]
+                eng.submit(Request(rid=i, prompt=spec[i][0],
+                                   max_new_tokens=spec[i][1]))
+                qi += 1
+            eng.step()
+        return {r.rid: list(r.generated) for r in eng.finished}
+    finally:
+        if eng.backend == "hetero":
+            eng.close()

@@ -1,0 +1,86 @@
+"""THE serving-equivalence matrix, consolidated.
+
+One parameterized harness replaces the dense/paged/int8 x ooo/fifo x
+chunked/monolithic equivalence checks that used to be copy-pasted across
+``test_hetero.py`` / ``test_paged_hetero.py`` / ``test_prefill_chunked.py``:
+every combination serves the same randomized continuous-arrival trace and
+must reproduce the colocated whole-prompt oracle's generated tokens
+EXACTLY (greedy).  The shared-prefix dimension rides the same harness:
+two requests sharing a page-aligned prefix (served with
+``prefix_cache=True``) must decode bit-identically to two independent
+requests — i.e. to the same oracle that never shares anything.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import STORAGE_KW, random_spec, serve_trace, tiny_cfg
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(42)
+    spec = random_spec(rng, cfg, 6)
+    oracle = serve_trace(params, cfg, spec, backend="colocated")
+    assert len(oracle) == len(spec)
+    return cfg, params, spec, oracle
+
+
+# storage x prefill on the default OoO schedule, plus FIFO spot checks —
+# the consolidated matrix (FIFO==OoO equivalence at the engine level is
+# separately pinned by test_hetero.test_fifo_schedule_matches_ooo)
+MATRIX = [(s, p, "ooo") for s in STORAGE_KW for p in ("mono", "chunk")]
+MATRIX += [("dense", "mono", "fifo"), ("paged", "chunk", "fifo")]
+
+
+@pytest.mark.parametrize("storage,prefill,schedule", MATRIX)
+def test_serving_matrix_matches_colocated(setup, storage, prefill,
+                                          schedule):
+    cfg, params, spec, oracle = setup
+    got = serve_trace(params, cfg, spec, backend="hetero",
+                      num_r_workers=2, schedule=schedule,
+                      prefill_chunk=5 if prefill == "chunk" else 0,
+                      **STORAGE_KW[storage])
+    assert got == oracle
+
+
+# ---------------------------------------------------------------------------
+# the shared-prefix dimension: sharing must be invisible to the tokens
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def prefix_setup():
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)  # 2 pages
+    spec = [
+        (np.concatenate([shared,
+                         rng.integers(1, cfg.vocab_size, 5).astype(np.int32)]),
+         5, 0),
+        (np.concatenate([shared,
+                         rng.integers(1, cfg.vocab_size, 3).astype(np.int32)]),
+         5, 2),                       # arrives later -> adopts the prefix
+        (rng.integers(1, cfg.vocab_size, 7).astype(np.int32), 4, 3),
+    ]
+    oracle = serve_trace(params, cfg, spec, backend="colocated")
+    assert len(oracle) == len(spec)
+    return cfg, params, spec, oracle
+
+
+@pytest.mark.parametrize("storage", ["paged", "paged-int8"])
+@pytest.mark.parametrize("prefill", ["mono", "chunk"])
+def test_shared_prefix_decodes_like_independent(prefix_setup, storage,
+                                                prefill):
+    """Two requests sharing a page-aligned prefix, admitted through the
+    prefix cache (refcounted pages + suffix-only prefill), must produce
+    the exact tokens of two independent requests — across fp/int8 paged
+    storage and monolithic/chunked prefill."""
+    cfg, params, spec, oracle = prefix_setup
+    got = serve_trace(params, cfg, spec, backend="hetero",
+                      num_r_workers=1, prefix_cache=True,
+                      prefill_chunk=4 if prefill == "chunk" else 0,
+                      **STORAGE_KW[storage])
+    assert got == oracle

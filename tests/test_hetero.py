@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import tiny_cfg
+from conftest import STORAGE_KW, tiny_cfg
 from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
 from repro.models import model as M
 
@@ -107,9 +107,7 @@ def test_ooo_completion_matches_colocated_under_skew(storage, rng, key):
     params = M.init_params(key, cfg)
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b6, S + 3)))
     plens = jnp.asarray((5, 12, 3, 9, 7, 2), jnp.int32)
-    kw = {"paged": dict(paged_kv=True, page_size=4),
-          "int8": dict(quantized_kv=True),
-          "dense": {}}[storage]
+    kw = STORAGE_KW[storage]
 
     skewed = _hetero_logits(params, cfg, tokens, plens, 3, rng=rng, **kw)
     ref = ColocatedEngine(params, cfg, batch=b6, cache_len=S + 3)

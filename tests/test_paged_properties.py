@@ -1,0 +1,262 @@
+"""Property-based suite for the ref-counted copy-on-write PagedAllocator.
+
+Random ``admit`` / ``append_chunk`` / decode-grow / ``release`` /
+CoW-``adopt_prefix`` / migration sequences must preserve, after EVERY op:
+
+  * refcount conservation — sum of refcounts == mapped table slots;
+  * no double-free — the free list holds unique ids, disjoint from both
+    mapped pages and the refcount-zero cached (LRU) set;
+  * pool partition — free + cached + used == num_pages, with
+    used == #pages at refcount > 0;
+  * contiguous-table-prefix layout per row;
+  * capacity coherence — an active unfrozen row maps exactly
+    ceil(min(len, cap)/page) pages;
+  * released non-shared pages are write-clean (checked against a real
+    device pool in the deterministic test below).
+
+The hypothesis path (``tests/_hyp.py`` shim) runs 1000 examples when
+hypothesis is installed (CI); the deterministic fallback fuzz below it
+always runs, so the invariants are exercised even without hypothesis.
+Prompts are drawn from a tiny family pool so prefix-cache probes
+actually collide and CoW/adoption paths fire constantly.
+"""
+import numpy as np
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.serving import paged_cache as PC
+
+ROWS, PAGES, PAGE, MAXP = 4, 24, 4, 5
+CAP = MAXP * PAGE
+
+# three prompt families sharing pairwise prefixes of different depths,
+# longer than a row can hold so any admitted length has a valid prefix
+_BASE = np.arange(1, 2 * CAP + 1, dtype=np.int32)
+FAMILIES = [
+    _BASE,
+    np.concatenate([_BASE[:8], 1000 + _BASE[8:]]),    # shares 2 pages
+    np.concatenate([_BASE[:14], 2000 + _BASE[14:]]),  # shares 3.5 pages
+]
+
+
+class Harness:
+    """Drives a PagedAllocator through the op vocabulary while keeping
+    the ground truth needed for the invariants (per-row family/length)."""
+
+    def __init__(self, prefix_cache=True):
+        self.a = PC.PagedAllocator(ROWS, PAGES, PAGE, MAXP,
+                                   prefix_cache=prefix_cache)
+        self.fam = [None] * ROWS        # family index of each row
+
+    # -- ops ---------------------------------------------------------------
+    def admit(self, row, fam, length):
+        try:
+            self.a.admit(row, length)
+        except MemoryError:
+            self.fam[row] = None
+            return
+        self.fam[row] = fam if length else None
+        if length:
+            self.a.register_prefix(row, FAMILIES[fam][:length])
+
+    def release(self, row):
+        self.a.release(row)
+        self.fam[row] = None
+
+    def decode_grow(self, mask):
+        new = np.minimum(self.a.lengths + 1, CAP + 3)  # may exceed cap
+        self.a.ensure_lengths(new, mask=np.asarray(mask, bool))
+        self.a.take_clones()
+
+    def append_chunk(self, row, cnt):
+        base = np.zeros((ROWS,), np.int64)
+        counts = np.zeros((ROWS,), np.int64)
+        base[row] = int(self.a.lengths[row])
+        counts[row] = cnt
+        if base[row] == 0 and self.fam[row] is None:
+            self.fam[row] = 0           # fresh chunked admission
+        if base[row] + cnt > CAP:
+            return                      # keep chunk fuzz inside capacity
+        self.a.append_chunk(base, counts)
+        self.a.take_clones()
+
+    def adopt(self, row, fam, want):
+        """Prefix-cache admission: probe family ``fam``'s prompt of
+        length ``want`` and adopt the clamped cached prefix (the
+        serving engine's rule: at least the last token is recomputed)."""
+        tokens = FAMILIES[fam][:want]
+        ids, cached = self.a.probe_prefix(tokens)
+        eff = min(cached, want - 1)
+        if eff <= 0:
+            return
+        ids = ids[:-(-eff // PAGE)]
+        self.a.adopt_prefix(row, ids, eff)
+        self.fam[row] = fam
+        # stream the suffix like the chunk path would (triggers the
+        # partial-page CoW when eff is not page-aligned)
+        base = np.zeros((ROWS,), np.int64)
+        counts = np.zeros((ROWS,), np.int64)
+        base[row], counts[row] = eff, want - eff
+        self.a.append_chunk(base, counts)
+        self.a.take_clones()
+        self.a.register_prefix(row, tokens)
+
+    def migrate(self):
+        """Reassign-and-reinstall: what a fleet topology change does —
+        every surviving row re-admitted privately (sharing and the
+        index drop with the old allocator), then re-registered."""
+        lens = [int(self.a.lengths[r]) if self.a.active[r] else 0
+                for r in range(ROWS)]
+        fams = list(self.fam)
+        fresh = PC.PagedAllocator(ROWS, PAGES, PAGE, MAXP,
+                                  prefix_cache=self.a.prefix is not None)
+        self.a = fresh
+        for r in range(ROWS):
+            if lens[r]:
+                self.admit(r, fams[r] if fams[r] is not None else 0,
+                           min(lens[r], CAP))
+            else:
+                self.fam[r] = None
+
+    # -- invariants --------------------------------------------------------
+    def check(self):
+        a = self.a
+        tables = a.tables
+        mapped_ids = tables[tables >= 0]
+        # refcount conservation
+        assert int(a.refcount.sum()) == len(mapped_ids)
+        assert (a.refcount >= 0).all()
+        # per-page refcount == number of slots mapping it
+        uniq, counts = np.unique(mapped_ids, return_counts=True)
+        for pid, c in zip(uniq, counts):
+            assert a.refcount[pid] == c
+        # no double free; free/cached/mapped disjoint
+        free = set(a.free)
+        assert len(free) == len(a.free)
+        cached = set(a.prefix.lru) if a.prefix is not None else set()
+        assert not (free & set(int(i) for i in mapped_ids))
+        assert not (free & cached)
+        assert not (cached & set(int(i) for i in mapped_ids))
+        # partition of the pool
+        assert len(free) + len(cached) + a.used_pages() == PAGES
+        assert a.used_pages() == int((a.refcount > 0).sum())
+        # per-row layout
+        for r in range(ROWS):
+            m = tables[r] >= 0
+            n = int(m.sum())
+            assert m[:n].all(), "mapped slots must form a prefix"
+            if not a.active[r]:
+                assert n == 0 and a.lengths[r] == 0
+            elif not a.frozen[r]:
+                assert n == -(-min(int(a.lengths[r]), CAP) // PAGE)
+            else:
+                assert n <= -(-min(int(a.lengths[r]), CAP) // PAGE)
+
+
+def _run_ops(ops, prefix_cache=True):
+    h = Harness(prefix_cache)
+    for op in ops:
+        kind = op[0] % 6
+        row = op[1] % ROWS
+        fam = op[2] % len(FAMILIES)
+        length = 1 + op[3] % CAP
+        if kind == 0:
+            h.admit(row, fam, length)
+        elif kind == 1:
+            h.release(row)
+        elif kind == 2:
+            h.decode_grow([bool((op[3] >> i) & 1) for i in range(ROWS)])
+        elif kind == 3:
+            h.append_chunk(row, 1 + op[3] % (2 * PAGE))
+        elif kind == 4:
+            h.adopt(row, fam, length)
+        else:
+            h.migrate()
+        h.check()
+    return h
+
+
+_op = st.tuples(st.integers(0, 5), st.integers(0, ROWS - 1),
+                st.integers(0, 2), st.integers(0, CAP - 1))
+
+
+@settings(max_examples=1000, deadline=None)
+@given(st.lists(_op, min_size=1, max_size=30))
+def test_allocator_properties_hypothesis(ops):
+    _run_ops(ops)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("prefix_cache", [True, False])
+def test_allocator_properties_fallback_fuzz(seed, prefix_cache):
+    """Deterministic twin of the hypothesis property (always runs, even
+    without hypothesis installed): 6 seeds x 250 random ops."""
+    rng = np.random.default_rng(1234 + seed)
+    ops = [tuple(int(x) for x in rng.integers(0, 2 ** 16, 4))
+           for _ in range(250)]
+    _run_ops(ops, prefix_cache)
+
+
+def test_hypothesis_shim_consistent():
+    """The hypothesis path must actually run in CI (where hypothesis is
+    installed); here it may be a skip — both are fine, but the shim's
+    flag must match what the import produced."""
+    import _hyp
+    assert hasattr(_hyp, "HAVE_HYPOTHESIS")
+    assert _hyp.HAVE_HYPOTHESIS is HAVE_HYPOTHESIS
+
+
+# ---------------------------------------------------------------------------
+# write-cleanliness of released non-shared pages, against a REAL pool
+# ---------------------------------------------------------------------------
+def test_released_nonshared_pages_write_clean(rng):
+    """Drive a device pool alongside the allocator: after releasing a
+    non-shared row, its freed pages' bytes must stay bit-identical
+    through other rows' appends and CoW clones (freed != writable)."""
+    a = PC.PagedAllocator(3, 12, PAGE, MAXP, prefix_cache=True)
+    pool = PC.init_page_pool(12, PAGE, 2, 8)
+
+    def write(row, pos):
+        k = np.asarray(rng.standard_normal((3, 2, 8)), np.float32)
+        lengths = np.full((3,), -1)
+        lengths[row] = pos
+        active = np.zeros((3,), bool)
+        active[row] = True
+        return PC.write_token_paged(pool, a.tables_device(),
+                                    np.asarray(lengths), k, k,
+                                    active=active)
+
+    a.admit(0, 6)
+    a.register_prefix(0, FAMILIES[0][:6])
+    for p in range(6):
+        pool = write(0, p)
+    a.admit(1, 5)
+    for p in range(5):
+        pool = write(1, p)
+    # row 2 adopts row 0's prefix INCLUDING the partial tail page
+    # (5 of 6 tokens -> 2 pages shared, the second half-full), so its
+    # first append below lands inside a shared page and must CoW
+    ids, cached = a.probe_prefix(FAMILIES[0][:6])
+    assert cached == 6
+    a.adopt_prefix(2, ids[:2], 5)
+    # release the NON-shared row 1: its pages are free now
+    freed = sorted(int(i) for i in a.tables[1][a.tables[1] >= 0])
+    a.release(1)
+    assert set(freed) <= set(a.free)
+    snap = {k: np.array(v)[freed] for k, v in pool.items()}
+    # decode-append rows 0 and 2 (row 2's append CoW-clones the shared
+    # page; the clone must come from the free list, then drop from it)
+    a.ensure_lengths(np.asarray([7, 0, 6]),
+                     mask=np.asarray([True, False, True]))
+    clones = a.take_clones()
+    assert clones, "append into a shared page must CoW"
+    pool = PC.clone_pool_pages(pool, clones)
+    pool = write(0, 6)
+    pool = write(2, 5)
+    still_free = [p for p in freed if p in a.free]
+    for k in pool:
+        got = np.array(pool[k])[still_free]
+        want = snap[k][[freed.index(p) for p in still_free]]
+        assert np.array_equal(got, want), f"freed page bytes changed ({k})"
+    # refcount conservation at the end, for good measure
+    assert int(a.refcount.sum()) == int((a.tables >= 0).sum())

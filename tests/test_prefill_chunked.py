@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from conftest import tiny_cfg
+from conftest import random_spec, serve_trace, tiny_cfg
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
 from repro.serving.request import Request, Status
@@ -65,52 +65,14 @@ def test_model_prefill_chunk_matches_whole(arch, rng, key):
 
 
 # --------------------------------------------------------------------------- #
-# serving-level token-exact equivalence (the acceptance criterion)
+# serving-level token-exact equivalence.  The full storage x schedule x
+# chunked/monolithic (x shared-prefix) matrix lives in
+# tests/test_equiv_matrix.py on the conftest serve_trace harness; this
+# module keeps only the chunk-specific scenarios the matrix can't cover
+# (recurrent archs, skew/jitter, mid-prefill migration, regressions).
 # --------------------------------------------------------------------------- #
-def _serve_trace(params, cfg, spec, chunk_exact=True, **kw):
-    """Serve (prompt, max_new, arrive_step) specs; returns {rid: tokens}."""
-    eng = ServingEngine(params, cfg, batch=4, cache_len=48, **kw)
-    try:
-        qi = 0
-        order = sorted(range(len(spec)), key=lambda i: spec[i][2])
-        while (qi < len(order) or eng.queue
-               or any(s is not None for s in eng.slots)) \
-                and eng.step_idx < 400:
-            while qi < len(order) and spec[order[qi]][2] <= eng.step_idx:
-                i = order[qi]
-                eng.submit(Request(rid=i, prompt=spec[i][0],
-                                   max_new_tokens=spec[i][1]))
-                qi += 1
-            eng.step()
-        return {r.rid: list(r.generated) for r in eng.finished}
-    finally:
-        if eng.backend == "hetero":
-            eng.close()
-
-
-def _random_spec(rng, cfg, n, p_lo=3, p_hi=15, max_new=5, spread=10):
-    """Randomized prompt lengths (incl. ones not divisible by the chunk)
-    and staggered arrivals — the continuous-arrival regime."""
-    return [(rng.integers(1, cfg.vocab_size,
-                          int(rng.integers(p_lo, p_hi))).astype(np.int32),
-             max_new, int(rng.integers(0, spread))) for _ in range(n)]
-
-
-@pytest.mark.parametrize("storage", ["dense", "paged", "int8"])
-def test_serving_chunked_matches_colocated(storage, rng, key):
-    """Chunked-prefill hetero serving produces IDENTICAL generated tokens
-    to ColocatedEngine whole-prompt prefill — dense/paged/int8 storage,
-    randomized prompt lengths not divisible by prefill_chunk, staggered
-    arrivals (so chunks of different sequences overlap decode)."""
-    cfg = tiny_cfg("granite-3-8b")
-    params = M.init_params(key, cfg)
-    spec = _random_spec(rng, cfg, 6)
-    kw = {"paged": dict(paged_kv=True, page_size=4),
-          "int8": dict(quantized_kv=True), "dense": {}}[storage]
-    ref = _serve_trace(params, cfg, spec, backend="colocated")
-    got = _serve_trace(params, cfg, spec, backend="hetero",
-                       num_r_workers=2, prefill_chunk=5, **kw)
-    assert got == ref and len(got) == len(spec)
+_serve_trace = serve_trace          # local aliases for the shared harness
+_random_spec = random_spec
 
 
 @pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-2b"])

@@ -1,0 +1,385 @@
+"""Shared-prefix KV reuse acceptance: strictly fewer pages for sharers,
+token-exact mid-decode CoW divergence, survival of live migration and
+worker-failure recovery, admission credit, and the perfmodel term.
+
+The equivalence matrix (tests/test_equiv_matrix.py) already pins "shared
+== independent" across storages; this module pins the MECHANISM — page
+accounting, CoW, the prefix-aware admission credit — and the failure
+paths."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import serve_trace, tiny_cfg
+from repro.core import perfmodel as P
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_cache import PagedAllocator
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk_engine(params, cfg, **kw):
+    base = dict(batch=8, cache_len=48, backend="hetero", paged_kv=True,
+                page_size=4, num_r_workers=1, prefix_cache=True)
+    base.update(kw)
+    return ServingEngine(params, cfg, **base)
+
+
+def _drain(eng, reqs, submit_at=None, max_steps=300, hooks=()):
+    """Submit requests (optionally at given steps) and run to drain,
+    invoking step-indexed hooks; returns {rid: tokens}."""
+    submit_at = submit_at or [0] * len(reqs)
+    qi = 0
+    order = sorted(range(len(reqs)), key=lambda i: submit_at[i])
+    while (qi < len(order) or eng.queue
+           or any(s is not None for s in eng.slots)) \
+            and eng.step_idx < max_steps:
+        while qi < len(order) and submit_at[order[qi]] <= eng.step_idx:
+            eng.submit(reqs[order[qi]])
+            qi += 1
+        eng.step()
+        for at, fn in hooks:
+            if eng.step_idx == at:
+                fn(eng)
+    return {r.rid: list(r.generated) for r in eng.finished}
+
+
+def _total_used_pages(eng):
+    return sum(a.used_pages() for w in eng.engine.workers
+               for a in w.allocators.values())
+
+
+# ---------------------------------------------------------------------------
+# capacity: sharing must consume strictly fewer pages
+# ---------------------------------------------------------------------------
+def test_shared_prefix_uses_strictly_fewer_pages(setup, rng):
+    """Two requests sharing a page-aligned prefix must peak at strictly
+    fewer pool pages than two independent requests of the same lengths —
+    and still decode token-exactly vs serving each alone."""
+    cfg, params = setup
+    shared = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)  # 3 pages
+    sufs = [rng.integers(1, cfg.vocab_size, 3).astype(np.int32)
+            for _ in range(2)]
+    prompts = [np.concatenate([shared, s]) for s in sufs]
+    indep = [np.concatenate(
+        [rng.integers(1, cfg.vocab_size, 12).astype(np.int32), s])
+        for s in sufs]
+
+    solo = {i: serve_trace(params, cfg, [(p, 5, 0)],
+                           backend="colocated")[0]
+            for i, p in enumerate(prompts)}
+
+    def peak_pages(plist):
+        eng = _mk_engine(params, cfg)
+        try:
+            qi, peak = 0, 0
+            reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+                    for i, p in enumerate(plist)]
+            at = [0, 2]
+            while (qi < 2 or eng.queue
+                   or any(s is not None for s in eng.slots)) \
+                    and eng.step_idx < 200:
+                while qi < 2 and at[qi] <= eng.step_idx:
+                    eng.submit(reqs[qi])
+                    qi += 1
+                eng.step()
+                peak = max(peak, _total_used_pages(eng))
+            got = {r.rid: list(r.generated) for r in eng.finished}
+        finally:
+            eng.close()
+        return peak, got
+
+    peak_shared, got_shared = peak_pages(prompts)
+    peak_indep, _ = peak_pages(indep)
+    assert peak_shared < peak_indep, (peak_shared, peak_indep)
+    assert got_shared == solo
+
+
+# ---------------------------------------------------------------------------
+# mid-decode CoW divergence: identical prompts, different lifetimes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("storage", ["fp", "int8"])
+def test_identical_prompts_cow_divergence_token_exact(setup, rng, storage):
+    """The second copy of an identical (non-page-aligned) prompt adopts
+    the WHOLE cached prompt incl. the partial tail page; recomputing its
+    last token CoW-clones that page, and the owner's own next decode
+    append CoW-diverges too.  Both must match the solo oracle, the
+    early finisher's release must leave the survivor intact, and all
+    pages must return at drain."""
+    cfg, params = setup
+    prompt = rng.integers(1, cfg.vocab_size, 13).astype(np.int32)  # 3p+1
+    solo = {}
+    for rid, mnt in ((0, 8), (1, 3)):
+        solo[rid] = serve_trace(params, cfg, [(prompt, mnt, 0)],
+                                backend="colocated")[0]
+    eng = _mk_engine(params, cfg,
+                     quantized_kv=(storage == "int8"))
+    try:
+        reqs = [Request(rid=0, prompt=prompt.copy(), max_new_tokens=8),
+                Request(rid=1, prompt=prompt.copy(), max_new_tokens=3)]
+        shared_seen = []
+        qi = 0
+        at = [0, 2]
+        while (qi < 2 or eng.queue
+               or any(s is not None for s in eng.slots)) \
+                and eng.step_idx < 200:
+            while qi < 2 and at[qi] <= eng.step_idx:
+                eng.submit(reqs[qi])
+                qi += 1
+            eng.step()
+            shared_seen.append(
+                eng.prefix_cache_stats()["shared_pages"])
+        got = {r.rid: list(r.generated) for r in eng.finished}
+        stats = eng.prefix_cache_stats()
+        # drained: no row references a page; parked (refcount-zero)
+        # cached prefix pages may remain and still count as resident
+        # bytes until the LRU evicts them
+        assert _total_used_pages(eng) == 0
+    finally:
+        eng.close()
+    assert got == solo
+    assert stats["hits"] == 1 and stats["cached_tokens"] == 12
+    assert max(shared_seen) >= 3       # the 3 full prompt pages shared
+
+
+# ---------------------------------------------------------------------------
+# live migration with shared pages
+# ---------------------------------------------------------------------------
+def test_migration_with_shared_pages_token_exact(setup, rng):
+    """apply_partition mid-decode while rows share prefix pages: the
+    per-row wire format un-shares them (token-exactly), and the serving
+    layer re-registers prompts so a LATER admission shares again."""
+    cfg, params = setup
+    shared = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.integers(1, cfg.vocab_size, 1 + i).astype(np.int32)])
+        for i in range(3)]
+    solo = {i: serve_trace(params, cfg, [(p, 6, 0)],
+                           backend="colocated")[0]
+            for i, p in enumerate(prompts)}
+
+    eng = _mk_engine(params, cfg, num_r_workers=2, num_microbatches=2)
+    try:
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+
+        def migrate(e):
+            moved = e.engine.apply_partition([(0, 3), (3, 4)])
+            assert moved > 0
+
+        def migrate_back(e):
+            e.engine.apply_partition([(0, 2), (2, 4)])
+
+        got = _drain(eng, reqs, submit_at=[0, 2, 6],
+                     hooks=[(4, migrate), (5, migrate_back)])
+        stats = eng.prefix_cache_stats()
+        assert _total_used_pages(eng) == 0
+    finally:
+        eng.close()
+    assert got == solo
+    # rid=2 arrived AFTER both migrations: it can only share because
+    # the topology change re-registered the live rows' prompts
+    assert stats["hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# worker-failure recovery of rows holding shared pages
+# ---------------------------------------------------------------------------
+def test_failure_recovery_with_shared_pages_token_exact(setup, rng):
+    """A worker dies while its rows hold shared prefix pages; reprefill
+    recovery (fleet) must restore token-exact generation."""
+    from repro.fleet import FleetManager, uniform_fleet
+    cfg, params = setup
+    shared = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.integers(1, cfg.vocab_size, 2 + i).astype(np.int32)])
+        for i in range(4)]
+    solo = {i: serve_trace(params, cfg, [(p, 6, 0)],
+                           backend="colocated")[0]
+            for i, p in enumerate(prompts)}
+
+    fleet = FleetManager(uniform_fleet(2), recovery="reprefill")
+    eng = _mk_engine(params, cfg, num_r_workers=2, fleet=fleet)
+    try:
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        # staggered arrivals: sharing needs an already-registered
+        # resident copy, so same-step admissions never share
+        at = [0, 2, 3, 5]
+        qi = 0
+        for _ in range(7):
+            while qi < 4 and at[qi] <= eng.step_idx:
+                eng.submit(reqs[qi])
+                qi += 1
+            eng.step()
+        assert eng.prefix_cache_stats()["shared_pages"] > 0
+        eng.engine.workers[1].kill()
+        deadline = time.time() + 5
+        while eng.engine.workers[1].is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        eng.run(max_steps=200)
+        got = {r.rid: list(r.generated) for r in eng.finished}
+        assert _total_used_pages(eng) == 0
+    finally:
+        eng.close()
+    assert fleet.telemetry.summary()["recoveries"] == 1
+    assert got == solo
+
+
+# ---------------------------------------------------------------------------
+# prefix-aware admission credit: larger admitted batches
+# ---------------------------------------------------------------------------
+def test_admission_credits_shared_pages(setup, rng):
+    """With a pool too small for two independent worst cases, a request
+    whose prefix is cached must still be admitted (its adopted pages
+    cost nothing) — cache off, it must wait for the first to finish."""
+    cfg, params = setup
+    prompt = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+
+    def first_concurrent2_step(prefix_cache):
+        # pool: 4 pages/prompt + 2 growth (6 new tokens) = 7 worst case;
+        # 11 pages hold one full request plus a SHARED second, not two
+        # independent ones
+        eng = ServingEngine(params, cfg, batch=4, cache_len=28,
+                            backend="hetero", paged_kv=True, page_size=4,
+                            num_r_workers=1, num_microbatches=2,
+                            pages_per_worker=11,
+                            prefix_cache=prefix_cache)
+        try:
+            eng.submit(Request(rid=0, prompt=prompt.copy(),
+                               max_new_tokens=6))
+            eng.step()
+            eng.submit(Request(rid=1, prompt=prompt.copy(),
+                               max_new_tokens=6))
+            both_at = None
+            while (eng.queue or any(s is not None for s in eng.slots)) \
+                    and eng.step_idx < 120:
+                eng.step()
+                if both_at is None and \
+                        sum(s is not None for s in eng.slots) >= 2:
+                    both_at = eng.step_idx
+            assert len(eng.finished) == 2
+            return both_at
+        finally:
+            eng.close()
+
+    on = first_concurrent2_step(True)
+    off = first_concurrent2_step(False)
+    assert on is not None, "credited admission never ran both at once"
+    assert off is None or on < off, (on, off)
+
+
+# ---------------------------------------------------------------------------
+# regression: monolithic miss readmitted into a freed slot must decode
+# ---------------------------------------------------------------------------
+def test_miss_readmission_into_freed_slot_decodes(setup, rng):
+    """prefix_cache=True + prefill_chunk=0: a finished sequence marks
+    its row decode-inactive; a later MISS admitted into that slot goes
+    through the monolithic path, which must re-activate the row — or it
+    decodes forever against frozen KV (caught by the live reproduction
+    in review: mb_active stuck False, lengths frozen)."""
+    cfg, params = setup
+    pa = rng.integers(1, cfg.vocab_size, 7).astype(np.int32)
+    pb = rng.integers(1, cfg.vocab_size, 9).astype(np.int32)   # unrelated
+    solo_b = serve_trace(params, cfg, [(pb, 6, 0)], backend="colocated")[0]
+
+    eng = _mk_engine(params, cfg, batch=2, num_r_workers=1,
+                     num_microbatches=2)
+    try:
+        eng.submit(Request(rid=0, prompt=pa, max_new_tokens=2))
+        while not eng.finished and eng.step_idx < 50:
+            eng.step()
+        freed_row = eng.finished[0].slot
+        eng.submit(Request(rid=1, prompt=pb, max_new_tokens=6))
+        eng.run(max_steps=100)
+        got = {r.rid: list(r.generated) for r in eng.finished}
+        assert eng.finished[1].slot == freed_row   # really reused it
+    finally:
+        eng.close()
+    assert got[1] == solo_b
+
+
+# ---------------------------------------------------------------------------
+# allocator-level probe/adopt semantics
+# ---------------------------------------------------------------------------
+def test_probe_stops_at_first_missing_block():
+    a = PagedAllocator(2, 16, 4, 4, prefix_cache=True)
+    toks = np.arange(1, 13, dtype=np.int32)          # 3 full pages
+    a.admit(0, 12)
+    a.register_prefix(0, toks)
+    # evict nothing, but drop the MIDDLE block's entry: descendants
+    # must become unreachable (no non-contiguous prefix adoption)
+    ids, cached = a.probe_prefix(toks)
+    assert cached == 12
+    mid = ids[1]
+    a.prefix.drop_page(mid)
+    ids2, cached2 = a.probe_prefix(toks)
+    assert cached2 == 4 and len(ids2) == 1
+
+
+def test_tail_entry_matches_exact_length_only():
+    a = PagedAllocator(2, 16, 4, 4, prefix_cache=True)
+    toks = np.arange(1, 11, dtype=np.int32)          # 2 pages + tail(2)
+    a.admit(0, 10)
+    a.register_prefix(0, toks)
+    ids, cached = a.probe_prefix(toks)
+    assert cached == 10 and len(ids) == 3            # tail matched
+    longer = np.concatenate([toks, [99]])
+    ids, cached = a.probe_prefix(longer)
+    assert cached == 8 and len(ids) == 2             # tail NOT matched
+    shorter = toks[:9]
+    ids, cached = a.probe_prefix(shorter)
+    assert cached == 8 and len(ids) == 2
+
+
+def test_lru_eviction_recycles_cached_pages():
+    a = PagedAllocator(2, 4, 4, 4, prefix_cache=True)
+    toks = np.arange(1, 9, dtype=np.int32)
+    a.admit(0, 8)                                    # 2 pages
+    a.register_prefix(0, toks)
+    a.release(0)
+    assert a.cached_pages() == 2 and a.free_pages() == 2
+    # admitting 4 pages must evict both cached pages (free list first)
+    a.admit(1, 16)
+    assert a.cached_pages() == 0 and a.used_pages() == 4
+    ids, cached = a.probe_prefix(toks)
+    assert cached == 0                               # entries dropped
+
+
+# ---------------------------------------------------------------------------
+# perfmodel: the prefix-hit-rate term
+# ---------------------------------------------------------------------------
+def test_perfmodel_prefix_dedup_term():
+    cfg = tiny_cfg("granite-3-8b")
+    assert P.prefix_dedup_factor(100, 0, 0.9) == 1.0
+    assert P.prefix_dedup_factor(100, 50, 0.0) == 1.0
+    f = P.prefix_dedup_factor(100, 50, 0.8)
+    assert f == pytest.approx(0.6)
+    plain = P.plan(cfg, P.TPU_V5E, P.CPU_XEON, seq_len=128, page=16)
+    dedup = P.plan(cfg, P.TPU_V5E, P.CPU_XEON, seq_len=128, page=16,
+                   prefix_hit_rate=0.9, prefix_len=64)
+    assert plain["prefix_dedup"] == 1.0 and plain["w_lim_scale"] == 1.0
+    assert dedup["prefix_dedup"] == pytest.approx(1 - 0.9 * 0.5)
+    assert dedup["w_lim_scale"] > 1.0
+    assert dedup["workers_mem_min"] <= plain["workers_mem_min"]
+
+
+def test_prefix_cache_requires_paged_pure_attention(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="paged_kv"):
+        ServingEngine(params, cfg, batch=4, cache_len=32,
+                      backend="hetero", prefix_cache=True)
+    rcfg = tiny_cfg("recurrentgemma-2b")
+    rparams = M.init_params(jax.random.PRNGKey(0), rcfg)
+    with pytest.raises(ValueError, match="pure self-attention"):
+        ServingEngine(rparams, rcfg, batch=4, cache_len=32,
+                      backend="hetero", paged_kv=True, prefix_cache=True)
