@@ -1,0 +1,153 @@
+"""KV lifecycle tiering A/B: restore-vs-reprefill TTFT and throughput
+for a sustained multi-turn workload under page-pool pressure.
+
+The "long-lived conversations" regime: every conversation returns after
+its previous turn finished, with the FULL history as its prompt.  With
+tiering ON, park-on-finish keeps the history's pages (device-resident
+parked, or swapped to the host tier under pressure) keyed by the token
+hash chain, so the next turn restores them and prefills only the new
+suffix.  OFF is the baseline: every turn re-prefills its whole history.
+
+Three measured modes:
+
+* ``resident`` — tiering on, pool roomy enough that histories stay
+  parked on device (restore == adopt, no host traffic);
+* ``restore``  — tiering on, every parked page forced out to the host
+  tier between turns (sustained-pressure worst case: each turn streams
+  its history back before decoding);
+* ``reprefill`` — tiering off, the full-recompute baseline.
+
+Emits per mode: p50 wall TTFT over the multi-turn waves (turn >= 2,
+which also skips jit warm-up), steps per finished request, tier traffic
+counters — plus the restore-vs-reprefill summary row and the perfmodel
+break-even sequence length (``kv_restore_break_even``) for context.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_model, csv_row
+from repro.core import perfmodel as P
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+
+PAGE = 8
+
+
+def _serve_wave(eng, reqs):
+    """Submit one turn's wave and run it to drain; returns per-rid wall
+    TTFT and the steps the wave took."""
+    ttft, t0 = {}, {}
+    start = eng.step_idx
+    for r in reqs:
+        eng.submit(r)
+        t0[r.rid] = time.perf_counter()
+    while (eng.queue or any(s is not None for s in eng.slots)) \
+            and eng.step_idx - start < 3000:
+        eng.step()
+        now = time.perf_counter()
+        for r in list(eng.slots) + eng.finished:
+            if r is not None and r.generated and r.rid in t0 \
+                    and r.rid not in ttft:
+                ttft[r.rid] = now - t0[r.rid]
+    return ttft, eng.step_idx - start
+
+
+def _run_mode(params, cfg, first, extras, max_new, *, tiering, flush):
+    """Serve len(extras)+1 turn waves; each turn's prompt is the full
+    conversation history.  ``flush`` forces every parked page to the
+    host tier between turns (the sustained-pressure regime).  Both
+    modes prefill through the same chunk pipeline (the production
+    path), so the A/B isolates cached-history length: a restored turn
+    streams one suffix chunk where the baseline streams the whole
+    history."""
+    n = len(first)
+    eng = ServingEngine(params, cfg, batch=8, cache_len=192,
+                        backend="hetero", num_r_workers=1,
+                        num_microbatches=2, paged_kv=True, page_size=PAGE,
+                        pages_per_worker=96, prefill_chunk=16,
+                        **(dict(kv_tiering=True) if tiering else {}))
+    hist = [np.asarray(p, np.int32) for p in first]
+    warm_ttft, steps, done_reqs = [], 0, 0
+    try:
+        for t in range(len(extras) + 1):
+            if t > 0:
+                hist = [np.concatenate(
+                    [hist[i], np.asarray(done.get(i, []), np.int32),
+                     extras[t - 1][i]]) for i in range(n)]
+            reqs = [Request(rid=t * n + i, prompt=hist[i],
+                            max_new_tokens=max_new) for i in range(n)]
+            ttft, st = _serve_wave(eng, reqs)
+            steps += st
+            if t > 0:                      # turn 1 == identical in both
+                warm_ttft += list(ttft.values())
+            done = {r.rid % n: list(r.generated) for r in eng.finished
+                    if r.rid // n == t}
+            done_reqs = len(eng.finished)
+            if flush and tiering:
+                for w in eng.engine.workers:
+                    for a in w.allocators.values():
+                        a.swap_out_all_parked()
+        stats = eng.tiering_stats() if tiering else {}
+        return dict(
+            ttft_p50=float(np.median(warm_ttft)) if warm_ttft else 0.0,
+            steps=steps, done=done_reqs,
+            restored=int(stats.get("restored", 0)),
+            swapped=int(stats.get("swapped_out", 0)),
+            host_mb=float(stats.get("host_bytes", 0)) / 2 ** 20,
+            sim_s=float(stats.get("sim_seconds", 0.0)))
+    finally:
+        eng.close()
+
+
+def run(print_fn=print):
+    from benchmarks.common import smoke
+    cfg, params = bench_model(layers=2, d_model=128)
+    rng = np.random.default_rng(23)
+    n_conv = 4 if smoke() else 8
+    turns = 2 if smoke() else 3
+    max_new = 4 if smoke() else 8
+    # long histories, short new turns: the regime where restoring the
+    # conversation beats recomputing it
+    first_len, extra_len = (48, 8) if smoke() else (96, 8)
+
+    first = [rng.integers(1, cfg.vocab_size, first_len).astype(np.int32)
+             for _ in range(n_conv)]
+    extras = [[rng.integers(1, cfg.vocab_size, extra_len).astype(np.int32)
+               for _ in range(n_conv)] for _ in range(turns - 1)]
+
+    out = {}
+    for mode, tiering, flush in (("resident", True, False),
+                                 ("restore", True, True),
+                                 ("reprefill", False, False)):
+        # pass 1 warms the jit caches (greedy decode => both passes see
+        # identical shapes); pass 2 is the measured one, so TTFT
+        # compares prefill work instead of compile time
+        _run_mode(params, cfg, first, extras, max_new,
+                  tiering=tiering, flush=flush)
+        r = _run_mode(params, cfg, first, extras, max_new,
+                      tiering=tiering, flush=flush)
+        out[mode] = r
+        print_fn(csv_row(
+            f"tiering_{mode}_ttft_p50", r["ttft_p50"] * 1e6,
+            f"done={r['done']},steps={r['steps']},"
+            f"steps_per_req={r['steps'] / max(1, r['done']):.1f},"
+            f"restored={r['restored']},swapped={r['swapped']},"
+            f"host_mb={r['host_mb']:.2f},sim_s={r['sim_s']:.2e}"))
+
+    base = max(out["reprefill"]["ttft_p50"], 1e-12)
+    be = P.kv_restore_break_even(cfg, P.TPU_V5E, tier_gbps=25.0,
+                                 page=PAGE)
+    print_fn(csv_row(
+        "tiering_restore_vs_reprefill", 0.0,
+        f"restore_ttft_ratio={out['restore']['ttft_p50'] / base:.3f},"
+        f"resident_ttft_ratio={out['resident']['ttft_p50'] / base:.3f},"
+        f"steps_ratio={out['restore']['steps'] / max(1, out['reprefill']['steps']):.3f},"
+        f"break_even_tokens={be if be != float('inf') else -1}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

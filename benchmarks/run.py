@@ -30,6 +30,8 @@ BENCHES = [
     ("prefix", "benchmarks.bench_prefix",
      "Shared-prefix KV reuse: capacity + TTFT vs share ratio"),
     ("fleet", "benchmarks.bench_fleet", "Fleet skew/rebalance/recovery"),
+    ("tiering", "benchmarks.bench_tiering",
+     "KV lifecycle tiering: restore-vs-reprefill TTFT, multi-turn"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
     ("hotpath", "benchmarks.bench_hotpath", "Hot-path overhead + OoO A/B"),

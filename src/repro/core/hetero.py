@@ -276,6 +276,7 @@ class RWorker(threading.Thread):
                  num_pages: Optional[int] = None,
                  max_pages_per_seq: Optional[int] = None,
                  prefix_cache: bool = False,
+                 kv_tier: Any = None,
                  profile: Any = None, slowdown: float = 1.0,
                  sim_row_cost: float = 0.0,
                  sim_deliver_jitter: float = 0.0,
@@ -288,7 +289,11 @@ class RWorker(threading.Thread):
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
         self.num_pages = num_pages
-        self.prefix_cache = prefix_cache
+        # the engine-global host tier (paged_cache.HostTier) — parked
+        # pages swap out to it under pressure; tiering implies the
+        # prefix index (digest chains are the tier's key space)
+        self.kv_tier = kv_tier
+        self.prefix_cache = prefix_cache or kv_tier is not None
         self.profile = profile                   # fleet.WorkerProfile or None
         self.slowdown = max(1.0, float(slowdown))  # simulated skew (tests)
         self.sim_row_cost = max(0.0, float(sim_row_cost))  # s/row/call
@@ -335,9 +340,17 @@ class RWorker(threading.Thread):
             rows = self.hi - self.lo
             mp = self.max_pages_per_seq or -(-self._cache_len // self.page_size)
             num = self.num_pages or rows * mp
-            self.allocators[mb] = PC.PagedAllocator(
+            alloc = PC.PagedAllocator(
                 rows, num, self.page_size, mp,
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache, tier=self.kv_tier)
+            # swap-out reads this micro-batch's layer pools at directive
+            # time (pools are immutable jnp arrays, so the captured bytes
+            # cannot be raced by a later functional update)
+            alloc.pool_reader = lambda mb=mb: {
+                lk % self.cfg.num_layers: self.state[lk]
+                for lk in self.paged_keys
+                if lk // self.cfg.num_layers == mb}
+            self.allocators[mb] = alloc
         return self.allocators[mb]
 
     def _to_pages(self, layer: int, rows: np.ndarray, r_state_rows):
@@ -373,7 +386,8 @@ class RWorker(threading.Thread):
         total = 0.0
         for layer in self.paged_keys:
             alloc = self.allocators[layer // self.cfg.num_layers]
-            total += ((alloc.used_pages() + alloc.cached_pages())
+            total += ((alloc.used_pages() + alloc.cached_pages()
+                       + alloc.parked_pages())
                       * self.page_size
                       * PC.page_pool_token_bytes(self.state[layer]))
         return total
@@ -466,7 +480,11 @@ class RWorker(threading.Thread):
         """Adopt a new row slice: drop ALL row-indexed storage (state
         slabs, page pools, allocators).  The caller (engine live
         migration) re-installs every layer's rows via ``load_state``
-        right after; must only run between decode steps."""
+        right after; must only run between decode steps.  Parked pages
+        are flushed to the host tier first (their pools are about to be
+        dropped) so park/restore survives the topology change."""
+        for alloc in self.allocators.values():
+            alloc.swap_out_all_parked()
         self.lo, self.hi = int(lo), int(hi)
         self.state.clear()
         self.paged_keys.clear()
@@ -720,6 +738,7 @@ class HeteroPipelineEngine:
                  quantized_kv: bool = False, paged_kv: bool = False,
                  page_size: int = 16, pages_per_worker: Optional[int] = None,
                  prefix_cache: bool = False,
+                 kv_tier: Any = None,
                  fleet: Any = None, schedule: str = "ooo",
                  collect_timeout_s: float = 600.0,
                  profile_timing: bool = False):
@@ -751,7 +770,12 @@ class HeteroPipelineEngine:
         self.cache_len = cache_len
         self.paged_kv = paged_kv
         self.page_size = page_size
-        self.prefix_cache = prefix_cache and paged_kv
+        # KV lifecycle tiering: the engine-global host tier every
+        # worker/micro-batch allocator swaps to; implies the prefix
+        # index (the tier is keyed by its digest chains)
+        self.kv_tier = kv_tier if paged_kv else None
+        self.prefix_cache = (prefix_cache or self.kv_tier is not None) \
+            and paged_kv
         self.layers = per_layer_params(params, cfg)
         self.num_layers = cfg.num_layers
         self.fleet = fleet
@@ -765,7 +789,7 @@ class HeteroPipelineEngine:
             kv_chunk=kv_chunk, quantized=quantized_kv, paged=paged_kv,
             page_size=page_size, num_pages=pages_per_worker,
             max_pages_per_seq=max_pages, prefix_cache=self.prefix_cache,
-            profile_timing=profile_timing)
+            kv_tier=self.kv_tier, profile_timing=profile_timing)
         if fleet is not None:
             # the fleet owns worker construction: profiles -> planned
             # (possibly uneven) partition -> RWorker instances
@@ -1518,15 +1542,49 @@ class HeteroPipelineEngine:
         w, mb, local = self.worker_for(row)
         return w.allocators.get(mb), local
 
-    def probe_prefix(self, row: int, prompt_tokens):
+    def probe_prefix(self, row: int, prompt_tokens,
+                     restore: bool = False):
         """Longest cached prefix of ``prompt_tokens`` in the allocator
         that owns global batch row ``row`` — a cached prefix is only
         adoptable by rows of the same (worker, micro-batch) pool.
-        Returns (page_ids, cached_token_count)."""
-        alloc, _ = self._row_allocator(row)
+        Returns (page_ids, cached_token_count).
+
+        With ``restore=True`` (tiering) index misses consult the host
+        tier; restored page bytes are applied to the owning worker's
+        layer pools right here, before returning — this runs on the
+        engine thread between decode steps (the ``write_rows`` safety
+        pattern), so nothing can read a restored page before its KV
+        lands."""
+        w, mb, local = self.worker_for(row)
+        alloc = w.allocators.get(mb)
         if alloc is None or alloc.prefix is None:
             return [], 0
-        return alloc.probe_prefix(prompt_tokens)
+        lkeys = [k for k in w.paged_keys
+                 if k // self.num_layers == mb]
+        ids, cached = alloc.probe_prefix(
+            prompt_tokens, restore=restore and bool(lkeys))
+        restores = alloc.take_restores()
+        if restores:
+            from repro.serving import paged_cache as PC
+            for lk in lkeys:
+                w.state[lk] = PC.restore_pool_pages(
+                    w.state[lk], restores, lk % self.num_layers)
+        return ids, cached
+
+    def park_row(self, row: int, tokens) -> bool:
+        """Park-on-finish/preempt: index global batch row ``row``'s
+        written chain (``tokens``) and keep its pages whole-sequence
+        parked (host-tier-swappable) instead of LRU-cached — the
+        tiering replacement for :meth:`release_row`.  Falls back to a
+        plain release (inside the allocator) when the row is frozen,
+        clamped, or the backend has no prefix index."""
+        if not self.paged_kv:
+            return False
+        w, mb, local = self.worker_for(row)
+        alloc = w.allocators.get(mb)
+        if alloc is None:
+            return False
+        return alloc.park_row(local, tokens)
 
     def adopt_prefix(self, row: int, page_ids, length: int) -> None:
         """Map a probed prefix into ``row``'s block table (refcount++;
@@ -1545,12 +1603,16 @@ class HeteroPipelineEngine:
     def prefix_cache_stats(self) -> Dict[str, int]:
         """Aggregate allocator-level sharing counters (pages shared by
         >1 row, refcount-zero cached pages, free pages)."""
-        out = {"shared_pages": 0, "cached_pages": 0, "free_pages": 0}
+        out = {"shared_pages": 0, "cached_pages": 0, "free_pages": 0,
+               "parked_pages": 0}
         for w in self.workers:
             for a in w.allocators.values():
                 out["shared_pages"] += a.shared_pages()
                 out["cached_pages"] += a.cached_pages()
                 out["free_pages"] += a.free_pages()
+                out["parked_pages"] += a.parked_pages()
+        if self.kv_tier is not None:
+            out["swapped_pages"] = self.kv_tier.swapped_pages()
         return out
 
     # -- fleet: live migration + failure recovery ---------------------------
@@ -1675,6 +1737,11 @@ class HeteroPipelineEngine:
             if id(w) in changed_ids:
                 w.reassign(*s)
         for w in dropped:
+            # a gracefully dropped worker's parked pages cross to the
+            # engine-global tier before its pools die (a KILLED worker
+            # gets no such flush — only already-swapped entries survive)
+            for alloc in w.allocators.values():
+                alloc.swap_out_all_parked()
             w.stop()
         for lk in lkeys:
             for w, (lo, hi) in zip(workers, new_slices):

@@ -111,6 +111,68 @@ def prefix_dedup_factor(seq_len: int, prefix_len: int,
 
 
 # ---------------------------------------------------------------------------
+# KV lifecycle tiering: swap-vs-recompute (the DéjàVu-style tradeoff the
+# admission path consults — restoring parked KV from a host tier costs
+# LINEAR stream time, re-prefilling costs linear S-Part time PLUS the
+# quadratic attention term, so past a break-even prefix length the tier
+# always wins)
+# ---------------------------------------------------------------------------
+def kv_restore_time(cfg: ModelConfig, tokens: int, tier_gbps: float,
+                    bytes_per_el: int = 2, page: int = 0) -> float:
+    """Seconds to stream ``tokens`` of parked KV (all layers, K+V) back
+    from a host tier at ``tier_gbps`` GB/s; ``page > 0`` rounds the
+    byte count up to whole pages (the tier stores page granules)."""
+    if tier_gbps <= 0:
+        return math.inf
+    if tokens <= 0:
+        return 0.0
+    n = tokens if page <= 0 else -(-tokens // page) * page
+    return kv_cache_bytes(cfg, 1, n, bytes_per_el) / (tier_gbps * 1e9)
+
+
+def kv_recompute_time(cfg: ModelConfig, hw_s: Hardware, tokens: int,
+                      bytes_per_el: int = 2) -> float:
+    """Seconds to re-prefill ``tokens`` from scratch on the S-worker:
+    the linear S-Part roofline (t_of_b at batch ``tokens`` — prefill is
+    a wide batch of one-token columns) plus the quadratic causal-
+    attention FLOPs (~n²/2 cached-token visits per layer)."""
+    if tokens <= 0:
+        return 0.0
+    lin = 2.0 * cfg.num_layers * t_of_b(cfg, hw_s, int(tokens),
+                                        bytes_per_el)
+    attn = (cfg.num_layers * r_part_flops_per_cached_token(cfg)
+            * float(tokens) * tokens / 2.0) / hw_s.flops
+    return lin + attn
+
+
+def kv_restore_break_even(cfg: ModelConfig, hw_s: Hardware,
+                          tier_gbps: float, bytes_per_el: int = 2,
+                          page: int = 0,
+                          max_tokens: int = 1 << 20) -> float:
+    """Smallest prefix length at which restoring from the tier is no
+    slower than recomputing it — ``inf`` when the tier cannot win below
+    ``max_tokens`` (e.g. zero bandwidth).  Monotone: restore is linear
+    in length while recompute grows quadratically, so once the tier
+    wins it keeps winning for every longer prefix."""
+    if tier_gbps <= 0:
+        return math.inf
+    lo, hi = 1, 1
+    while kv_restore_time(cfg, hi, tier_gbps, bytes_per_el, page) \
+            > kv_recompute_time(cfg, hw_s, hi, bytes_per_el):
+        lo, hi = hi, hi * 2
+        if hi > max_tokens:
+            return math.inf
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if kv_restore_time(cfg, mid, tier_gbps, bytes_per_el, page) \
+                <= kv_recompute_time(cfg, hw_s, mid, bytes_per_el):
+            hi = mid
+        else:
+            lo = mid + 1
+    return float(hi)
+
+
+# ---------------------------------------------------------------------------
 # 𝕋(𝓑), R, 𝔼(𝓑)  (analytic roofline forms)
 # ---------------------------------------------------------------------------
 def t_of_b(cfg: ModelConfig, hw: Hardware, b: int,
@@ -209,7 +271,7 @@ def optimal_workers(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware,
 def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
          latency_slo: Optional[float] = None, worker_mem: float = 256e9,
          page: int = 0, prefix_hit_rate: float = 0.0,
-         prefix_len: int = 0) -> Dict[str, float]:
+         prefix_len: int = 0, tier_gbps: float = 0.0) -> Dict[str, float]:
     """Full §4.3 planning pass -> {batch, workers, workers_mem_min, ...}.
 
     ``page > 0`` plans for paged R-worker KV: R gains the amortized
@@ -224,6 +286,13 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
     as ``w_lim_scale`` — the factor by which Algorithm 1's peak bound
     can be relaxed (shared tokens are resident once, not per row), so
     the load controller admits proportionally larger batches.
+
+    ``tier_gbps > 0`` plans for KV lifecycle tiering: the plan gains
+    the swap-vs-recompute terms (``kv_restore_s`` / ``kv_recompute_s``
+    at the expected prefix length, and ``kv_restore_break_even`` — the
+    shortest prefix worth restoring instead of re-prefilling) that the
+    serving engine's restore gating and the LoadController's
+    prefix-hit shift consult.
     """
     if latency_slo is not None:
         b = max_batch_for_slo(cfg, hw_s, seq_len, latency_slo)
@@ -253,6 +322,13 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
         out["r_paged"] = r_per_token(cfg, hw_r, page=page)
         out["paged_round_up"] = paged_round_up_factor(max(1, seq_len // 2),
                                                       page)
+    if tier_gbps > 0:
+        n = prefix_len if prefix_len > 0 else max(1, seq_len // 2)
+        out["kv_restore_s"] = kv_restore_time(cfg, n, tier_gbps,
+                                              page=page)
+        out["kv_recompute_s"] = kv_recompute_time(cfg, hw_s, n)
+        out["kv_restore_break_even"] = kv_restore_break_even(
+            cfg, hw_s, tier_gbps, page=page)
     return out
 
 

@@ -159,7 +159,8 @@ class FleetManager:
             self.step, "migration", moved_rows=moved, skew=skew,
             slices=list(self.engine.slices),
             unshared_pages=shared_before - self._shared_pages(),
-            duration_s=time.perf_counter() - t0)
+            duration_s=time.perf_counter() - t0,
+            **self._tier_detail())
         return moved
 
     def _shared_pages(self) -> int:
@@ -167,6 +168,16 @@ class FleetManager:
         if eng is None or not getattr(eng, "prefix_cache", False):
             return 0
         return int(eng.prefix_cache_stats().get("shared_pages", 0))
+
+    def _tier_detail(self) -> Dict[str, int]:
+        """Host-tier occupancy to attach to topology events — migrations
+        and recoveries are exactly when parked/swapped KV either rides
+        the tier transport or gets flushed to it."""
+        tier = getattr(self.engine, "kv_tier", None)
+        if tier is None:
+            return {}
+        return {"swapped_pages": tier.swapped_pages(),
+                "host_tier_bytes": tier.nbytes()}
 
     def snapshot_now(self) -> None:
         self.snapshots.snapshot(self.engine, self.step)
@@ -208,6 +219,7 @@ class FleetManager:
         self.telemetry.record_event(
             self.step, "recovery", mode=mode, rows=len(rows),
             replayed=replayed, snapshot_step=self.snapshots.step,
-            duration_s=time.perf_counter() - t0)
+            duration_s=time.perf_counter() - t0,
+            **self._tier_detail())
         if on_topology is not None:
             on_topology(self.weight_fraction())

@@ -87,6 +87,16 @@ class KVSnapshotStore:
                 data[lk] = jax.tree.map(
                     lambda *xs: np.concatenate(xs, axis=0), *parts)
         self.data, self.step = data, step
+        # parked pages ride the tier transport instead of the wire
+        # snapshot (they belong to no row): copy them to the host tier
+        # so a worker that later dies abruptly still leaves its parked
+        # prefix chains restorable — non-destructive, the pages stay
+        # device-resident, and a later real swap-out of the same
+        # digests is deduplicated by the tier
+        if getattr(engine, "kv_tier", None) is not None:
+            for w in engine.workers:
+                for alloc in w.allocators.values():
+                    alloc.flush_parked_to_tier()
 
     def payload(self) -> Dict[int, Any]:
         if self.data is None:

@@ -172,10 +172,29 @@ class ServingEngine:
                  fleet=None, schedule: str = "ooo",
                  collect_timeout_s: float = 600.0,
                  profile_timing: bool = False, prefill_chunk: int = 0,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, kv_tiering=None,
+                 preempt_after: int = 0):
         if backend not in ("colocated", "hetero"):
             raise ValueError(
                 f"backend must be 'colocated' or 'hetero', got {backend!r}")
+        # KV lifecycle tiering: True (default TierConfig), a TierConfig,
+        # or a ready HostTier (share one across engines in tests).
+        # Implies prefix_cache — the tier is keyed by its digest chains.
+        self.kv_tier = None
+        if kv_tiering:
+            from repro.serving.paged_cache import HostTier, TierConfig
+            if backend != "hetero" or not paged_kv:
+                raise ValueError(
+                    "kv_tiering requires backend='hetero' with "
+                    "paged_kv=True — the tier swaps paged R-worker pool "
+                    "pages")
+            if isinstance(kv_tiering, HostTier):
+                self.kv_tier = kv_tiering
+            elif isinstance(kv_tiering, TierConfig):
+                self.kv_tier = HostTier(kv_tiering)
+            else:
+                self.kv_tier = HostTier()
+            prefix_cache = True
         if prefix_cache:
             from repro.core.config import ATTN as _ATTN
             if backend != "hetero" or not paged_kv:
@@ -229,6 +248,17 @@ class ServingEngine:
         self._uses_chunks = bool(prefill_chunk) or self.prefix_cache
         self.prefix_stats = {"hits": 0, "misses": 0, "cached_tokens": 0,
                              "prompt_tokens": 0}
+        # auto-preemption: after this many consecutive steps in which
+        # the paged admission cap blocked a queued request despite free
+        # slots, the least-finished RUNNING row is parked and requeued
+        # (0 disables); swap-vs-recompute gating: restores are consulted
+        # only when the tier's stream bandwidth makes them worthwhile
+        # (see core.perfmodel.kv_restore_break_even)
+        self.preempt_after = int(preempt_after)
+        self._stall_steps = 0
+        self.preemptions = 0
+        self._restore_ok = (self.kv_tier is not None
+                            and self.kv_tier.cfg.dram_gbps > 0)
         self.admission = admission
         self.target_len = target_len            # S in the paper's schedule
         self.interval = interval                # F
@@ -249,6 +279,7 @@ class ServingEngine:
                 quantized_kv=quantized_kv, paged_kv=paged_kv,
                 page_size=page_size, pages_per_worker=pages_per_worker,
                 prefix_cache=self.prefix_cache,
+                kv_tier=self.kv_tier,
                 fleet=fleet, schedule=schedule,
                 collect_timeout_s=collect_timeout_s,
                 profile_timing=profile_timing)
@@ -501,18 +532,88 @@ class ServingEngine:
                 top_k=r.top_k, top_p=r.top_p))[0])
         return toks
 
+    # -- park / retire / preempt ------------------------------------------ #
+    def _retire_row(self, row: int, req: Request) -> None:
+        """A finished sequence's pages: with tiering, PARK the written
+        chain (prompt + generated minus the never-appended last token)
+        so a later same-history request restores it without re-prefill;
+        otherwise free them as before."""
+        if not self.paged_kv:
+            return
+        if self.kv_tier is not None:
+            chain = req.feed_tokens[:-1] if req.generated \
+                else req.feed_tokens
+            if self.engine.park_row(row, chain):
+                return
+        self.engine.release_row(row)
+
+    def _preempt_row(self, row: int) -> None:
+        """Evict a resident request back to the queue (admission
+        pressure): its written KV chain is parked (tiering) or dropped
+        (the dense/colocated path replays it at readmission), the slot
+        freed, and the request requeued at the BACK with its generated
+        tokens kept — resume re-prefills ``feed_tokens`` and continues
+        generating token-exactly (greedy sampling is a pure function of
+        the token history)."""
+        r = self.slots[row]
+        if r is None:
+            return
+        if self.paged_kv:
+            if r.status is Status.PREFILLING:
+                chain = r.feed_tokens[:r.prefill_pos]
+            else:
+                chain = r.feed_tokens[:-1] if r.generated \
+                    else r.feed_tokens
+            if not (self.kv_tier is not None and len(chain)
+                    and self.engine.park_row(row, chain)):
+                self.engine.release_row(row)
+        self.slots[row] = None
+        if self._uses_chunks:
+            self.engine.set_row_active(row, False)
+        r.status = Status.QUEUED
+        r.slot = -1
+        r.prefill_pos = 0
+        self.preemptions += 1
+        self.queue.append(r)
+
+    def preempt(self, rid: int) -> bool:
+        """Preempt the resident request with id ``rid`` (False if it is
+        not currently slot-resident).  Call between steps."""
+        for row, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                self._preempt_row(row)
+                return True
+        return False
+
+    def _auto_preempt(self) -> None:
+        """Admission has been page-blocked for ``preempt_after``
+        consecutive steps: park the least-finished RUNNING row (most
+        generation budget left — it holds its pages longest) to relieve
+        the pressure."""
+        best, best_rem = -1, -1
+        for row, r in enumerate(self.slots):
+            if r is None or r.status is not Status.RUNNING:
+                continue
+            rem = r.max_new_tokens - len(r.generated)
+            if rem > best_rem:
+                best, best_rem = row, rem
+        if best >= 0:
+            self._preempt_row(best)
+
     # -- shared-prefix probing ------------------------------------------- #
     def _probe_prefix(self, row: int, req: Request):
         """(page_ids, cached_eff) for ``req`` landing on ``row`` —
-        clamped so at least the prompt's LAST token is always
+        clamped so at least the feed's LAST token is always
         recomputed: its logits seed generation (the same rule as the
         monolithic prefill), and recomputing it through the chunk path
         is what forces the shared partial tail page onto a private CoW
-        clone before this sequence writes into it."""
+        clone before this sequence writes into it.  With tiering the
+        probe also restores swapped-out pages from the host tier."""
         if not self.prefix_cache:
             return [], 0
-        ids, cached = self.engine.probe_prefix(row, req.prompt)
-        eff = min(int(cached), req.prompt_len - 1)
+        ids, cached = self.engine.probe_prefix(row, req.feed_tokens,
+                                               restore=self._restore_ok)
+        eff = min(int(cached), req.feed_len - 1)
         if eff <= 0:
             return [], 0
         return ids[:-(-eff // self.engine.page_size)], eff
@@ -521,7 +622,7 @@ class ServingEngine:
         st = self.prefix_stats
         st["hits" if eff else "misses"] += 1
         st["cached_tokens"] += eff
-        st["prompt_tokens"] += req.prompt_len
+        st["prompt_tokens"] += req.feed_len
 
     def _choose_rows(self, reqs: List[Request]):
         """Prefix-AWARE row assignment: a cached prefix is only
@@ -568,9 +669,9 @@ class ServingEngine:
             if r is None:
                 continue
             n = (r.prefill_pos if r.status is Status.PREFILLING
-                 else r.prompt_len)
-            if n > 0:
-                self.engine.register_prefix(row, r.prompt[:n])
+                 else r.feed_len - 1)     # written chain (last token
+            if n > 0:                     # sampled, never appended)
+                self.engine.register_prefix(row, r.feed_tokens[:n])
 
     def _place(self, reqs: List[Request]) -> None:
         if self.prefill_chunk:
@@ -600,14 +701,16 @@ class ServingEngine:
 
     def _place_monolithic(self, reqs: List[Request],
                           rows: List[int]) -> None:
-        max_p = max(r.prompt_len for r in reqs)
+        max_p = max(r.feed_len for r in reqs)
         n_pad = _pad_pow2(len(reqs))
         s_pad = _pad_pow2(max_p, 8)
         toks = np.zeros((n_pad, s_pad), np.int32)
         plens = np.zeros((n_pad,), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, :r.prompt_len] = r.prompt
-            plens[i] = r.prompt_len
+            # feed_tokens == prompt for fresh requests; a preempted
+            # request resumes by prefilling its whole history
+            toks[i, :r.feed_len] = r.feed_tokens
+            plens[i] = r.feed_len
         last_logits, sub = self._prefill_fn(n_pad)(
             self.params, tokens=jnp.asarray(toks),
             prompt_lens=jnp.asarray(plens))
@@ -635,8 +738,7 @@ class ServingEngine:
                 r.finish_step = self.step_idx
                 self.finished.append(r)
                 self.slots[rows[i]] = None
-                if self.paged_kv:
-                    self.engine.release_row(rows[i])
+                self._retire_row(rows[i], r)
                 if self._uses_chunks:
                     self.engine.set_row_active(rows[i], False)
             else:
@@ -651,7 +753,7 @@ class ServingEngine:
         if self.prefix_cache:
             for row, r in zip(rows, reqs):
                 if self.slots[row] is not None:
-                    self.engine.register_prefix(row, r.prompt)
+                    self.engine.register_prefix(row, r.feed_tokens)
 
     def _hetero_scatter(self, rows: np.ndarray, sub, sub_rows: np.ndarray):
         eng = self.engine
@@ -730,15 +832,15 @@ class ServingEngine:
                 per_mb.setdefault(row // self.mb_size, []).append(row)
         for mb, rows in per_mb.items():
             c = self.prefill_chunk or _pad_pow2(
-                max(self.slots[row].prompt_len - self.slots[row].prefill_pos
+                max(self.slots[row].feed_len - self.slots[row].prefill_pos
                     for row in rows), 8)
             toks = np.zeros((len(rows), c), np.int32)
             bases, counts, locs = [], [], []
             for i, row in enumerate(rows):
                 r = self.slots[row]
                 base = r.prefill_pos
-                cnt = min(c, r.prompt_len - base)
-                toks[i, :cnt] = r.prompt[base:base + cnt]
+                cnt = min(c, r.feed_len - base)
+                toks[i, :cnt] = r.feed_tokens[base:base + cnt]
                 locs.append(row % self.mb_size)
                 bases.append(base)
                 counts.append(cnt)
@@ -757,7 +859,7 @@ class ServingEngine:
                 if r is None or r.status is not Status.PREFILLING:
                     continue          # finished/replaced under our feet
                 r.prefill_pos = int(wk.new_lens[i])
-                if r.prefill_pos < r.prompt_len:
+                if r.prefill_pos < r.feed_len:
                     continue
                 # the chunk's last-token logits ARE the first generation
                 # step (same rule as the monolithic _place)
@@ -771,7 +873,7 @@ class ServingEngine:
                         rr = self.slots[base + int(loc)]
                         if rr is not None \
                                 and rr.status is Status.PREFILLING \
-                                and int(wk.new_lens[j]) >= rr.prompt_len:
+                                and int(wk.new_lens[j]) >= rr.feed_len:
                             elig[int(loc)] = rr
                     sampled = self._sample_tokens(logits, elig)
                 tok0 = int(sampled[int(local)])
@@ -783,14 +885,16 @@ class ServingEngine:
                     r.finish_step = self.step_idx
                     self.finished.append(r)
                     self.slots[row] = None
-                    if self.paged_kv:
-                        self.engine.release_row(row)
+                    self._retire_row(row, r)
                 else:
                     self.engine.set_row_active(row, True)
                     if self.prefix_cache:
-                        # the prompt's pages are complete now — index
-                        # them so later admissions can share
-                        self.engine.register_prefix(row, r.prompt)
+                        # the written chain's pages are complete now —
+                        # index them so later admissions can share
+                        # (token 0 was just appended but never written
+                        # to KV, hence the [:-1])
+                        self.engine.register_prefix(
+                            row, r.feed_tokens[:-1])
 
     # ------------------------------------------------------------------ #
     def _replay_rows(self, rows) -> int:
@@ -810,18 +914,17 @@ class ServingEngine:
         if not live or self.backend != "hetero":
             return 0
         lens = [req.prefill_pos if req.status is Status.PREFILLING
-                else req.prompt_len + len(req.generated) - 1
+                else req.feed_len - 1
                 for _, req in live]
         n_pad = _pad_pow2(len(live))
         s_pad = _pad_pow2(max(lens), 8)
         toks = np.zeros((n_pad, s_pad), np.int32)
         plens = np.zeros((n_pad,), np.int32)
         for i, ((row, req), ln) in enumerate(zip(live, lens)):
-            if req.status is Status.PREFILLING:
-                toks[i, :ln] = req.prompt[:ln]
-            else:
-                toks[i, :req.prompt_len] = req.prompt
-                toks[i, req.prompt_len:ln] = req.generated[:-1]
+            # the written chain: feed minus the last sampled token (it
+            # sits in _last_tok, not yet appended to any KV); a chunked
+            # prefill in flight replays exactly its streamed prefix
+            toks[i, :ln] = req.feed_tokens[:ln]
             plens[i] = ln
         _, sub = self._prefill_fn(n_pad)(self.params,
                                          tokens=jnp.asarray(toks),
@@ -856,6 +959,18 @@ class ServingEngine:
         admitted = 0
         t0 = pc()
         n = self._admit_count()
+        if self.preempt_after and self.paged_kv:
+            # admission pressure: queued work, free slots, but the page
+            # budget said no — after preempt_after such steps, park the
+            # least-finished row so its pages (tier-restorable) make
+            # room; the victim requeues and resumes token-exactly
+            if n == 0 and self.queue and self._free_slots():
+                self._stall_steps += 1
+                if self._stall_steps >= self.preempt_after:
+                    self._auto_preempt()
+                    self._stall_steps = 0
+            else:
+                self._stall_steps = 0
         if n > 0:
             reqs = [self.queue.popleft() for _ in range(n)]
             self._place(reqs)
@@ -897,8 +1012,7 @@ class ServingEngine:
                 r.finish_step = self.step_idx
                 self.finished.append(r)
                 self.slots[i] = None
-                if self.paged_kv:
-                    self.engine.release_row(i)
+                self._retire_row(i, r)
                 if self._uses_chunks:
                     # freed slots stop decoding entirely (no KV append,
                     # no length bump) until readmission re-prefills them
@@ -941,6 +1055,18 @@ class ServingEngine:
             out.update(self.engine.prefix_cache_stats())
         denom = max(1, out.get("prompt_tokens", 0))
         out["token_hit_rate"] = out.get("cached_tokens", 0) / denom
+        return out
+
+    def tiering_stats(self) -> Dict[str, float]:
+        """Host-tier traffic counters (swap-outs, restores, simulated
+        stream seconds) plus engine-side preemptions; empty when
+        tiering is off."""
+        if self.kv_tier is None:
+            return {}
+        out: Dict[str, float] = dict(self.kv_tier.stats)
+        out["swapped_pages"] = self.kv_tier.swapped_pages()
+        out["host_bytes"] = self.kv_tier.nbytes()
+        out["preemptions"] = self.preemptions
         return out
 
     def run(self, max_steps: int = 10_000) -> List[Request]:

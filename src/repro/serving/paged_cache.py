@@ -68,13 +68,41 @@ allocator with per-page REFERENCE COUNTS and copy-on-write:
     to page ids.  Pages whose refcount drops to zero while indexed are
     not freed immediately — they park in an LRU and are evicted (index
     entries dropped, page reused) only when the free list runs dry.
+
+KV lifecycle tiering (DéjàVu-style, ``tier=HostTier(...)``) adds a host
+memory hierarchy behind the device pool, so a page can be NON-RESIDENT:
+
+  * page states partition the device pool:  ``free`` + ``cached``
+    (refcount-0 LRU, droppable) + ``parked`` (refcount-0 KV of a
+    finished/preempted sequence, deliberately retained) + ``used``
+    (refcount > 0) == num_pages.  A fifth state, ``swapped``, lives
+    only in the :class:`HostTier`: the page's bytes were streamed to
+    host DRAM/disk and its device page was reused.
+  * ``park_row`` (park-on-finish/preempt) indexes the row's WRITTEN
+    token chain and moves its pages to the parked set instead of
+    freeing them — zero-copy; the KV stays device-resident and
+    probe-able.
+  * the eviction ladder in ``_take_page`` orders reclaim by what it
+    destroys: free list (nothing) → cached LRU (drops index entries,
+    KV lost) → swap out the oldest parked page (bytes preserved in the
+    host tier, keyed by every digest of its hash chain).  Eviction
+    never selects a refcount > 0 resident page.
+  * ``probe_prefix`` restores on demand: a chain walk that misses the
+    index consults the tier; a hit allocates a device page, queues a
+    (entry, page) restore the engine applies to every layer's pool
+    (:func:`restore_pool_pages` — bit-exact, int8 payloads verbatim),
+    and re-indexes the digests so the walk continues through
+    descendants.  The :class:`HostTier` is ENGINE-global and content-
+    addressed, so parked sequences survive fleet topology changes and
+    restore into whichever (worker, micro-batch) pool probes them.
 """
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -294,6 +322,141 @@ class PrefixIndex:
         self.lru.pop(page_id, None)
 
 
+# ---------------------------------------------------------------------------
+# KV lifecycle tiering: the host-side memory hierarchy behind the pools
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TierConfig:
+    """Simulated-bandwidth host tiers.  ``dram_pages`` bounds the DRAM
+    tier; entries past it spill (LRU) to the disk tier — same payload
+    store, different accounted bandwidth.  0 = unbounded DRAM."""
+    dram_gbps: float = 25.0      # device <-> host DRAM stream bandwidth
+    disk_gbps: float = 2.0       # DRAM <-> disk spill bandwidth
+    dram_pages: int = 0
+
+
+@dataclass
+class TierEntry:
+    """One swapped-out page: every digest that reached it in some hash
+    chain (aliases — e.g. a tail entry and the later full-block entry
+    of the same page), plus the per-layer page bytes captured from each
+    paged layer's pool at swap-out time."""
+    digests: set
+    payload: Dict[int, Dict[str, np.ndarray]]   # layer idx -> pool arrays
+    tier: str = "dram"
+    tokens: int = 0
+
+
+def _payload_nbytes(payload: Dict[int, Dict[str, np.ndarray]]) -> int:
+    return sum(a.nbytes for arrs in payload.values() for a in arrs.values())
+
+
+class HostTier:
+    """Content-addressed host store for swapped-out KV pages, shared by
+    EVERY (worker, micro-batch) allocator of one engine.
+
+    Keys are the same chained block digests the :class:`PrefixIndex`
+    uses, so the store is worker- and topology-independent: a page
+    parked on one pool restores into whatever pool probes its token
+    chain later (identical digest ⇒ identical tokens ⇒ identical KV,
+    the model being deterministic).  Bandwidths are SIMULATED — the
+    store accounts the seconds a real DRAM/disk stream would take
+    (``stats['sim_seconds']``) instead of sleeping.  Thread-safe:
+    R-worker threads swap out during decode growth while the engine
+    thread restores at admission."""
+
+    def __init__(self, cfg: Optional[TierConfig] = None):
+        self.cfg = cfg or TierConfig()
+        self.entries: "OrderedDict[bytes, TierEntry]" = OrderedDict()
+        self._lock = threading.RLock()
+        self.stats = {"swapped_out": 0, "restored": 0, "spilled": 0,
+                      "dropped": 0, "bytes_out": 0, "bytes_in": 0,
+                      "sim_seconds": 0.0}
+
+    def _account(self, nbytes: int, tier: str) -> None:
+        gbps = (self.cfg.disk_gbps if tier == "disk"
+                else self.cfg.dram_gbps)
+        self.stats["sim_seconds"] += nbytes / max(gbps * 1e9, 1.0)
+
+    def put(self, entry: TierEntry) -> None:
+        """Admit a swapped-out page.  First content wins per digest (two
+        pools can park the same chain; identical digests carry identical
+        bytes, so dropping the duplicate loses nothing).  A full DRAM
+        tier spills its LRU entries to disk — never drops payloads."""
+        with self._lock:
+            nbytes = _payload_nbytes(entry.payload)
+            self.stats["swapped_out"] += 1
+            self.stats["bytes_out"] += nbytes
+            self._account(nbytes, "dram")
+            fresh = [d for d in entry.digests if d not in self.entries]
+            if not fresh:
+                self.stats["dropped"] += 1
+                return
+            entry.digests = set(fresh)
+            for d in fresh:
+                self.entries[d] = entry
+            if self.cfg.dram_pages > 0:
+                dram = [e for e in self._unique_entries()
+                        if e.tier == "dram"]
+                for victim in dram[:max(0, len(dram)
+                                        - self.cfg.dram_pages)]:
+                    victim.tier = "disk"
+                    self.stats["spilled"] += 1
+                    self._account(_payload_nbytes(victim.payload), "disk")
+
+    def get(self, digest: bytes) -> Optional[TierEntry]:
+        with self._lock:
+            return self.entries.get(digest)
+
+    def pop(self, entry: TierEntry) -> TierEntry:
+        """Stream a page back: drop every alias digest and account the
+        restore at the entry's tier bandwidth."""
+        with self._lock:
+            for d in entry.digests:
+                self.entries.pop(d, None)
+            nbytes = _payload_nbytes(entry.payload)
+            self.stats["restored"] += 1
+            self.stats["bytes_in"] += nbytes
+            self._account(nbytes, entry.tier)
+            return entry
+
+    def _unique_entries(self) -> List[TierEntry]:
+        seen, out = set(), []
+        for e in self.entries.values():
+            if id(e) not in seen:
+                seen.add(id(e))
+                out.append(e)
+        return out
+
+    def swapped_pages(self) -> int:
+        with self._lock:
+            return len(self._unique_entries())
+
+    def nbytes(self) -> int:
+        """Host bytes the tier currently holds (all layers, all pages)."""
+        with self._lock:
+            return sum(_payload_nbytes(e.payload)
+                       for e in self._unique_entries())
+
+
+def restore_pool_pages(pool: Dict, restores: Sequence[Tuple[TierEntry, int]],
+                       layer_idx: int) -> Dict:
+    """Scatter restored host-tier page bytes back into one layer's pool:
+    for every (entry, dst page) pair, write ``entry.payload[layer_idx]``
+    verbatim (int8 pools restore quantized values and scales untouched —
+    bit-exact round trip)."""
+    restores = [(e, d) for e, d in restores if layer_idx in e.payload]
+    if not restores:
+        return pool
+    dst = jnp.asarray([d for _, d in restores], jnp.int32)
+    out = dict(pool)
+    for name in pool:
+        src = np.stack([e.payload[layer_idx][name] for e, _ in restores])
+        out[name] = pool[name].at[dst].set(
+            jnp.asarray(src, pool[name].dtype))
+    return out
+
+
 class PagedAllocator:
     """Host-side block-table allocator for one worker's rows of one
     micro-batch, shared across that worker's attention layers.  With
@@ -302,7 +465,8 @@ class PagedAllocator:
     (see the module docstring's shared-prefix section)."""
 
     def __init__(self, rows: int, num_pages: int, page: int,
-                 max_pages_per_seq: int, prefix_cache: bool = False):
+                 max_pages_per_seq: int, prefix_cache: bool = False,
+                 tier: Optional[HostTier] = None):
         self.rows, self.num_pages, self.page = rows, num_pages, page
         self.max_pages = max_pages_per_seq
         self.tables = np.full((rows, max_pages_per_seq), -1, np.int32)
@@ -316,20 +480,101 @@ class PagedAllocator:
         # one count per page = number of table slots mapping it; shared
         # prefix pages sit at > 1 and are immutable until CoW-cloned
         self.refcount = np.zeros((num_pages,), np.int32)
+        # tiering requires the digest index as its key space
+        self.tier = tier
         self.prefix: Optional[PrefixIndex] = (
-            PrefixIndex() if prefix_cache else None)
+            PrefixIndex() if prefix_cache or tier is not None else None)
+        # refcount-0 pages deliberately retained whole-sequence (park-on-
+        # finish), oldest first — swapped to the host tier under pressure
+        # instead of dropped like the cached LRU
+        self.parked: "OrderedDict[int, None]" = OrderedDict()
+        # reads one page's bytes from every paged layer's pool at swap-
+        # out time ({layer idx -> pool dict}); the owning worker installs
+        # it (RWorker._alloc) — None means swap-out degrades to drop
+        self.pool_reader: Optional[Callable[[], Dict[int, Dict]]] = None
         self._clones: List[Tuple[int, int]] = []   # (src, dst) this step
+        self._restores: List[Tuple[TierEntry, int]] = []
+        self._pinned: set = set()      # mid-probe chain pages (no evict)
         self._dev_tables: Optional[jnp.ndarray] = None   # upload cache
 
     # -- low level ---------------------------------------------------------
     def _take_page(self) -> int:
-        """A fresh page: free list first, then LRU-evict a refcount-zero
-        cached prefix page (its index entries are dropped with it)."""
+        """A fresh page, by the eviction ladder: free list (costs
+        nothing) → LRU-evict a refcount-zero cached prefix page (index
+        entries dropped, KV lost) → swap the oldest parked page's bytes
+        out to the host tier (KV preserved, restorable).  Pages pinned
+        by an in-flight probe walk are never selected; a refcount > 0
+        page is never reachable from any rung."""
         if self.free:
             return self.free.pop()
-        if self.prefix is not None and self.prefix.lru:
-            return self.prefix.evict_lru()
+        if self.prefix is not None:
+            for pid in self.prefix.lru:
+                if pid not in self._pinned:
+                    self.prefix.lru.move_to_end(pid, last=False)
+                    return self.prefix.evict_lru()
+            for pid in self.parked:
+                if pid not in self._pinned:
+                    return self._swap_out(pid)
         raise MemoryError("paged KV pool exhausted")
+
+    def _swap_out(self, pid: int) -> int:
+        """Move a parked page's bytes to the host tier (keyed by every
+        digest of its chain) and hand the device page back for reuse.
+        Without a pool reader (no pools written yet) or a tier the page
+        is simply dropped like a cached eviction."""
+        self.parked.pop(pid, None)
+        digests = set(self.prefix.page_digests.get(pid, ()))
+        pools = self.pool_reader() if self.pool_reader is not None else {}
+        if self.tier is not None and digests and pools:
+            payload = {li: {name: np.asarray(arr[pid])
+                            for name, arr in pool.items()}
+                       for li, pool in pools.items()}
+            self.tier.put(TierEntry(digests=digests, payload=payload,
+                                    tokens=self.page))
+        self.prefix.drop_page(pid)
+        return pid
+
+    def swap_out_all_parked(self) -> int:
+        """Flush every parked page to the host tier — the pre-migration
+        hook: a topology change drops this allocator (and its pools), so
+        device-resident parked KV must cross to the engine-global tier
+        to survive.  Returns pages swapped; they land on the free list
+        (the allocator is about to be dropped, but a non-dropped caller
+        stays coherent)."""
+        n = 0
+        for pid in list(self.parked):
+            self.free.append(self._swap_out(pid))
+            n += 1
+        return n
+
+    def flush_parked_to_tier(self) -> int:
+        """COPY every parked page's bytes to the host tier without
+        evicting it — the KV-snapshot transport: a worker that later
+        dies abruptly (no graceful swap-out) still leaves its parked
+        chains restorable.  Device state is untouched; a later real
+        swap-out of the same digests is deduplicated by the tier's
+        first-content-wins rule.  In-place tail rewrites cannot stale
+        the copy: a digest match implies the same tokens, and the
+        model is deterministic, so rewrites reproduce identical
+        bytes."""
+        if self.tier is None or self.pool_reader is None \
+                or not self.parked:
+            return 0
+        pools = self.pool_reader()
+        if not pools:
+            return 0
+        n = 0
+        for pid in self.parked:
+            digests = set(self.prefix.page_digests.get(pid, ()))
+            if not digests:
+                continue
+            payload = {li: {name: np.asarray(arr[pid])
+                            for name, arr in pool.items()}
+                       for li, pool in pools.items()}
+            self.tier.put(TierEntry(digests=digests, payload=payload,
+                                    tokens=self.page))
+            n += 1
+        return n
 
     def _ensure_row(self, row: int, new_len: int) -> bool:
         need = -(-new_len // self.page)
@@ -414,6 +659,7 @@ class PagedAllocator:
             self.tables[row, slot] = pid
             if self.refcount[pid] == 0 and self.prefix is not None:
                 self.prefix.unpark(pid)   # cached -> referenced again
+                self.parked.pop(pid, None)   # parked -> referenced again
             self.refcount[pid] += 1
         self.active[row] = True
         self.lengths[row] = length
@@ -434,6 +680,48 @@ class PagedAllocator:
         self.active[row] = False
         self.frozen[row] = False
         self.lengths[row] = 0
+
+    def park_row(self, row: int, tokens) -> bool:
+        """Park-on-finish / park-on-preempt: index ``row``'s WRITTEN
+        chain (``tokens``) and keep every refcount-zero page of it
+        whole-sequence parked — swappable to the host tier under
+        pressure instead of LRU-dropped, so a later request with the
+        same history restores without re-prefill.
+
+        Frozen or capacity-clamped rows (some positions were never
+        written) fall back to a plain :meth:`release`; so does a
+        tier-less allocator, where parking degrades to the PR-5
+        register-then-cache behavior.  Returns True when the row's
+        chain was actually indexed."""
+        tokens = np.asarray(tokens, np.int32)
+        eligible = (self.prefix is not None and self.active[row]
+                    and not self.frozen[row]
+                    and int(self.lengths[row]) == len(tokens)
+                    and self.mapped_pages(row) * self.page
+                    >= int(self.lengths[row]))
+        if eligible:
+            self.register_prefix(row, tokens)
+        if not eligible or self.tier is None:
+            self.release(row)
+            return eligible
+        ids = [int(i) for i in self.tables[row][self.tables[row] >= 0]]
+        if ids:
+            self._dev_tables = None
+        for pid in ids:
+            self.refcount[pid] -= 1
+            if self.refcount[pid] > 0:
+                continue              # another sequence still maps it
+            if self.prefix.is_cached(pid):
+                self.prefix.unpark(pid)      # parked, not cached-LRU
+                self.parked[pid] = None
+                self.parked.move_to_end(pid)
+            else:
+                self.free.append(pid)   # digest lost to a first writer
+        self.tables[row] = -1
+        self.active[row] = False
+        self.frozen[row] = False
+        self.lengths[row] = 0
+        return True
 
     def ensure_lengths(self, new_lengths: np.ndarray,
                        mask: Optional[np.ndarray] = None) -> bool:
@@ -533,37 +821,90 @@ class PagedAllocator:
                 added += 1
         return added
 
-    def probe_prefix(self, tokens) -> Tuple[List[int], int]:
+    def probe_prefix(self, tokens,
+                     restore: bool = False) -> Tuple[List[int], int]:
         """Longest cached prefix of ``tokens``: walk the hash chain block
         by block, stopping at the first miss (entries orphaned by an
         evicted ancestor are unreachable by construction).  A tail entry
         matches only when the remaining tokens are exactly the
-        registered partial page.  Returns (page_ids, cached_tokens)."""
+        registered partial page.  Returns (page_ids, cached_tokens).
+
+        With ``restore=True`` (and a host tier attached) an index miss
+        consults the tier: a hit streams the page back — a device page
+        is allocated, the entry's digests re-indexed onto it, and the
+        (entry, page) pair queued for the owner to apply to its layer
+        pools via :meth:`take_restores` before anything reads the page.
+        Pages touched by the walk are pinned against the eviction
+        ladder until that drain, so restoring one block cannot swap out
+        another block of the same chain mid-probe."""
         if self.prefix is None:
             return [], 0
         tokens = np.asarray(tokens, np.int32)
         page = self.page
         ids: List[int] = []
         digest = b""
+        restore = restore and self.tier is not None
+        if restore:
+            self._pinned = set()
         n_full = len(tokens) // page
         for i in range(n_full):
             d = _block_digest(digest, tokens[i * page:(i + 1) * page])
             pid = self.prefix.get(d)
+            if pid is None and restore:
+                pid = self._tier_restore(d)
             if pid is None:
+                self._unpin_if_idle()
                 self._touch(ids)
                 return ids, len(ids) * page
             ids.append(pid)
+            if restore:
+                self._pinned.add(pid)
             digest = d
         tail = len(tokens) - n_full * page
         if tail:
             d = _block_digest(digest, tokens[n_full * page:], tail=True)
             pid = self.prefix.get(d)
+            if pid is None and restore:
+                pid = self._tier_restore(d)
             if pid is not None:
                 ids.append(pid)
+                self._unpin_if_idle()
                 self._touch(ids)
                 return ids, int(len(tokens))
+        self._unpin_if_idle()
         self._touch(ids)
         return ids, len(ids) * page
+
+    def _tier_restore(self, digest: bytes) -> Optional[int]:
+        """Stream one block back from the host tier, if present and a
+        device page can be had without disturbing the pinned chain."""
+        entry = self.tier.get(digest)
+        if entry is None:
+            return None
+        try:
+            pid = self._take_page()
+        except MemoryError:
+            return None
+        entry = self.tier.pop(entry)
+        for d in entry.digests:
+            self.prefix.put(d, pid)
+        self.parked[pid] = None
+        self.parked.move_to_end(pid)
+        self._pinned.add(pid)
+        self._restores.append((entry, pid))
+        return pid
+
+    def take_restores(self) -> List[Tuple[TierEntry, int]]:
+        """Drain pending (entry, page) restores — the owner applies them
+        to every layer pool (``restore_pool_pages``) BEFORE the next
+        step reads or the ladder could recycle them; draining unpins."""
+        out, self._restores = self._restores, []
+        self._pinned = set()
+        return out
+
+    def _unpin_if_idle(self) -> None:
+        if not self._restores:
+            self._pinned = set()
 
     def _touch(self, ids: List[int]) -> None:
         if self.prefix is not None:
@@ -574,20 +915,27 @@ class PagedAllocator:
     def used_pages(self) -> int:
         """Pages referenced by at least one table slot.  Refcount-zero
         cached prefix pages (parked in the index LRU) are neither used
-        nor free — see :meth:`cached_pages`."""
-        return self.num_pages - len(self.free) - self.cached_pages()
+        nor free — see :meth:`cached_pages` / :meth:`parked_pages`."""
+        return (self.num_pages - len(self.free) - self.cached_pages()
+                - self.parked_pages())
 
     def cached_pages(self) -> int:
         """Refcount-zero pages kept only for the prefix index (LRU-
         evictable on demand)."""
         return len(self.prefix.lru) if self.prefix is not None else 0
 
+    def parked_pages(self) -> int:
+        """Refcount-zero whole-sequence pages held for park/restore —
+        swapped to the host tier (not dropped) under pressure."""
+        return len(self.parked)
+
     def free_pages(self) -> int:
         return len(self.free)
 
     def available_pages(self) -> int:
-        """Pages allocatable right now: free plus LRU-evictable cached."""
-        return len(self.free) + self.cached_pages()
+        """Pages allocatable right now: free, LRU-evictable cached, and
+        parked (swappable to the host tier on demand)."""
+        return len(self.free) + self.cached_pages() + self.parked_pages()
 
     def mapped_pages(self, row: int) -> int:
         return int((self.tables[row] >= 0).sum())

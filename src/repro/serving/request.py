@@ -45,6 +45,23 @@ class Request:
     def target_len(self) -> int:
         return self.prompt_len + self.max_new_tokens
 
+    @property
+    def feed_tokens(self) -> np.ndarray:
+        """The token history a (re-)prefill must feed: the prompt plus
+        everything generated so far.  Identical to ``prompt`` for a
+        fresh request; a PREEMPTED request resumes by prefilling this
+        whole feed — its last position's logits predict the next new
+        token, exactly as the prompt's last token seeds generation on
+        first admission."""
+        if not self.generated:
+            return np.asarray(self.prompt, np.int32)
+        return np.concatenate([np.asarray(self.prompt, np.int32),
+                               np.asarray(self.generated, np.int32)])
+
+    @property
+    def feed_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
     def is_finished(self, last_token: int) -> bool:
         if is_stop_token(last_token, self.eos_token,
                          self.stop_tokens or ()):

@@ -51,11 +51,16 @@ def random_spec(rng, cfg, n, p_lo=3, p_hi=15, max_new=5, spread=10):
 
 
 def serve_trace(params, cfg, spec, batch=4, cache_len=48, max_steps=400,
-                **kw):
+                preempt_at=None, **kw):
     """Serve (prompt, max_new, arrive_step) specs on a ServingEngine
     built with ``kw``; returns {rid: generated tokens}.  The canonical
     equivalence probe: every backend/storage/schedule combination must
-    produce the same dict as the colocated oracle."""
+    produce the same dict as the colocated oracle.
+
+    ``preempt_at`` ({step: [rids]}, optional) force-preempts running
+    requests right before the given step — the park/restore dimension:
+    a preempted request must still finish with the oracle's tokens.
+    The targeted requests must actually be running (asserted)."""
     from repro.serving.engine import ServingEngine
     from repro.serving.request import Request
     eng = ServingEngine(params, cfg, batch=batch, cache_len=cache_len,
@@ -71,6 +76,9 @@ def serve_trace(params, cfg, spec, batch=4, cache_len=48, max_steps=400,
                 eng.submit(Request(rid=i, prompt=spec[i][0],
                                    max_new_tokens=spec[i][1]))
                 qi += 1
+            if preempt_at:
+                for rid in preempt_at.get(eng.step_idx, ()):
+                    assert eng.preempt(rid), (eng.step_idx, rid)
             eng.step()
         return {r.rid: list(r.generated) for r in eng.finished}
     finally:

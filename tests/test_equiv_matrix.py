@@ -70,6 +70,50 @@ def prefix_setup():
     return cfg, params, spec, oracle
 
 
+# ---------------------------------------------------------------------------
+# the park/restore dimension: leaving residency must be invisible too
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def park_setup():
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(21)
+    # rid 0 is the victim: long generation so it is provably mid-flight
+    # at the preemption step on every backend/schedule combination
+    spec = [
+        (rng.integers(1, cfg.vocab_size, 9).astype(np.int32), 10, 0),
+        (rng.integers(1, cfg.vocab_size, 6).astype(np.int32), 5, 1),
+        (rng.integers(1, cfg.vocab_size, 12).astype(np.int32), 6, 2),
+        (rng.integers(1, cfg.vocab_size, 5).astype(np.int32), 4, 4),
+    ]
+    oracle = serve_trace(params, cfg, spec, backend="colocated")
+    assert len(oracle) == len(spec)
+    return cfg, params, spec, oracle
+
+
+PARK_MATRIX = [(s, sched) for s in ("dense", "paged", "int8")
+               for sched in ("ooo", "fifo")]
+PARK_MATRIX += [("paged-int8", "ooo")]
+
+
+@pytest.mark.parametrize("storage,schedule", PARK_MATRIX)
+def test_parked_and_restored_matches_uninterrupted(park_setup, storage,
+                                                   schedule):
+    """A request preempted mid-conversation and later resumed must emit
+    the exact tokens of one that never left residency.  On paged
+    storage with tiering the victim's KV is parked (and restorable via
+    the tier) and readmission adopts it back; dense/int8 fall back to
+    drop-and-replay — both paths must be token-invisible."""
+    cfg, params, spec, oracle = park_setup
+    kw = dict(STORAGE_KW[storage])
+    if kw.get("paged_kv"):
+        kw["kv_tiering"] = True
+    got = serve_trace(params, cfg, spec, backend="hetero",
+                      num_r_workers=2, schedule=schedule,
+                      preempt_at={3: [0]}, **kw)
+    assert got == oracle
+
+
 @pytest.mark.parametrize("storage", ["paged", "paged-int8"])
 @pytest.mark.parametrize("prefill", ["mono", "chunk"])
 def test_shared_prefix_decodes_like_independent(prefix_setup, storage,

@@ -329,6 +329,128 @@ def test_recost_admission_shrinks_w_lim_after_failure(rng, key):
 
 
 # ---------------------------------------------------------------------------
+# tiering under faults: swapped-out KV must survive worker death and
+# migrations — a restored conversation generates the oracle's tokens
+# ---------------------------------------------------------------------------
+def _two_round_workload(cfg, n=4, seed=11):
+    """Multi-turn fixture: round-1 prompts plus per-conversation extra
+    turns; round 2's prompt is round 1's full history + the extra."""
+    from repro.serving.request import Request
+    r = np.random.default_rng(seed)
+    prompts = [np.asarray(r.integers(1, cfg.vocab_size,
+                                     (int(r.integers(4, 9)),)), np.int32)
+               for _ in range(n)]
+    extras = [np.asarray(r.integers(1, cfg.vocab_size, (3,)), np.int32)
+              for _ in range(n)]
+
+    def round1():
+        return [Request(rid=i, prompt=prompts[i], max_new_tokens=5)
+                for i in range(n)]
+
+    def round2(hist):
+        return [Request(rid=100 + i,
+                        prompt=np.concatenate([hist[i], extras[i]]),
+                        max_new_tokens=5) for i in range(n)]
+
+    return prompts, round1, round2
+
+
+def _serve(eng, reqs, max_steps=200):
+    for r in reqs:
+        eng.submit(r)
+    return {r.rid: list(map(int, r.generated))
+            for r in eng.run(max_steps=max_steps)}
+
+
+def test_worker_death_with_swapped_pages_restores_token_exact(rng, key):
+    """Kill an R-worker while every parked conversation sits in the
+    host tier: the tier is engine-global, so the survivor restores the
+    histories and round 2 generates exactly the colocated tokens —
+    no re-prefill of the shared turns, no loss from the dead pool."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    prompts, round1, round2 = _two_round_workload(cfg)
+
+    colo = ServingEngine(params, cfg, batch=4, cache_len=64)
+    want1 = _serve(colo, round1())
+    hist = [np.concatenate([prompts[i],
+                            np.asarray(want1[i], np.int32)])
+            for i in range(4)]
+    want2 = _serve(colo, round2(hist))
+    colo.close()
+
+    fleet = FleetManager(uniform_fleet(2), recovery="reprefill")
+    eng = ServingEngine(params, cfg, batch=4, cache_len=64,
+                        backend="hetero", num_microbatches=2, kv_chunk=64,
+                        paged_kv=True, page_size=4, kv_tiering=True,
+                        fleet=fleet)
+    try:
+        assert _serve(eng, round1()) == want1
+        # round-1 rows retired => parked; push them all out to the host
+        # tier, then crash a worker while its pages are swapped
+        for w in eng.engine.workers:
+            for alloc in w.allocators.values():
+                alloc.swap_out_all_parked()
+        assert eng.tiering_stats()["swapped_pages"] > 0
+        eng.engine.workers[1].kill()
+        deadline = time.time() + 5
+        while eng.engine.workers[1].is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        got2 = _serve(eng, round2(hist))
+        stats = eng.tiering_stats()
+    finally:
+        eng.close()
+    assert fleet.telemetry.summary()["recoveries"] == 1
+    assert len(eng.engine.workers) == 1
+    assert stats["restored"] > 0        # histories streamed back in
+    assert got2 == want2
+
+
+def test_restore_racing_migration_token_exact(rng, key):
+    """Admit round-2 requests (which stream their histories back from
+    the tier) and immediately migrate the fleet mid-flight: the dense
+    per-row wire format carries restored pages across the move, and
+    the finished tokens still match the colocated oracle."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = tiny_cfg("granite-3-8b")
+    params = M.init_params(key, cfg)
+    prompts, round1, round2 = _two_round_workload(cfg, seed=13)
+
+    colo = ServingEngine(params, cfg, batch=4, cache_len=64)
+    want1 = _serve(colo, round1())
+    hist = [np.concatenate([prompts[i],
+                            np.asarray(want1[i], np.int32)])
+            for i in range(4)]
+    want2 = _serve(colo, round2(hist))
+    colo.close()
+
+    eng = ServingEngine(params, cfg, batch=4, cache_len=64,
+                        backend="hetero", num_microbatches=2, kv_chunk=64,
+                        paged_kv=True, page_size=4, kv_tiering=True)
+    try:
+        assert _serve(eng, round1()) == want1
+        for w in eng.engine.workers:
+            for alloc in w.allocators.values():
+                alloc.swap_out_all_parked()
+        for r in round2(hist):
+            eng.submit(r)
+        eng.step()                       # admission restores from tier
+        assert eng.tiering_stats()["restored"] > 0
+        # migrate while the restored rows are mid-flight: worker 1's
+        # rows (restored pages included) move onto worker 0
+        eng.engine.apply_partition([(0, 2), (2, 2)])
+        got2 = {r.rid: list(map(int, r.generated))
+                for r in eng.run(max_steps=200)}
+    finally:
+        eng.close()
+    assert len(eng.engine.workers) == 1
+    assert got2 == want2
+
+
+# ---------------------------------------------------------------------------
 # straggler rebalancing
 # ---------------------------------------------------------------------------
 def test_rebalancer_migrates_rows_off_straggler(rng, key):

@@ -1,0 +1,339 @@
+"""Property-based suite for KV lifecycle tiering: park, swap, restore.
+
+Random ``admit`` / ``park_row`` / decode-grow / ``append_chunk`` /
+restore-``adopt`` / swap-out / flush / migration sequences against a
+shared :class:`HostTier` must preserve, after EVERY op:
+
+  * pool partition — free + cached + parked + used == num_pages, with
+    the four sets pairwise disjoint and used == #pages at refcount > 0;
+  * parked pages are refcount-zero (a mapped page is never parked);
+  * no page leaks across tiers — the tier's unique-entry count equals
+    successful swap-outs minus restores (puts - dropped - restored),
+    so every page that leaves the device is accounted in the host
+    hierarchy until it streams back;
+  * the eviction ladder never reaches a refcount > 0 page (implied by
+    the partition invariants; pinned directly by the directed test
+    below);
+  * refcount conservation and contiguous-table-prefix layout, exactly
+    as in ``test_paged_properties.py``.
+
+Restored BYTES are checked bit-exact against a real device pool in the
+directed tests at the bottom (fp32 and int8 pools), where the fuzz
+harness's structural model would hide aliasing bugs.
+
+The hypothesis path (``tests/_hyp.py`` shim) runs when hypothesis is
+installed (CI); the deterministic fallback fuzz always runs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.serving import paged_cache as PC
+
+ROWS, PAGES, PAGE, MAXP = 4, 24, 4, 5
+CAP = MAXP * PAGE
+
+# prompt families sharing pairwise prefixes (as in the paged suite) so
+# park/restore chains collide and first-content-wins paths fire
+_BASE = np.arange(1, 2 * CAP + 1, dtype=np.int32)
+FAMILIES = [
+    _BASE,
+    np.concatenate([_BASE[:8], 1000 + _BASE[8:]]),
+    np.concatenate([_BASE[:14], 2000 + _BASE[14:]]),
+]
+
+
+class TierHarness:
+    """Drives a tiered PagedAllocator through the op vocabulary.  The
+    'pool' behind ``pool_reader`` is a static numpy array — structural
+    invariants don't need real KV bytes, the directed tests do."""
+
+    def __init__(self, dram_pages=0):
+        self.tier = PC.HostTier(PC.TierConfig(dram_pages=dram_pages))
+        self._mk_alloc()
+
+    def _mk_alloc(self):
+        self.a = PC.PagedAllocator(ROWS, PAGES, PAGE, MAXP,
+                                   tier=self.tier)
+        self.pool = np.arange(PAGES * PAGE,
+                              dtype=np.float32).reshape(PAGES, PAGE)
+        self.a.pool_reader = lambda: {0: {"k": self.pool}}
+        self.fam = [None] * ROWS
+
+    # -- ops ---------------------------------------------------------------
+    def admit(self, row, fam, length):
+        try:
+            self.a.admit(row, length)
+        except MemoryError:
+            self.fam[row] = None
+            return
+        self.fam[row] = fam if length else None
+        if length:
+            self.a.register_prefix(row, FAMILIES[fam][:length])
+
+    def release(self, row):
+        self.a.release(row)
+        self.fam[row] = None
+
+    def park(self, row):
+        fam = self.fam[row] if self.fam[row] is not None else 0
+        tokens = FAMILIES[fam][:int(self.a.lengths[row])]
+        self.a.park_row(row, tokens)
+        self.fam[row] = None
+
+    def decode_grow(self, mask):
+        new = np.minimum(self.a.lengths + 1, CAP + 3)
+        self.a.ensure_lengths(new, mask=np.asarray(mask, bool))
+        self.a.take_clones()
+
+    def append_chunk(self, row, cnt):
+        base = np.zeros((ROWS,), np.int64)
+        counts = np.zeros((ROWS,), np.int64)
+        base[row] = int(self.a.lengths[row])
+        counts[row] = cnt
+        if base[row] == 0 and self.fam[row] is None:
+            self.fam[row] = 0
+        if base[row] + cnt > CAP:
+            return
+        self.a.append_chunk(base, counts)
+        self.a.take_clones()
+
+    def adopt(self, row, fam, want):
+        """Restore-at-admission: probe with ``restore=True`` (index
+        misses consult the host tier), drain the queued restores the
+        way the engine does, then adopt the clamped cached prefix."""
+        tokens = FAMILIES[fam][:want]
+        ids, cached = self.a.probe_prefix(tokens, restore=True)
+        for entry, pid in self.a.take_restores():
+            assert 0 in entry.payload          # captured at swap-out
+            assert pid in self.a.parked        # restored => parked
+        eff = min(cached, want - 1)
+        if eff <= 0:
+            return
+        ids = ids[:-(-eff // PAGE)]
+        self.a.adopt_prefix(row, ids, eff)
+        self.fam[row] = fam
+        base = np.zeros((ROWS,), np.int64)
+        counts = np.zeros((ROWS,), np.int64)
+        base[row], counts[row] = eff, want - eff
+        self.a.append_chunk(base, counts)
+        self.a.take_clones()
+        self.a.register_prefix(row, tokens)
+
+    def swap_all(self):
+        self.a.swap_out_all_parked()
+
+    def flush(self):
+        self.a.flush_parked_to_tier()
+
+    def migrate(self):
+        """Topology change: parked pages cross to the engine-global
+        tier, the allocator is rebuilt, live rows re-admitted."""
+        lens = [int(self.a.lengths[r]) if self.a.active[r] else 0
+                for r in range(ROWS)]
+        fams = list(self.fam)
+        self.a.swap_out_all_parked()
+        self._mk_alloc()
+        for r in range(ROWS):
+            if lens[r]:
+                self.admit(r, fams[r] if fams[r] is not None else 0,
+                           min(lens[r], CAP))
+            else:
+                self.fam[r] = None
+
+    # -- invariants --------------------------------------------------------
+    def check(self):
+        a = self.a
+        tables = a.tables
+        mapped_ids = tables[tables >= 0]
+        mapped = set(int(i) for i in mapped_ids)
+        # refcount conservation, per-page refcount == mapping slots
+        assert int(a.refcount.sum()) == len(mapped_ids)
+        assert (a.refcount >= 0).all()
+        uniq, counts = np.unique(mapped_ids, return_counts=True)
+        for pid, c in zip(uniq, counts):
+            assert a.refcount[pid] == c
+        # the four device states are pairwise disjoint...
+        free = set(a.free)
+        cached = set(a.prefix.lru)
+        parked = set(a.parked)
+        assert len(free) == len(a.free)
+        for s1, s2 in [(free, cached), (free, parked), (free, mapped),
+                       (cached, parked), (cached, mapped),
+                       (parked, mapped)]:
+            assert not (s1 & s2)
+        # ...and partition the pool
+        assert len(free) + len(cached) + len(parked) \
+            + a.used_pages() == PAGES
+        assert a.used_pages() == int((a.refcount > 0).sum())
+        assert a.available_pages() == len(free) + len(cached) + len(parked)
+        # parked pages are refcount-zero whole sequences
+        for pid in parked:
+            assert a.refcount[pid] == 0
+        # no cross-tier leak: unique host entries == puts that stored
+        # something minus entries streamed back
+        st_ = self.tier.stats
+        assert self.tier.swapped_pages() == \
+            st_["swapped_out"] - st_["dropped"] - st_["restored"]
+        # per-row layout
+        for r in range(ROWS):
+            m = tables[r] >= 0
+            n = int(m.sum())
+            assert m[:n].all(), "mapped slots must form a prefix"
+            if not a.active[r]:
+                assert n == 0 and a.lengths[r] == 0
+            elif not a.frozen[r]:
+                assert n == -(-min(int(a.lengths[r]), CAP) // PAGE)
+            else:
+                assert n <= -(-min(int(a.lengths[r]), CAP) // PAGE)
+
+
+def _run_ops(ops, dram_pages=0):
+    h = TierHarness(dram_pages)
+    for op in ops:
+        kind = op[0] % 9
+        row = op[1] % ROWS
+        fam = op[2] % len(FAMILIES)
+        length = 1 + op[3] % CAP
+        if kind == 0:
+            h.admit(row, fam, length)
+        elif kind == 1:
+            h.release(row)
+        elif kind == 2:
+            h.park(row)
+        elif kind == 3:
+            h.decode_grow([bool((op[3] >> i) & 1) for i in range(ROWS)])
+        elif kind == 4:
+            h.append_chunk(row, 1 + op[3] % (2 * PAGE))
+        elif kind == 5:
+            h.adopt(row, fam, length)
+        elif kind == 6:
+            h.swap_all()
+        elif kind == 7:
+            h.flush()
+        else:
+            h.migrate()
+        h.check()
+    return h
+
+
+_op = st.tuples(st.integers(0, 8), st.integers(0, ROWS - 1),
+                st.integers(0, 2), st.integers(0, CAP - 1))
+
+
+@settings(max_examples=1000, deadline=None)
+@given(st.lists(_op, min_size=1, max_size=30))
+def test_tiering_properties_hypothesis(ops):
+    _run_ops(ops)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("dram_pages", [0, 3])
+def test_tiering_properties_fallback_fuzz(seed, dram_pages):
+    """Deterministic twin of the hypothesis property (always runs, even
+    without hypothesis installed): 6 seeds x 250 random ops, with an
+    unbounded and a 3-page (spill-to-disk) DRAM tier."""
+    rng = np.random.default_rng(4321 + seed)
+    ops = [tuple(int(x) for x in rng.integers(0, 2 ** 16, 4))
+           for _ in range(250)]
+    _run_ops(ops, dram_pages)
+
+
+def test_hypothesis_shim_consistent():
+    import _hyp
+    assert _hyp.HAVE_HYPOTHESIS is HAVE_HYPOTHESIS
+
+
+# ---------------------------------------------------------------------------
+# directed: the eviction ladder never reaches a live page
+# ---------------------------------------------------------------------------
+def test_eviction_never_selects_refcounted_resident_page():
+    """With the pool exactly filled by live rows, allocation must fail
+    (MemoryError) rather than evict; parking one row makes its pages
+    swappable and the same allocation then succeeds WITHOUT touching
+    the still-live row's pages."""
+    tier = PC.HostTier()
+    a = PC.PagedAllocator(2, 8, PAGE, MAXP, tier=tier)
+    a.pool_reader = lambda: {0: {"k": np.zeros((8, PAGE), np.float32)}}
+    a.admit(0, 16)                       # 4 live pages
+    a.admit(1, 16)                       # 4 more: pool full, all live
+    with pytest.raises(MemoryError):
+        a._take_page()
+    live = [int(i) for i in a.tables[0][a.tables[0] >= 0]]
+    assert a.park_row(1, FAMILIES[0][:16])
+    got = a._take_page()                 # swaps a parked page out
+    assert got not in live
+    assert (a.refcount[live] == 1).all()
+    assert tier.swapped_pages() == 1
+    assert tier.stats["swapped_out"] == 1
+
+
+# ---------------------------------------------------------------------------
+# directed: park -> swap -> restore round trip is bit-exact (real pools)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("quantized", [False, True], ids=["fp32", "int8"])
+def test_park_swap_restore_roundtrip_bit_exact(rng, quantized):
+    """Stamp random bytes into a real device pool, park + swap the row
+    out, then restore through a FRESH allocator into a zeroed pool: the
+    restored pages must be bit-identical to the stamped originals (int8
+    pools round-trip quantized values and scales untouched)."""
+    tier = PC.HostTier()
+    a = PC.PagedAllocator(ROWS, PAGES, PAGE, MAXP, tier=tier)
+    pool = dict(PC.init_page_pool(PAGES, PAGE, 2, 8, quantized=quantized))
+    stamped = {}
+    for name in pool:
+        r = rng.standard_normal(pool[name].shape)
+        vals = (r * 10).astype(np.int8) if pool[name].dtype == jnp.int8 \
+            else np.asarray(r, pool[name].dtype)
+        pool[name] = jnp.asarray(vals)
+        stamped[name] = vals
+    a.pool_reader = lambda: {0: pool}
+
+    toks = FAMILIES[0][:10]              # 2 full pages + a 2-token tail
+    a.admit(0, 10)
+    src = [int(i) for i in a.tables[0][a.tables[0] >= 0]]
+    assert a.park_row(0, toks)
+    assert a.swap_out_all_parked() == 3
+    assert tier.swapped_pages() == 3
+
+    b = PC.PagedAllocator(ROWS, PAGES, PAGE, MAXP, tier=tier)
+    zero = PC.init_page_pool(PAGES, PAGE, 2, 8, quantized=quantized)
+    ids, cached = b.probe_prefix(toks, restore=True)
+    assert cached == 10 and len(ids) == 3    # tail streamed back too
+    restores = b.take_restores()
+    assert len(restores) == 3
+    assert tier.swapped_pages() == 0         # fully drained, no leak
+    zero = PC.restore_pool_pages(zero, restores, 0)
+    for (entry, dst), s in zip(restores, src):
+        for name in zero:
+            got = np.asarray(zero[name][dst])
+            assert np.array_equal(got, stamped[name][s]), name
+    # restored pages are parked (adoptable) on the new allocator
+    assert b.parked_pages() == 3
+    ids2, cached2 = b.probe_prefix(toks)
+    assert cached2 == 10 and ids2 == ids
+
+
+# ---------------------------------------------------------------------------
+# directed: DRAM -> disk spill ordering and simulated-bandwidth accounting
+# ---------------------------------------------------------------------------
+def test_dram_spill_is_lru_and_disk_restores_cost_more():
+    tier = PC.HostTier(PC.TierConfig(dram_gbps=10.0, disk_gbps=1.0,
+                                     dram_pages=2))
+    entries = [PC.TierEntry(digests={bytes([i])},
+                            payload={0: {"k": np.ones((PAGE,),
+                                                      np.float32)}})
+               for i in range(4)]
+    for e in entries:
+        tier.put(e)
+    assert tier.swapped_pages() == 4         # spill never drops payloads
+    assert tier.stats["spilled"] == 2
+    assert [e.tier for e in entries] == ["disk", "disk", "dram", "dram"]
+    s0 = tier.stats["sim_seconds"]
+    tier.pop(entries[0])                     # disk-tier restore
+    disk_cost = tier.stats["sim_seconds"] - s0
+    s1 = tier.stats["sim_seconds"]
+    tier.pop(entries[2])                     # dram-tier restore
+    dram_cost = tier.stats["sim_seconds"] - s1
+    assert disk_cost > dram_cost > 0
