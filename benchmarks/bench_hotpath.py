@@ -31,14 +31,20 @@ latency a serving deployment feels; see docs/ARCHITECTURE.md
 
   hotpath_model_tok_s     perfmodel tokens/s with the calibrated
                           orchestration-overhead term vs the ideal
+  hotpath_obs_overhead    observability-on per-step wall vs off (paired
+                          tracer attach/detach on one engine, median of
+                          paired ratios) — the <5% overhead guard; also
+                          exports the span trace CI uploads as the
+                          Perfetto artifact (BENCH_hotpath_trace.json)
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax.numpy as jnp
 
-from benchmarks.common import bench_model, csv_row, smoke
+from benchmarks.common import REPO_ROOT, bench_model, csv_row, smoke
 from repro.core.hetero import HeteroPipelineEngine
 
 BATCH, NUM_MB, WORKERS = 16, 2, 3
@@ -153,6 +159,47 @@ def run(print_fn=print):
                      emit_tot["fifo"] / rounds / 2 * 1e6,
                      f"ooo_emit_speedup={emit_x:.2f}x,"
                      f"wall_ratio={wall_x:.2f}x"))
+
+    # --- observability overhead guard: paired tracer on/off A/B --------
+    # same engine, alternating rounds with the span tracer attached and
+    # detached (plus a registry histogram observe per step, the serving
+    # layer's per-token cost shape) — the paired toggle cancels machine
+    # drift, and the median ratio must stay under the 5% budget that
+    # keeps observability safe to leave on in production
+    from repro.obs import MetricsRegistry, SpanTracer
+    obs_rounds = 4 if smoke() else 10
+    obs_iters = 2
+    cache2 = PROMPT + 8 + 2 * obs_iters * 2 * (obs_rounds + 2)
+    eng = _make_engine(params, cfg, cache2)
+    tracer = SpanTracer(ring=65536)
+    hist = MetricsRegistry().histogram("step_s")
+    h = BATCH // NUM_MB
+    tok = [jnp.ones((h, 1), jnp.int32)] * NUM_MB
+    for _ in range(2):
+        eng.decode_step(tok)
+    ratios, walls, pair = [], {"off": 0.0, "on": 0.0}, {}
+    for _ in range(obs_rounds):
+        for mode in ("off", "on"):
+            eng.attach_tracer(tracer if mode == "on" else None)
+            t0 = time.perf_counter()
+            for _ in range(obs_iters):
+                eng.decode_step(tok)
+                if mode == "on":
+                    hist.observe(time.perf_counter() - t0)
+            pair[mode] = time.perf_counter() - t0
+            walls[mode] += pair[mode]
+        ratios.append(pair["on"] / pair["off"])
+    eng.close()
+    ratios.sort()
+    obs_x = ratios[len(ratios) // 2]
+    trace_path = os.path.join(REPO_ROOT, "BENCH_hotpath_trace.json")
+    tracer.export(trace_path)
+    print_fn(csv_row("hotpath_obs_overhead",
+                     walls["on"] / obs_rounds / obs_iters * 1e6,
+                     f"obs_on/off={obs_x:.3f}x,spans={tracer.added}"))
+    assert obs_x < 1.05, (
+        f"observability overhead regression: obs-on/off per-step wall "
+        f"ratio {obs_x:.3f}x exceeds the 1.05x budget")
 
     # --- calibrated orchestration term feeds the perfmodel -------------
     from repro.core import perfmodel as P

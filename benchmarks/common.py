@@ -44,11 +44,24 @@ def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
 class RowCollector:
     """print_fn for bench modules that tees CSV rows into a list of
     dicts, so the harness can emit machine-readable results alongside
-    the human CSV."""
+    the human CSV.
+
+    Comments (``#``), blank lines, and the CSV header are expected
+    non-rows; anything else that fails to parse as ``name,float,...``
+    is counted in ``dropped`` (first few kept in ``dropped_lines``) —
+    a bench silently emitting garbage used to vanish without a trace,
+    and ``run.py --smoke`` now fails on it."""
 
     def __init__(self, echo=print):
         self.echo = echo
         self.rows = []
+        self.dropped = 0
+        self.dropped_lines = []
+
+    def _drop(self, line: str) -> None:
+        self.dropped += 1
+        if len(self.dropped_lines) < 5:
+            self.dropped_lines.append(line)
 
     def __call__(self, line) -> None:
         if self.echo is not None:
@@ -59,11 +72,11 @@ class RowCollector:
             return
         parts = line.split(",", 2)
         if len(parts) < 2:
-            return
+            return self._drop(line)
         try:
             us = float(parts[1])
         except ValueError:
-            return
+            return self._drop(line)
         self.rows.append({"name": parts[0], "us_per_call": us,
                           "derived": parts[2] if len(parts) > 2 else ""})
 

@@ -76,6 +76,10 @@ def main() -> None:
                           f"on disk)", flush=True)
                 else:
                     raise RuntimeError(f"bench {name} emitted no rows")
+            if args.smoke and collector.dropped:
+                raise RuntimeError(
+                    f"bench {name} dropped {collector.dropped} malformed "
+                    f"row(s), e.g. {collector.dropped_lines[:3]!r}")
         except Exception:
             failures += 1
             error = traceback.format_exc(limit=3)

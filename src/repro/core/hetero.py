@@ -321,6 +321,10 @@ class RWorker(threading.Thread):
         self.outq: "queue.Queue" = queue.Queue()  # legacy (FIFO) replies
         self._jit_cache: Dict[Tuple[str, int], Any] = {}
         self.busy_time = 0.0
+        # obs.SpanTracer (or None): busy windows recorded per _run_one —
+        # set via HeteroPipelineEngine.attach_tracer, never constructed
+        # here so the hot path stays observability-free by default
+        self.tracer = None
         self._killed = False
 
     # -- paged storage helpers ----------------------------------------------
@@ -670,6 +674,14 @@ class RWorker(threading.Thread):
                 time.sleep(extra)
                 dt += extra
             self.busy_time += dt
+            tracer = self.tracer
+            if tracer is not None:
+                # busy window on this worker's own track; dt already
+                # includes the simulated-skew inflation, so stragglers
+                # render as visibly longer spans
+                tracer.add(f"L{layer}.p{phase}", "r-worker",
+                           f"r{self.wid}", t0, t0 + dt,
+                           {"layer": layer, "phase": phase, "kind": kind})
             if sink is None:                     # legacy FIFO reply
                 self.outq.put((tag, r_out))
             elif self.sim_deliver_jitter > 0.0:
@@ -855,6 +867,18 @@ class HeteroPipelineEngine:
         self._set_topo()
         self.step_stats: Dict[str, float] = {}
         self.last_step_stats: Dict[str, float] = {}
+        # optional obs.SpanTracer: per-(step, mb, layer, phase) pipeline
+        # spans + worker busy windows; None = zero-cost (one attribute
+        # read per step).  Attach/detach via attach_tracer.
+        self.tracer = None
+        self._step_no = 0
+
+    def attach_tracer(self, tracer) -> None:
+        """Wire (or detach, with ``None``) a span tracer into the
+        dispatch/collect path and every live worker thread."""
+        self.tracer = tracer
+        for w in self.workers:
+            w.tracer = tracer
 
     # -- state loading ------------------------------------------------------
     def load_prefill(self, mb: int, tokens, prompt_lens, enc_feats=None):
@@ -1168,6 +1192,12 @@ class HeteroPipelineEngine:
         stats = {"dispatch_s": 0.0, "collect_s": 0.0, "s_dispatch_s": 0.0,
                  "r_wait_s": 0.0, "ooo_advances": 0.0, "prefill_s": 0.0}
         t_step0 = pc()
+        tracer = self.tracer
+        step_no = self._step_no
+        self._step_no += 1
+        # dispatch timestamps for span reconstruction (tracer only):
+        # span = dispatch enqueue -> last worker completion for that tag
+        disp_t: Dict[Tuple[int, int, int], float] = {}
         sink = self._sink
         self._parity ^= 1
         parity, epoch = self._parity, sink.epoch
@@ -1206,6 +1236,8 @@ class HeteroPipelineEngine:
             for w, shard in zip(self.workers, shards):
                 w.inq.put((tag, lkey, kind, phase, shard, sink))
             stats["dispatch_s"] += pc() - t0
+            if tracer is not None:
+                disp_t[(mb, li, phase)] = t0
 
         def advance(mb: int, li: int, phase: int) -> None:
             nonlocal active
@@ -1352,6 +1384,13 @@ class HeteroPipelineEngine:
                 if outstanding:
                     continue
                 del pending[(mb, li, phase)]
+                if tracer is not None:
+                    track = (f"mb{mb}" if mb < self.num_mb
+                             else f"prefill-vmb{mb - self.num_mb}")
+                    tracer.add(f"L{li}.p{phase}", "r-rtt", track,
+                               disp_t.pop((mb, li, phase), t0), pc(),
+                               {"step": step_no, "mb": mb, "layer": li,
+                                "phase": phase})
                 if mb >= self.num_mb:
                     advance_chunk(mb, li, phase)
                 elif self.schedule == "fifo":
@@ -1387,6 +1426,12 @@ class HeteroPipelineEngine:
             self.prefill_results.append(wk)
         stats["step_s"] = pc() - t_step0
         stats["emit_mean_s"] = sum(emit_at) / self.num_mb
+        if tracer is not None:
+            # the enclosing step span — every r-rtt span of this step
+            # nests inside it (the trace test's invariant)
+            tracer.add(f"step {step_no}", "step", "s-worker", t_step0,
+                       t_step0 + stats["step_s"],
+                       {"step": step_no, "prefill_chunks": len(works)})
         self.last_step_stats = stats
         for k, v in stats.items():
             self.step_stats[k] = self.step_stats.get(k, 0.0) + v
@@ -1751,6 +1796,8 @@ class HeteroPipelineEngine:
                     lk, lo, hi, old_spans, exports[lk], lost))
         self.workers = workers
         self.slices = new_slices
+        for w in workers:            # keep span capture across topology
+            w.tracer = self.tracer   # changes (worker list may be new)
         self._set_topo()
         return moved * self.num_mb
 

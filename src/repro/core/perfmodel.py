@@ -502,6 +502,26 @@ def calibrate_orchestration(step_stats: Dict[str, float], cfg: ModelConfig,
         s_dispatch_s=step_stats.get("s_dispatch_s", 0.0) / (steps * trans))
 
 
+def orchestration_residuals(
+        baseline: OrchestrationOverhead,
+        measured: OrchestrationOverhead) -> Dict[str, Dict[str, float]]:
+    """Per-field measured-vs-predicted comparison of two calibrations —
+    the drift monitor's view of whether the hot path still behaves the
+    way ``plan()``/``from_plan()`` assumed when the baseline was fit.
+    Keys follow the stats schema (``dispatch_s`` ...); each value holds
+    ``predicted``, ``measured``, ``residual`` and ``rel``."""
+    out: Dict[str, Dict[str, float]] = {}
+    for f in ("dispatch_s", "collect_s", "s_dispatch_s"):
+        pred = getattr(baseline, f)
+        meas = getattr(measured, f)
+        res = meas - pred
+        rel = (0.0 if res == 0.0 else float("inf")) if pred == 0.0 \
+            else res / pred
+        out[f] = {"predicted": pred, "measured": meas,
+                  "residual": res, "rel": rel}
+    return out
+
+
 def tokens_per_s_with_overhead(cfg: ModelConfig, hw_s: Hardware, b: int,
                                num_mb: int, num_workers: int,
                                overhead: OrchestrationOverhead) -> float:

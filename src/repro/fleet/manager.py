@@ -33,7 +33,8 @@ class FleetManager:
                  rebalance: bool = False,
                  snapshot_interval: int = 0,
                  recovery: str = "reprefill",
-                 health_checks: bool = True):
+                 health_checks: bool = True,
+                 telemetry_window: int = 4096):
         if recovery not in RECOVERY_MODES:
             raise ValueError(
                 f"recovery must be one of {RECOVERY_MODES}, got {recovery!r}")
@@ -44,7 +45,7 @@ class FleetManager:
         self.snapshots = KVSnapshotStore(snapshot_interval)
         self.recovery_mode = recovery
         self.health_checks = health_checks
-        self.telemetry = FleetTelemetry()
+        self.telemetry = FleetTelemetry(max_observations=telemetry_window)
         self.engine = None
         self.step = 0
         self._profile_of: Dict[int, WorkerProfile] = {}   # id(worker) ->

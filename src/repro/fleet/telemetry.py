@@ -4,11 +4,20 @@ The manager records one observation per decode step (per-worker busy-time
 deltas plus the current partition) and one event per migration, failure,
 and recovery.  ``summary()`` is the machine-readable roll-up used by
 ``benchmarks/bench_fleet.py`` and the tests.
+
+Observations are kept in a **ring buffer** (``max_observations``, default
+4096): a long-running server records one per decode step forever, so an
+unbounded list is a slow memory leak.  Roll-ups stay exact across
+wraparound via running aggregates (``total_steps``, ``busy_s_total``)
+maintained at record time — ``summary()`` never depends on what the ring
+still holds.  Events (migrations/failures/recoveries) are rare and carry
+the forensic detail, so they stay unbounded.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -26,10 +35,15 @@ class StepObservation:
     skew: float                          # max/mean busy imbalance - 1
 
 
-@dataclass
 class FleetTelemetry:
-    observations: List[StepObservation] = field(default_factory=list)
-    events: List[FleetEvent] = field(default_factory=list)
+    def __init__(self, max_observations: int = 4096):
+        self.max_observations = max(1, int(max_observations))
+        self.observations: Deque[StepObservation] = \
+            deque(maxlen=self.max_observations)
+        self.events: List[FleetEvent] = []
+        # running aggregates — exact regardless of ring wraparound
+        self.total_steps = 0
+        self.busy_s_total = 0.0
 
     def record_step(self, step: int, busy_deltas: Sequence[float],
                     rows: Sequence[int]) -> StepObservation:
@@ -38,6 +52,8 @@ class FleetTelemetry:
         skew = (max(deltas) / mean - 1.0) if mean > 0 else 0.0
         obs = StepObservation(step, deltas, tuple(int(r) for r in rows), skew)
         self.observations.append(obs)
+        self.total_steps += 1
+        self.busy_s_total += sum(deltas)
         return obs
 
     def record_event(self, step: int, kind: str, **detail) -> None:
@@ -53,7 +69,7 @@ class FleetTelemetry:
         moved = sum(int(e.detail.get("moved_rows", 0))
                     for e in self.events_of("migration"))
         return {
-            "steps": len(self.observations),
+            "steps": self.total_steps,
             "migrations": len(self.events_of("migration")),
             "failures": len(self.events_of("failure")),
             "recoveries": len(self.events_of("recovery")),

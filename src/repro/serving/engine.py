@@ -74,6 +74,8 @@ from repro.core.hetero import (ColocatedEngine, HeteroPipelineEngine,
 from repro.core import decompose as D
 from repro.core.schedule import LoadController, microbatch_size, w_prime_max
 from repro.models import model as M
+from repro.obs import Observability, coerce_obs_config, schema
+from repro.obs.drift import DriftMonitor
 from repro.serving.request import Request, Status
 from repro.serving.sampler import sample
 
@@ -159,6 +161,10 @@ class ServingEngine:
                   backend=kw.pop("backend", "hetero"),
                   num_r_workers=workers, **kw)
         eng.plan = plan
+        if eng._obs_obj is not None and eng._obs_obj.drift is not None:
+            # the drift monitor compares measured tokens/s against the
+            # analytic plan's promise too, when there is one
+            eng._obs_obj.drift.plan = plan
         return eng
 
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
@@ -173,7 +179,8 @@ class ServingEngine:
                  collect_timeout_s: float = 600.0,
                  profile_timing: bool = False, prefill_chunk: int = 0,
                  prefix_cache: bool = False, kv_tiering=None,
-                 preempt_after: int = 0):
+                 preempt_after: int = 0,
+                 observability=False):
         if backend not in ("colocated", "hetero"):
             raise ValueError(
                 f"backend must be 'colocated' or 'hetero', got {backend!r}")
@@ -308,6 +315,44 @@ class ServingEngine:
                            if backend == "hetero" else None)
         self._choice_cache: Tuple[int, list] = (-1, [])
 
+        # unified observability (repro.obs): off by default, and when
+        # off every hot-path hook is a single `self.obs is None` test.
+        # `observability=True` enables the defaults; pass an ObsConfig
+        # to tune ring sizes / drift calibration.
+        self._obs_obj: Optional[Observability] = None
+        self.obs: Optional[Observability] = None
+        ocfg = coerce_obs_config(observability)
+        if ocfg is not None:
+            self._obs_obj = Observability(ocfg)
+            if ocfg.drift and backend == "hetero":
+                self._obs_obj.drift = DriftMonitor(
+                    cfg, self.num_mb, len(self.engine.workers),
+                    calibration_steps=ocfg.drift_calibration_steps,
+                    tolerance=ocfg.drift_tolerance,
+                    warmup_steps=ocfg.drift_warmup_steps)
+            self.set_observability(True)
+        # wall time of each row's previous emitted token, for the
+        # inter-token latency histogram (obs only)
+        self._tok_t: List[float] = [0.0] * batch
+        # tier restore counter watermark, to attribute "restored"
+        # timeline events to the admissions whose probe restored pages
+        self._restored_seen = 0
+
+    def set_observability(self, on: bool) -> None:
+        """Toggle observability on an engine constructed with it (the
+        paired-overhead bench flips this between rounds).  A no-op if
+        the engine was built with observability=False."""
+        if self._obs_obj is None:
+            if on:
+                raise RuntimeError(
+                    "engine was constructed with observability=False — "
+                    "pass observability=True|ObsConfig() to enable")
+            return
+        self.obs = self._obs_obj if on else None
+        if self.backend == "hetero":
+            self.engine.attach_tracer(
+                self._obs_obj.tracer if on else None)
+
     # ------------------------------------------------------------------ #
     def _hetero_init_empty(self, mb: int) -> None:
         state = M.init_decode_state(self.cfg, self.mb_size, self.cache_len)
@@ -359,6 +404,9 @@ class ServingEngine:
                     f"request {req.rid} needs {need} pages, more than a "
                     f"worker pool holds — raise pages_per_worker")
         req.arrive_step = self.step_idx
+        if self.obs is not None:
+            req.mark("submitted", self.step_idx)
+            self.obs.submitted.inc()
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
@@ -558,14 +606,16 @@ class ServingEngine:
         r = self.slots[row]
         if r is None:
             return
+        parked = False
         if self.paged_kv:
             if r.status is Status.PREFILLING:
                 chain = r.feed_tokens[:r.prefill_pos]
             else:
                 chain = r.feed_tokens[:-1] if r.generated \
                     else r.feed_tokens
-            if not (self.kv_tier is not None and len(chain)
-                    and self.engine.park_row(row, chain)):
+            parked = bool(self.kv_tier is not None and len(chain)
+                          and self.engine.park_row(row, chain))
+            if not parked:
                 self.engine.release_row(row)
         self.slots[row] = None
         if self._uses_chunks:
@@ -574,6 +624,11 @@ class ServingEngine:
         r.slot = -1
         r.prefill_pos = 0
         self.preemptions += 1
+        if self.obs is not None:
+            r.mark("preempted", self.step_idx)
+            self.obs.preempted.inc()
+            if parked:
+                r.mark("parked", self.step_idx)
         self.queue.append(r)
 
     def preempt(self, rid: int) -> bool:
@@ -623,6 +678,51 @@ class ServingEngine:
         st["hits" if eff else "misses"] += 1
         st["cached_tokens"] += eff
         st["prompt_tokens"] += req.feed_len
+        obs = self.obs
+        if obs is not None and eff > 0:
+            req.mark("prefix_hit", self.step_idx, extra=eff)
+            obs.prefix_hits.inc()
+            if self.kv_tier is not None:
+                # the probe restores swapped pages as a side effect —
+                # attribute the tier's restore-counter advance to this
+                # admission's timeline
+                restored = int(self.kv_tier.stats.get("restored", 0))
+                if restored > self._restored_seen:
+                    self._restored_seen = restored
+                    req.mark("restored", self.step_idx)
+                    obs.restores.inc()
+
+    # -- lifecycle observation (every hook is obs-gated by the caller) --- #
+    def _obs_admit(self, reqs: List[Request]) -> None:
+        obs = self.obs
+        t = time.perf_counter()
+        for r in reqs:
+            r.mark("admitted", self.step_idx, t)
+            obs.admitted.inc()
+            # queue wait restarts at preemption: the re-queued request
+            # waits from its preempt, not its original arrival
+            t0 = r.event_t("preempted", last=True)
+            if t0 is None:
+                t0 = r.event_t("submitted")
+            if t0 is not None:
+                obs.queue_wait.observe(t - t0)
+
+    def _obs_first_token(self, r: Request, row: int) -> None:
+        obs = self.obs
+        t = r.mark("first_token", self.step_idx)
+        obs.generated.inc()
+        t0 = r.event_t("submitted")
+        if t0 is not None:
+            obs.ttft.observe(t - t0)
+        self._tok_t[row] = t
+
+    def _obs_finish(self, r: Request) -> None:
+        obs = self.obs
+        t = r.mark("finished", self.step_idx)
+        obs.finished.inc()
+        t0 = r.event_t("submitted")
+        if t0 is not None:
+            obs.e2e.observe(t - t0)
 
     def _choose_rows(self, reqs: List[Request]):
         """Prefix-AWARE row assignment: a cached prefix is only
@@ -701,6 +801,8 @@ class ServingEngine:
 
     def _place_monolithic(self, reqs: List[Request],
                           rows: List[int]) -> None:
+        if self.obs is not None:
+            self._obs_admit(reqs)
         max_p = max(r.feed_len for r in reqs)
         n_pad = _pad_pow2(len(reqs))
         s_pad = _pad_pow2(max_p, 8)
@@ -733,12 +835,16 @@ class ServingEngine:
             t0 = int(tok0[i])
             r.generated.append(t0)
             self._last_tok[rows[i]] = t0
+            if self.obs is not None:
+                self._obs_first_token(r, rows[i])
             if r.is_finished(t0):
                 r.status = Status.DONE
                 r.finish_step = self.step_idx
                 self.finished.append(r)
                 self.slots[rows[i]] = None
                 self._retire_row(rows[i], r)
+                if self.obs is not None:
+                    self._obs_finish(r)
                 if self._uses_chunks:
                     self.engine.set_row_active(rows[i], False)
             else:
@@ -812,6 +918,8 @@ class ServingEngine:
         self._begin_chunked(reqs, rows)
 
     def _begin_chunked(self, reqs: List[Request], rows: List[int]) -> None:
+        if self.obs is not None:
+            self._obs_admit(reqs)
         for row, r in zip(rows, reqs):
             r.status = Status.PREFILLING
             r.slot = row
@@ -859,6 +967,9 @@ class ServingEngine:
                 if r is None or r.status is not Status.PREFILLING:
                     continue          # finished/replaced under our feet
                 r.prefill_pos = int(wk.new_lens[i])
+                if self.obs is not None:
+                    r.mark("prefill_chunk", self.step_idx,
+                           extra=r.prefill_pos)
                 if r.prefill_pos < r.feed_len:
                     continue
                 # the chunk's last-token logits ARE the first generation
@@ -880,12 +991,16 @@ class ServingEngine:
                 r.status = Status.RUNNING
                 r.generated.append(tok0)
                 self._last_tok[row] = tok0
+                if self.obs is not None:
+                    self._obs_first_token(r, row)
                 if r.is_finished(tok0):
                     r.status = Status.DONE
                     r.finish_step = self.step_idx
                     self.finished.append(r)
                     self.slots[row] = None
                     self._retire_row(row, r)
+                    if self.obs is not None:
+                        self._obs_finish(r)
                 else:
                     self.engine.set_row_active(row, True)
                     if self.prefix_cache:
@@ -949,13 +1064,21 @@ class ServingEngine:
             self.fleet.pre_step(reprefill=self._replay_rows,
                                 on_topology=self._recost_admission)
             fleet_wall += pc() - t0
-        if self.prefix_cache:
+        if self.backend == "hetero" and (self.prefix_cache
+                                         or self.obs is not None):
             topo = tuple(self.engine.slices)
             if topo != self._topo_seen:
-                # migration/recovery rebuilt allocators: re-index live
-                # rows' prompts before this step's admission probes
                 self._topo_seen = topo
-                self._reregister_prefixes()
+                if self.prefix_cache:
+                    # migration/recovery rebuilt allocators: re-index
+                    # live rows' prompts before this step's admission
+                    # probes
+                    self._reregister_prefixes()
+                if self.obs is not None:
+                    for r in self.slots:
+                        if r is not None:
+                            r.mark("migrated", self.step_idx)
+                            self.obs.migrated.inc()
         admitted = 0
         t0 = pc()
         n = self._admit_count()
@@ -1001,18 +1124,31 @@ class ServingEngine:
             logits, [r if r is not None and r.status is Status.RUNNING
                      else None for r in self.slots])
 
+        obs = self.obs
+        t_now = pc() if obs is not None else 0.0
+        tokens_emitted = 0
         for i, r in enumerate(self.slots):
             if r is None or r.status is not Status.RUNNING:
                 continue              # PREFILLING rows own no decode token
             tok = int(new_tok[i])
             r.generated.append(tok)
             self._last_tok[i] = tok
+            tokens_emitted += 1
+            if obs is not None:
+                r.mark("token", self.step_idx, t_now)
+                obs.generated.inc()
+                prev = self._tok_t[i]
+                if prev > 0.0:
+                    obs.inter_token.observe(t_now - prev)
+                self._tok_t[i] = t_now
             if r.is_finished(tok):
                 r.status = Status.DONE
                 r.finish_step = self.step_idx
                 self.finished.append(r)
                 self.slots[i] = None
                 self._retire_row(i, r)
+                if obs is not None:
+                    self._obs_finish(r)
                 if self._uses_chunks:
                     # freed slots stop decoding entirely (no KV append,
                     # no length bump) until readmission re-prefills them
@@ -1029,6 +1165,11 @@ class ServingEngine:
             t0 = pc()
             self.fleet.post_step(self.step_idx)
             fleet_wall += pc() - t0
+        if obs is not None and obs.drift is not None:
+            obs.drift.observe_step(
+                wall_s=decode_wall, tokens=tokens_emitted,
+                step_stats=self.engine.step_stats,
+                num_workers=len(self.engine.workers))
         rec = StepRecord(self.step_idx, prefill_wall, decode_wall,
                          fleet_wall,
                          sum(r is not None for r in self.slots),
@@ -1044,30 +1185,104 @@ class ServingEngine:
     def hotpath_stats(self) -> Dict[str, float]:
         """Cumulative decode hot-path breakdown (dispatch / collect /
         S-dispatch / R-wait seconds and step count) from the pipelined
-        engine; empty for the colocated backend."""
-        return dict(getattr(self.engine, "step_stats", {}) or {})
+        engine; empty for the colocated backend.  Keys follow the
+        repro.obs.schema convention; the pre-schema spellings
+        (``steps``, ``ooo_advances``) still resolve via the compat
+        shim."""
+        return schema.normalize(
+            dict(getattr(self.engine, "step_stats", {}) or {}))
 
     def prefix_cache_stats(self) -> Dict[str, float]:
         """Admission-level hit counters plus allocator-level sharing
-        state (pages shared by >1 row, refcount-zero cached pages)."""
+        state (pages shared by >1 row, refcount-zero cached pages).
+        Schema-conformant keys with legacy-spelling compat (``hits`` ->
+        ``hits_count`` ...)."""
         out: Dict[str, float] = dict(self.prefix_stats)
         if self.backend == "hetero":
             out.update(self.engine.prefix_cache_stats())
         denom = max(1, out.get("prompt_tokens", 0))
         out["token_hit_rate"] = out.get("cached_tokens", 0) / denom
-        return out
+        return schema.normalize(out)
 
     def tiering_stats(self) -> Dict[str, float]:
         """Host-tier traffic counters (swap-outs, restores, simulated
         stream seconds) plus engine-side preemptions; empty when
-        tiering is off."""
+        tiering is off.  Schema-conformant keys with legacy-spelling
+        compat (``restored`` -> ``restore_count`` ...)."""
         if self.kv_tier is None:
             return {}
         out: Dict[str, float] = dict(self.kv_tier.stats)
         out["swapped_pages"] = self.kv_tier.swapped_pages()
         out["host_bytes"] = self.kv_tier.nbytes()
         out["preemptions"] = self.preemptions
-        return out
+        return schema.normalize(out)
+
+    # -- unified observability surface --------------------------------- #
+    def metrics(self) -> Dict[str, float]:
+        """One flat snapshot of everything the engine can measure:
+        registry metrics (TTFT / queue-wait / inter-token histograms
+        with p50/p90/p99, lifecycle counters) plus every legacy stats
+        surface under a namespace prefix (``hotpath_``, ``prefix_``,
+        ``tier_``, ``fleet_``, ``drift_``).  All keys follow
+        repro.obs.schema; works with observability off (the registry
+        part is simply absent)."""
+        out: Dict[str, float] = {}
+        if self.obs is not None:
+            out.update(self.obs.registry.snapshot())
+            if self.obs.tracer is not None:
+                out["trace_spans_count"] = float(self.obs.tracer.added)
+            if self.obs.drift is not None:
+                out.update(self.obs.drift.report().as_metrics())
+        out["steps_count"] = float(self.step_idx)
+        out["queue_depth_count"] = float(len(self.queue))
+        out["active_count"] = float(
+            sum(r is not None for r in self.slots))
+        out["resident_tokens"] = float(self.resident_len())
+        out["preemptions_count"] = float(self.preemptions)
+        for k, v in self.hotpath_stats().items():
+            out[f"hotpath_{k}"] = float(v)
+        if self.prefix_cache:
+            for k, v in self.prefix_cache_stats().items():
+                out[f"prefix_{k}"] = float(v)
+        if self.kv_tier is not None:
+            for k, v in self.tiering_stats().items():
+                out[f"tier_{k}"] = float(v)
+        if self.fleet is not None:
+            for k, v in schema.normalize(
+                    self.fleet.telemetry.summary()).items():
+                out[f"fleet_{k}"] = float(0.0 if v is None else v)
+        return schema.StatsDict(out)
+
+    def export_trace(self, path: str) -> str:
+        """Write the pipeline span trace as Chrome trace-event JSON
+        (open in Perfetto / chrome://tracing).  Requires observability
+        with spans enabled."""
+        if self._obs_obj is None or self._obs_obj.tracer is None:
+            raise RuntimeError(
+                "no span tracer — construct the engine with "
+                "observability=True (or ObsConfig(spans=True))")
+        return self._obs_obj.tracer.export(path)
+
+    def drift_report(self):
+        """The perfmodel drift monitor's measured-vs-predicted
+        residuals (repro.obs.drift.DriftReport); requires observability
+        with drift enabled on the hetero backend."""
+        if self._obs_obj is None or self._obs_obj.drift is None:
+            raise RuntimeError(
+                "no drift monitor — construct a hetero engine with "
+                "observability=True (or ObsConfig(drift=True))")
+        return self._obs_obj.drift.report()
+
+    def request_timeline(self, rid: int) -> List[Tuple]:
+        """The lifecycle event list of a finished/resident/queued
+        request (empty unless observability was on while it ran)."""
+        for r in self.finished:
+            if r.rid == rid:
+                return list(r.events)
+        for r in list(self.slots) + list(self.queue):
+            if r is not None and r.rid == rid:
+                return list(r.events)
+        raise KeyError(f"unknown request id {rid}")
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Serve until the queue and slots drain, or ``max_steps`` MORE

@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 import enum
+import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,6 +37,27 @@ class Request:
     slot: int = -1                           # (mb, row) once scheduled
     prefill_pos: int = 0                     # prompt tokens prefilled so far
                                              # (chunked prefill progress)
+    # lifecycle timeline: (event, step, perf_counter_t, extra) tuples,
+    # appended by the engine only when observability is on (see
+    # repro.obs.timeline for the vocabulary and derived latencies)
+    events: List[Tuple[str, int, float, object]] = \
+        field(default_factory=list, repr=False)
+
+    def mark(self, event: str, step: int, t: Optional[float] = None,
+             extra=None) -> float:
+        t = time.perf_counter() if t is None else t
+        self.events.append((event, step, t, extra))
+        return t
+
+    def event_t(self, event: str, last: bool = False) -> Optional[float]:
+        """Timestamp of the first (or last) occurrence of ``event``."""
+        out = None
+        for ev, _step, t, _x in self.events:
+            if ev == event:
+                if not last:
+                    return t
+                out = t
+        return out
 
     @property
     def prompt_len(self) -> int:

@@ -1,0 +1,77 @@
+"""Direct coverage for fleet/telemetry.py — event ordering, events_of
+filtering, skew math with idle workers, and summary roll-up exactness
+across the observation ring buffer's wraparound."""
+import pytest
+
+from repro.fleet.telemetry import FleetTelemetry
+
+
+def test_skew_math():
+    t = FleetTelemetry()
+    obs = t.record_step(1, [2.0, 0.0, 0.0, 0.0], [4, 4, 4, 4])
+    # mean busy = 0.5, max = 2.0 -> skew = 2/0.5 - 1 = 3
+    assert obs.skew == pytest.approx(3.0)
+    assert t.last_skew() == pytest.approx(3.0)
+    # balanced fleet: no skew
+    assert t.record_step(2, [1.0, 1.0, 1.0], [4, 4, 4]).skew == 0.0
+
+
+def test_skew_with_idle_workers():
+    t = FleetTelemetry()
+    # a fully idle step (no deltas at all) must not divide by zero
+    assert t.record_step(1, [0.0, 0.0, 0.0], [4, 4, 4]).skew == 0.0
+    assert t.record_step(2, [], []).skew == 0.0
+    assert t.last_skew() == 0.0
+
+
+def test_event_ordering_and_filtering():
+    t = FleetTelemetry()
+    t.record_event(3, "failure", worker=1)
+    t.record_event(3, "recovery", mode="reprefill", rows=4)
+    t.record_event(7, "migration", moved_rows=6, skew=1.2)
+    t.record_event(9, "migration", moved_rows=2)
+    # insertion order preserved
+    assert [e.kind for e in t.events] == ["failure", "recovery",
+                                          "migration", "migration"]
+    migs = t.events_of("migration")
+    assert [e.step for e in migs] == [7, 9]
+    assert [e.detail["moved_rows"] for e in migs] == [6, 2]
+    assert t.events_of("nope") == []
+
+
+def test_summary_rollups():
+    t = FleetTelemetry()
+    for s in range(5):
+        t.record_step(s, [1.0, 2.0], [4, 4])
+    t.record_event(2, "failure", worker=0)
+    t.record_event(2, "recovery", mode="zeros", rows=4)
+    t.record_event(4, "migration", moved_rows=8, skew=0.9)
+    s = t.summary()
+    assert s["steps"] == 5
+    assert s["failures"] == 1
+    assert s["recoveries"] == 1
+    assert s["migrations"] == 1
+    assert s["rows_migrated"] == 8
+    assert s["last_skew"] == pytest.approx(1.0 / 3.0)
+
+
+def test_observation_ring_is_bounded_but_summary_exact():
+    t = FleetTelemetry(max_observations=8)
+    for s in range(50):
+        t.record_step(s, [float(s), 1.0], [2, 2])
+    # the ring holds only the most recent window ...
+    assert len(t.observations) == 8
+    assert [o.step for o in t.observations] == list(range(42, 50))
+    # ... but roll-ups are exact via running aggregates
+    assert t.summary()["steps"] == 50
+    assert t.busy_s_total == pytest.approx(sum(range(50)) + 50.0)
+    assert t.last_skew() == pytest.approx(49.0 / 25.0 - 1.0)
+
+
+def test_manager_wires_telemetry_window():
+    from repro.fleet.manager import FleetManager
+    from repro.fleet.profile import WorkerProfile
+    m = FleetManager([WorkerProfile(name="a"), WorkerProfile(name="b")],
+                     telemetry_window=16)
+    assert m.telemetry.max_observations == 16
+    assert m.telemetry.observations.maxlen == 16
