@@ -35,6 +35,8 @@ BENCHES = [
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
     ("hotpath", "benchmarks.bench_hotpath", "Hot-path overhead + OoO A/B"),
+    ("chaos", "benchmarks.bench_chaos",
+     "Seeded fault injection: MTTR, recovery dip, chaos-off A/B"),
 ]
 
 # benches that may legitimately emit zero rows (they render whatever

@@ -1,0 +1,26 @@
+"""Deterministic fault injection for the heterogeneous serving pipeline.
+
+A seeded :class:`FaultPlan` fires faults at named **sites** threaded
+through the engine — R-worker crash/hang/compute-error mid-step,
+completion-message drop/duplication, KV wire-payload bit corruption,
+tier swap/restore I/O failure, transient pool exhaustion.  Triggers are
+occurrence-counted (never wall-clock), so a given plan + seed replays
+the exact same fault schedule on every run.
+
+The serving layer's supervisor (``ServingEngine``) turns every injected
+fault into an automatic recovery; the chaos matrix in
+``tests/test_chaos.py`` asserts the recovered run stays token-exact to
+a fault-free oracle.  With no plan attached every hook is a single
+``is None`` test — chaos off is a no-op.
+"""
+from repro.chaos.plan import (FAULT_SITES, ChaosComputeError, ChaosFault,
+                              ChaosIOError, ChaosPoolExhausted, FaultPlan,
+                              FaultSpec)
+from repro.chaos.checksum import (ChecksumError, payload_checksum,
+                                  tree_digest)
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "FAULT_SITES",
+    "ChaosFault", "ChaosComputeError", "ChaosIOError", "ChaosPoolExhausted",
+    "ChecksumError", "tree_digest", "payload_checksum",
+]

@@ -1,0 +1,57 @@
+"""Checksummed KV transport: blake2b digests over array payloads.
+
+KV state crosses process-internal "wires" in three places — the
+migration wire format (``apply_partition`` exports), fleet KV
+snapshots, and host-tier entries.  Each transport stamps a digest at
+write/export time and verifies it at install/restore time, so payload
+corruption is *detected* and routed to re-prefill instead of silently
+decoding garbage tokens.
+
+blake2b (stdlib ``hashlib``) is used rather than xxhash to avoid a new
+dependency; digest_size=16 keeps entries small while making accidental
+collision negligible.  The digest covers dtype + shape + raw bytes of
+every leaf, with dict keys visited in sorted order, so it is stable
+across payload-tree construction order.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any
+
+import numpy as np
+
+DIGEST_SIZE = 16
+
+
+class ChecksumError(RuntimeError):
+    """A checksummed payload failed verification (bit corruption)."""
+
+
+def tree_digest(tree: Any) -> bytes:
+    """Digest a nested dict/list/array payload deterministically."""
+    h = hashlib.blake2b(digest_size=DIGEST_SIZE)
+    _walk(tree, h)
+    return h.digest()
+
+
+def payload_checksum(payload: Any) -> bytes:
+    """Alias used by tier entries (reads as 'checksum of the payload')."""
+    return tree_digest(payload)
+
+
+def _walk(node: Any, h: "hashlib._Hash") -> None:
+    if isinstance(node, dict):
+        for k in sorted(node, key=repr):
+            h.update(repr(k).encode())
+            _walk(node[k], h)
+    elif isinstance(node, (list, tuple)):
+        h.update(b"[%d]" % len(node))
+        for v in node:
+            _walk(v, h)
+    elif node is None:
+        h.update(b"~")
+    else:
+        a = np.asarray(node)
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())

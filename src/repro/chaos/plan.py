@@ -1,0 +1,160 @@
+"""Fault plans: seeded, occurrence-counted fault triggers.
+
+Every injection point in the engine calls ``plan.fire(site, **ctx)``;
+the plan matches the call against its :class:`FaultSpec` list and
+returns the spec that fires (or ``None``).  Matching is deterministic:
+each spec keeps its own ``seen`` counter of matching invocations and
+fires on occurrences ``after < seen <= after + times`` — no wall-clock,
+no unseeded randomness, so a plan replays identically run to run.
+
+Injected exceptions all derive from :class:`ChaosFault` and carry
+``transient = True``: the supervision layer in ``serving/engine.py``
+distinguishes them from genuine (deterministic) worker bugs, which it
+re-raises instead of retrying forever.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+# The named injection sites, for reference (fire() accepts any string;
+# a typo'd site simply never fires, so tests assert on plan.fired).
+FAULT_SITES = (
+    "r_step",        # RWorker._run_one: kind = crash | hang | error
+    "completion",    # sink delivery:    kind = drop | dup
+    "wire_corrupt",  # migration/snapshot payload bit flips (ctx: where=)
+    "tier_corrupt",  # HostTier entry payload bit flips after checksum
+    "tier_put",      # HostTier.put raises ChaosIOError
+    "tier_get",      # HostTier.pop raises ChaosIOError
+    "pool",          # PagedAllocator growth raises ChaosPoolExhausted
+)
+
+
+class ChaosFault(RuntimeError):
+    """Base class for injected faults. ``transient`` marks them safe to
+    retry: the fault plan will not re-fire once its budget is spent."""
+    transient = True
+
+
+class ChaosComputeError(ChaosFault):
+    """Injected R-worker compute failure (site ``r_step``/``error``)."""
+
+
+class ChaosIOError(ChaosFault):
+    """Injected host-tier I/O failure (sites ``tier_put``/``tier_get``)."""
+
+
+class ChaosPoolExhausted(ChaosFault):
+    """Injected transient paged-pool exhaustion (site ``pool``).
+
+    Deliberately NOT a ``MemoryError``: the allocator's real-exhaustion
+    fallback freezes the row (silently degrading its tokens), which is
+    the wrong response to a *transient* fault — this class propagates to
+    the step supervisor, which retries the whole step token-exactly.
+    """
+
+
+@dataclass
+class FaultSpec:
+    """One fault: where it fires, what it does, and when.
+
+    ``after``/``times`` count *matching* ``fire()`` invocations: skip
+    the first ``after`` matches, then fire on the next ``times``
+    (``times=-1`` fires forever — useful for modelling a persistent
+    fault the supervisor must escalate on)."""
+    site: str
+    kind: str = "fail"                 # site-specific action selector
+    wid: Optional[int] = None          # only fire for this worker id
+    where: Optional[str] = None        # only fire for this ctx "where"
+    after: int = 0
+    times: int = 1
+    hang_s: float = 30.0               # sleep length for kind="hang"
+    # runtime counters (mutated under the plan lock)
+    seen: int = field(default=0, compare=False)
+    hits: int = field(default=0, compare=False)
+
+
+class FaultPlan:
+    """A seeded, thread-safe schedule of :class:`FaultSpec` triggers.
+
+    ``fired`` is the forensic log — one dict per fired fault, in firing
+    order — used by the chaos bench for MTTR attribution and by the
+    matrix tests to assert the intended fault actually happened.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec] = (), seed: int = 0):
+        self.specs: List[FaultSpec] = list(specs)
+        self.seed = int(seed)
+        self._rng = np.random.default_rng(0xC7A05 + self.seed)
+        self._lock = threading.Lock()
+        self.fired: List[Dict[str, Any]] = []
+        self.enabled = True
+        # sites with at least one spec — fire() sits on the R-worker
+        # and completion-sink hot paths, so invocations for unarmed
+        # sites must not pay for the lock (specs are fixed at init)
+        self._sites = frozenset(s.site for s in self.specs)
+
+    def fire(self, site: str, **ctx: Any) -> Optional[FaultSpec]:
+        """Return the spec that fires for this invocation, or None.
+
+        The first matching spec consumes the invocation; an exhausted
+        spec passes it on to later specs for the same site."""
+        if not self.enabled or site not in self._sites:
+            return None
+        with self._lock:
+            for spec in self.specs:
+                if spec.site != site:
+                    continue
+                if spec.wid is not None and ctx.get("wid") != spec.wid:
+                    continue
+                if spec.where is not None and ctx.get("where") != spec.where:
+                    continue
+                spec.seen += 1
+                if spec.seen <= spec.after:
+                    continue
+                if 0 <= spec.times <= spec.hits:
+                    continue
+                spec.hits += 1
+                self.fired.append(dict(site=site, kind=spec.kind,
+                                       t=time.monotonic(), **ctx))
+                return spec
+        return None
+
+    def count(self, site: Optional[str] = None) -> int:
+        with self._lock:
+            return len([f for f in self.fired
+                        if site is None or f["site"] == site])
+
+    # -- payload corruption -------------------------------------------------
+    def corrupt_array(self, arr: np.ndarray) -> int:
+        """Flip bits in a few bytes of ``arr`` in place (deterministic
+        given the plan seed). Returns the number of bytes touched."""
+        a = np.asarray(arr)
+        if a.size == 0 or not a.flags.writeable:
+            return 0
+        flat = a.view(np.uint8).reshape(-1)
+        with self._lock:
+            idx = self._rng.integers(0, flat.size,
+                                     size=min(8, int(flat.size)))
+        flat[np.asarray(idx)] ^= 0xFF
+        return int(len(idx))
+
+    def corrupt_tree(self, tree: Any) -> Any:
+        """Corrupt every array leaf of a nested dict/list payload and
+        return the corrupted tree.  Immutable leaves (jax device
+        arrays, read-only views) are replaced by corrupted host copies,
+        so callers must assign the result back."""
+        if isinstance(tree, dict):
+            return {k: self.corrupt_tree(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(self.corrupt_tree(v) for v in tree)
+        if tree is None or isinstance(tree, (bool, int, float, str,
+                                             bytes)):
+            return tree
+        a = np.array(tree)                 # writeable host copy
+        self.corrupt_array(a)
+        return a

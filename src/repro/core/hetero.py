@@ -76,6 +76,50 @@ from repro.models import model as M
 
 
 # ---------------------------------------------------------------------------
+# step faults — typed aborts the serving supervisor can heal
+# ---------------------------------------------------------------------------
+class StepFault(RuntimeError):
+    """A decode step aborted mid-flight.
+
+    Raised from the collect loop after the sink has been fenced (the
+    epoch bump makes every in-flight completion of the aborted step
+    stale), so the engine is quiescent but its per-layer state is
+    **inconsistent across layers** — some layers appended this step's
+    KV, some did not.  The serving layer's supervisor heals that by
+    re-prefilling every live row from token history and retrying the
+    step with the same tokens (sampling RNG is consumed only after a
+    step returns, so the retry is token-exact).
+
+    ``dead_wids``/``hung_wids`` name workers that must be failed over;
+    ``lost_wids`` name workers suspected of a dropped completion
+    (transient — retry without removal); ``transient`` marks the fault
+    safe to retry as-is."""
+
+    def __init__(self, msg: str, *, dead_wids: Sequence[int] = (),
+                 hung_wids: Sequence[int] = (),
+                 lost_wids: Sequence[int] = (),
+                 wid: Optional[int] = None,
+                 transient: bool = False, step_no: int = -1):
+        super().__init__(msg)
+        self.dead_wids = tuple(dead_wids)
+        self.hung_wids = tuple(hung_wids)
+        self.lost_wids = tuple(lost_wids)
+        self.wid = wid
+        self.transient = bool(transient)
+        self.step_no = int(step_no)
+
+
+class CollectTimeout(StepFault):
+    """The collect loop gave up waiting: a pending worker is dead, hung
+    past the suspicion threshold, or completions went missing."""
+
+
+class WorkerStepError(StepFault):
+    """An R-worker posted an exception for this step (``__cause__``
+    carries the original, with ``r_worker_context`` coordinates)."""
+
+
+# ---------------------------------------------------------------------------
 # params / state layout helpers
 # ---------------------------------------------------------------------------
 def per_layer_params(params, cfg: ModelConfig) -> List[Tuple[str, Any]]:
@@ -280,7 +324,8 @@ class RWorker(threading.Thread):
                  profile: Any = None, slowdown: float = 1.0,
                  sim_row_cost: float = 0.0,
                  sim_deliver_jitter: float = 0.0,
-                 profile_timing: bool = False):
+                 profile_timing: bool = False,
+                 chaos: Any = None):
         super().__init__(daemon=True, name=f"r-worker-{wid}")
         self.wid, self.cfg, self.lo, self.hi = wid, cfg, lo, hi
         self.kv_chunk = kv_chunk
@@ -326,6 +371,17 @@ class RWorker(threading.Thread):
         # here so the hot path stays observability-free by default
         self.tracer = None
         self._killed = False
+        # chaos.FaultPlan (or None): fault-injection hooks in _run_one
+        # and the paged allocator; a single `is None` test when off
+        self.chaos = chaos
+        # liveness telemetry for the collect loop's suspicion check:
+        # `heartbeat` advances on every inbox wake and item boundary,
+        # `processing` is True while _run_one runs — a stale heartbeat
+        # with processing=True reads as "hung mid-item", processing=
+        # False with an empty inbox but owed completions as "message
+        # lost in flight"
+        self.heartbeat = time.monotonic()
+        self.processing = False
 
     # -- paged storage helpers ----------------------------------------------
     def _pageable(self, st) -> bool:
@@ -346,7 +402,8 @@ class RWorker(threading.Thread):
             num = self.num_pages or rows * mp
             alloc = PC.PagedAllocator(
                 rows, num, self.page_size, mp,
-                prefix_cache=self.prefix_cache, tier=self.kv_tier)
+                prefix_cache=self.prefix_cache, tier=self.kv_tier,
+                chaos=self.chaos)
             # swap-out reads this micro-batch's layer pools at directive
             # time (pools are immutable jnp arrays, so the captured bytes
             # cannot be raced by a later functional update)
@@ -621,7 +678,16 @@ class RWorker(threading.Thread):
 
     def run(self) -> None:
         while True:
-            items = [self.inq.get()]
+            if self._killed:
+                return
+            # bounded wait, not a bare get(): the idle heartbeat tick is
+            # what lets the collect loop tell "alive but idle" from
+            # "hung mid-item" without ever interrupting real work
+            try:
+                items = [self.inq.get(timeout=0.25)]
+            except queue.Empty:
+                self.heartbeat = time.monotonic()
+                continue
             # batched-inbox drain: one wake services everything already
             # queued (work for several layers backs up behind a
             # straggler; draining them in one pass avoids a
@@ -634,10 +700,48 @@ class RWorker(threading.Thread):
             for item in items:
                 if item is None or self._killed:
                     return
-                self._run_one(item)
+                self.heartbeat = time.monotonic()
+                self.processing = True
+                try:
+                    self._run_one(item)
+                finally:
+                    self.processing = False
+                    self.heartbeat = time.monotonic()
 
     def _run_one(self, item) -> None:
         tag, layer, kind, phase, r_in, sink = item
+        drop = dup = False
+        if self.chaos is not None:
+            spec = self.chaos.fire("r_step", wid=self.wid, layer=layer,
+                                   phase=phase)
+            if spec is not None:
+                if spec.kind == "crash":
+                    # abrupt death mid-item: no completion, no error
+                    # post — the thread just exits and is_alive() goes
+                    # False, which is what failover must detect
+                    self._killed = True
+                    return
+                if spec.kind == "error":
+                    from repro.chaos.plan import ChaosComputeError
+                    e: Exception = ChaosComputeError(
+                        "injected R-step compute fault")
+                    e.r_worker_context = (self.wid, layer, kind, phase)
+                    if sink is not None:
+                        sink.post_error(self.wid, tag, e)
+                    else:
+                        self.outq.put((tag, e))
+                    return
+                if spec.kind == "hang":
+                    # stall with processing=True and a stale heartbeat;
+                    # if the supervisor fails over meanwhile, the
+                    # eventual post lands in a fenced epoch and is
+                    # dropped — a short hang just completes late
+                    time.sleep(spec.hang_s)
+            spec = self.chaos.fire("completion", wid=self.wid, layer=layer,
+                                   phase=phase)
+            if spec is not None:
+                drop = spec.kind == "drop"
+                dup = spec.kind == "dup"
         try:
             t0 = time.perf_counter()
             # a chunked-prefill payload is recognized by its validity
@@ -684,6 +788,17 @@ class RWorker(threading.Thread):
                            {"layer": layer, "phase": phase, "kind": kind})
             if sink is None:                     # legacy FIFO reply
                 self.outq.put((tag, r_out))
+            elif drop:
+                # injected delivery fault: the KV append above is DONE
+                # (state advanced), only the completion message is lost
+                # — the supervisor's retry replays the step from token
+                # history, so the orphaned append is overwritten
+                pass
+            elif dup:
+                # duplicated delivery: the buffer scatter is idempotent,
+                # the collect loop must tolerate the second token
+                sink.post(self.wid, tag, host, self.lo, self.hi)
+                sink.post(self.wid, tag, host, self.lo, self.hi)
             elif self.sim_deliver_jitter > 0.0:
                 # async delivery over a jittery link: the result lands
                 # late, the worker moves on to its next inbox item
@@ -753,7 +868,10 @@ class HeteroPipelineEngine:
                  kv_tier: Any = None,
                  fleet: Any = None, schedule: str = "ooo",
                  collect_timeout_s: float = 600.0,
-                 profile_timing: bool = False):
+                 profile_timing: bool = False,
+                 chaos: Any = None,
+                 suspect_after_s: float = 120.0,
+                 suspect_strikes: int = 2):
         if num_microbatches < 1:
             raise ValueError(
                 f"num_microbatches must be >= 1, got {num_microbatches}")
@@ -793,6 +911,28 @@ class HeteroPipelineEngine:
         self.fleet = fleet
         self.schedule = schedule
         self.collect_timeout_s = float(collect_timeout_s)
+        # fault injection + suspicion-based stall detection.  The
+        # collect loop polls in short slices instead of one fatal
+        # blocking get: a pending worker that is dead, or hung past
+        # `suspect_after_s` (heartbeat stale while processing), or
+        # idle-with-empty-inbox for `suspect_strikes` consecutive polls
+        # (completion lost in flight), aborts the step with a typed
+        # StepFault the serving supervisor can heal; collect_timeout_s
+        # remains the absolute backstop.  suspect_after_s must exceed
+        # worst-case single-item service time (JIT compiles included)
+        # and any simulated delivery jitter, or healthy-but-slow
+        # workers get failed over spuriously — recovery stays correct,
+        # just wasteful.
+        self.chaos = chaos
+        self.suspect_after_s = float(suspect_after_s)
+        self.suspect_strikes = max(1, int(suspect_strikes))
+        # serving layer hook: mb -> in-flight request ids, used to put
+        # rids into stall messages so operators can correlate timelines
+        self.rids_of: Optional[Any] = None
+        # global batch rows whose migration wire payload failed its
+        # checksum on the last apply_partition (installed from `lost`
+        # instead; the serving layer re-prefills them)
+        self.corrupt_rows: List[int] = []
         # pages_per_worker sizes ONE pool = one (attn layer, micro-batch)
         # of one worker — the same per-layer-per-row convention as
         # cache_len (see RWorker docstring for the total footprint)
@@ -801,7 +941,8 @@ class HeteroPipelineEngine:
             kv_chunk=kv_chunk, quantized=quantized_kv, paged=paged_kv,
             page_size=page_size, num_pages=pages_per_worker,
             max_pages_per_seq=max_pages, prefix_cache=self.prefix_cache,
-            kv_tier=self.kv_tier, profile_timing=profile_timing)
+            kv_tier=self.kv_tier, profile_timing=profile_timing,
+            chaos=chaos)
         if fleet is not None:
             # the fleet owns worker construction: profiles -> planned
             # (possibly uneven) partition -> RWorker instances
@@ -1179,6 +1320,67 @@ class HeteroPipelineEngine:
                         self.s_states[mb][li], s_st)
 
     # -- the pipelined decode step -------------------------------------------
+    # -- stall detection ------------------------------------------------------
+    def _pending_desc(self, pending, works) -> str:
+        """Human-readable outstanding-work list for stall messages,
+        including the in-flight request ids per micro-batch (via the
+        serving layer's ``rids_of`` hook) so operators can correlate
+        a stall with request timelines."""
+        parts = []
+        for (mb, li, ph), ws in sorted(pending.items()):
+            d = (f"micro-batch {mb} layer {li} ({self.layers[li][0]}) "
+                 f"phase {ph} from worker(s) {sorted(ws)}")
+            real_mb = mb if mb < self.num_mb else works[mb - self.num_mb].mb
+            if self.rids_of is not None:
+                try:
+                    rids = list(self.rids_of(real_mb))
+                except Exception:
+                    rids = []
+                if rids:
+                    d += f" [in-flight rids: {rids}]"
+            parts.append(d)
+        return "; ".join(parts)
+
+    def _check_stall(self, pending, works, strikes, waited, step_no) -> None:
+        """Classify the workers still owing completions after an empty
+        poll window; abort the step with a typed CollectTimeout when one
+        is dead, hung past the suspicion threshold, or struck out as
+        idle-with-completions-owed (lost message)."""
+        owing: set = set()
+        for ws in pending.values():
+            owing |= ws
+        by_wid = {w.wid: w for w in self.workers}
+        now = time.monotonic()
+        dead: List[int] = []
+        hung: List[int] = []
+        lost: List[int] = []
+        for wid in sorted(owing):
+            w = by_wid.get(wid)
+            if w is None or not w.is_alive():
+                dead.append(wid)
+            elif w.processing and now - w.heartbeat > self.suspect_after_s:
+                hung.append(wid)
+            elif not w.processing and w.inq.empty():
+                lost.append(wid)
+        if not dead and not hung:
+            for wid in lost:
+                strikes[wid] = strikes.get(wid, 0) + 1
+            lost = [wid for wid in lost
+                    if strikes[wid] >= self.suspect_strikes]
+            if not lost and waited <= self.collect_timeout_s:
+                return
+        raise CollectTimeout(
+            f"decode step timed out after {waited:.1f}s waiting for "
+            f"R-worker results — "
+            + (f"dead worker(s) {dead}; " if dead else "")
+            + (f"hung worker(s) {hung} (heartbeat stale > "
+               f"{self.suspect_after_s:.1f}s); " if hung else "")
+            + (f"worker(s) {lost} idle with completions owed "
+               f"(message lost in flight?); " if lost else "")
+            + f"outstanding: {self._pending_desc(pending, works) or 'none'}",
+            dead_wids=dead, hung_wids=hung, lost_wids=lost,
+            transient=not dead and not hung, step_no=step_no) from None
+
     def decode_step(self, tokens_per_mb: Sequence[jnp.ndarray]):
         """One new token for every sequence of every micro-batch —
         event-driven: advance whichever micro-batch's R-results land
@@ -1190,7 +1392,8 @@ class HeteroPipelineEngine:
         assert len(tokens_per_mb) == self.num_mb
         pc = time.perf_counter
         stats = {"dispatch_s": 0.0, "collect_s": 0.0, "s_dispatch_s": 0.0,
-                 "r_wait_s": 0.0, "ooo_advances": 0.0, "prefill_s": 0.0}
+                 "r_wait_s": 0.0, "ooo_advances": 0.0, "prefill_s": 0.0,
+                 "dup_completion_count": 0.0}
         t_step0 = pc()
         tracer = self.tracer
         step_no = self._step_no
@@ -1338,23 +1541,29 @@ class HeteroPipelineEngine:
             stats["prefill_s"] += pc() - t0
             dispatch(wk.vmb, 0, 0, shards)
 
+        # suspicion-based stall detection: poll the sink in short slices
+        # (instead of one fatal blocking get) and classify the workers
+        # still owing completions on every empty window — dead / hung /
+        # idle-with-empty-inbox.  `strikes` counts consecutive empty
+        # windows per suspected-idle worker so a completion that is
+        # merely in flight between the post and our get is never
+        # mistaken for a lost message.
+        strikes: Dict[int, int] = {}
+        poll_s = min(max(self.suspect_after_s, 0.05),
+                     self.collect_timeout_s)
+        last_progress = pc()
         try:
             while active:
                 t0 = pc()
                 try:
-                    wid, tag, err = sink.q.get(
-                        timeout=self.collect_timeout_s)
+                    wid, tag, err = sink.q.get(timeout=poll_s)
                 except queue.Empty:
-                    waiting = "; ".join(
-                        f"micro-batch {mb} layer {li} "
-                        f"({self.layers[li][0]}) phase {ph} "
-                        f"from worker(s) {sorted(ws)}"
-                        for (mb, li, ph), ws in sorted(pending.items()))
-                    raise RuntimeError(
-                        f"timed out after {self.collect_timeout_s:.0f}s "
-                        f"waiting for R-worker results — outstanding: "
-                        f"{waiting or 'none'}") from None
-                wait = pc() - t0
+                    stats["r_wait_s"] += pc() - t0
+                    self._check_stall(pending, works, strikes,
+                                      pc() - last_progress, step_no)
+                    continue
+                last_progress = pc()
+                wait = last_progress - t0
                 stats["r_wait_s"] += wait
                 if works and all(lg is not None for lg in logits_out):
                     # every decode micro-batch has already emitted: this
@@ -1367,20 +1576,30 @@ class HeteroPipelineEngine:
                 kind = self.layers[li][0]
                 if err is not None:
                     ctx = getattr(err, "r_worker_context", None)
-                    raise RuntimeError(
+                    raise WorkerStepError(
                         f"R-worker {wid} failed on micro-batch {mb}, "
                         f"layer {li} ({kind}), phase {phase}"
                         + (f" [worker context: wid={ctx[0]} lkey={ctx[1]} "
-                           f"kind={ctx[2]} phase={ctx[3]}]" if ctx else "")
+                           f"kind={ctx[2]} phase={ctx[3]}]" if ctx else ""),
+                        wid=wid,
+                        transient=bool(getattr(err, "transient", False)),
+                        step_no=step_no,
                     ) from err
                 outstanding = pending.get((mb, li, phase))
                 if outstanding is None or wid not in outstanding:
+                    if (mb, li, phase) in issue_seq:
+                        # duplicated delivery of a tag this step DID
+                        # dispatch: the buffer scatter is idempotent
+                        # (same rows, same bytes), so tolerate and count
+                        stats["dup_completion_count"] += 1.0
+                        continue
                     raise RuntimeError(
                         f"R-worker {wid} posted an unexpected completion "
                         f"for micro-batch {mb}, layer {li} ({kind}), "
                         f"phase {phase} — outstanding work: "
                         f"{sorted(pending) or 'none'}")
                 outstanding.discard(wid)
+                strikes.pop(wid, None)
                 if outstanding:
                     continue
                 del pending[(mb, li, phase)]
@@ -1473,15 +1692,28 @@ class HeteroPipelineEngine:
                 try:
                     tag, r_out = w.outq.get(timeout=self.collect_timeout_s)
                 except queue.Empty:
-                    raise RuntimeError(
+                    rids = []
+                    if self.rids_of is not None:
+                        try:
+                            rids = list(self.rids_of(mb))
+                        except Exception:
+                            rids = []
+                    raise CollectTimeout(
                         f"timed out after {self.collect_timeout_s:.0f}s "
                         f"waiting for R-worker {w.wid} on micro-batch {mb}, "
-                        f"layer {li} ({kind}), phase {phase}") from None
+                        f"layer {li} ({kind}), phase {phase}"
+                        + (f" [in-flight rids: {rids}]" if rids else ""),
+                        dead_wids=[w.wid] if not w.is_alive() else [],
+                        hung_wids=[w.wid] if w.is_alive() else [],
+                    ) from None
                 stats["r_wait_s"] += pc() - t0
                 if isinstance(r_out, Exception):
-                    raise RuntimeError(
+                    raise WorkerStepError(
                         f"R-worker {w.wid} failed on micro-batch {mb}, "
-                        f"layer {li} ({kind}), phase {phase}") from r_out
+                        f"layer {li} ({kind}), phase {phase}",
+                        wid=w.wid,
+                        transient=bool(getattr(r_out, "transient", False)),
+                    ) from r_out
                 if tag != (mb, li, phase):
                     raise RuntimeError(
                         f"R-worker {w.wid} returned a result for "
@@ -1773,11 +2005,50 @@ class HeteroPipelineEngine:
         lkeys = sorted({k for w in workers + dropped for k in w.state}
                        | (set(lost) if lost else set()))
         exports: Dict[int, Dict[int, Any]] = {lk: {} for lk in lkeys}
+        # checksummed KV transport: digest each wire payload at export
+        # time, verify before install.  In-process this guards against
+        # injected (chaos "wire_corrupt") and accidental mutation; on a
+        # real deployment the digest rides the serialized payload.
+        from repro.chaos.checksum import tree_digest
+        sums: Dict[Tuple[int, int], bytes] = {}
         for w in sources:
             for lk in lkeys:
                 if lk in w.state:
-                    exports[lk][id(w)] = w.export_rows(
+                    exports[lk][id(w)] = wire = w.export_rows(
                         lk, np.arange(w.hi - w.lo))
+                    sums[(lk, id(w))] = tree_digest(wire)
+        if self.chaos is not None:
+            for w in sources:
+                for lk in lkeys:
+                    if id(w) in exports[lk] and self.chaos.fire(
+                            "wire_corrupt", wid=w.wid, lkey=lk,
+                            where="migration"):
+                        exports[lk][id(w)] = self.chaos.corrupt_tree(
+                            exports[lk][id(w)])
+        # verification: a corrupted export is DROPPED, its rows fall
+        # back to `lost` (zeros synthesized if the caller gave none) and
+        # are reported in self.corrupt_rows for the serving layer to
+        # re-prefill — detected degradation, never silent garbage
+        self.corrupt_rows = []
+        span_of = {wid_: (s_lo, s_hi) for wid_, s_lo, s_hi in old_spans}
+        corrupt_lkeys = set()
+        for (lk, wid_), d0 in sums.items():
+            if tree_digest(exports[lk][wid_]) != d0:
+                del exports[lk][wid_]
+                corrupt_lkeys.add(lk)
+                s_lo, s_hi = span_of[wid_]
+                mb = lk // self.num_layers
+                self.corrupt_rows.extend(
+                    mb * self.mb_size + r for r in range(s_lo, s_hi))
+        self.corrupt_rows = sorted(set(self.corrupt_rows))
+        if corrupt_lkeys:
+            zeros = None
+            lost = dict(lost) if lost else {}
+            for lk in corrupt_lkeys:
+                if lk not in lost:
+                    if zeros is None:
+                        zeros = self.zero_r_state()
+                    lost[lk] = zeros[lk % self.num_layers]
         for w, s in zip(workers, new_slices):
             if id(w) in changed_ids:
                 w.reassign(*s)
@@ -1829,8 +2100,20 @@ class HeteroPipelineEngine:
     def close(self) -> None:
         for w in self.workers:
             w.stop()
+        stuck = []
         for w in self.workers:
             w.join(timeout=5)
+            if w.is_alive():
+                stuck.append(w.wid)
+        if stuck:
+            # a hung worker survived the join — warn (not raise: close()
+            # runs in teardown paths, including after deliberate kills)
+            # with the ids so the leak is attributable.  The threads are
+            # daemons, so process exit is not blocked.
+            warnings.warn(
+                f"HeteroPipelineEngine.close(): R-worker(s) {stuck} did "
+                f"not exit within 5s of stop() — thread(s) leaked (hung "
+                f"mid-item?)", RuntimeWarning, stacklevel=2)
 
 
 # ---------------------------------------------------------------------------

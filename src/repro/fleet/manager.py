@@ -51,6 +51,10 @@ class FleetManager:
         self._profile_of: Dict[int, WorkerProfile] = {}   # id(worker) ->
         self._spawned_profiles: List[WorkerProfile] = []
         self._tele_busy: Optional[List[float]] = None
+        # the serving layer's re-prefill callback, stashed from pre_step
+        # so mid-serve migrations (rebalance_now) can replay rows whose
+        # wire payload failed its transport checksum
+        self._reprefill: Optional[Callable] = None
 
     # -- construction ------------------------------------------------------ #
     def spawn_workers(self, cfg: ModelConfig, mb_size: int,
@@ -108,6 +112,8 @@ class FleetManager:
         handled.  Run BEFORE dispatching a decode step, so a worker that
         died between steps never receives work it cannot answer."""
         handled = 0
+        if reprefill is not None:
+            self._reprefill = reprefill
         if not self.health_checks or self.engine is None:
             return handled
         while True:
@@ -156,6 +162,18 @@ class FleetManager:
         self._tele_busy = None               # worker list may have shrunk
         if self.rebalancer is not None:
             self.rebalancer.reset()          # measurements are stale now
+        # transport-checksum failures during the move: the engine
+        # installed `lost` filler for those rows — replay them from
+        # token history (when the serving layer gave us the callback)
+        # so detected corruption costs a re-prefill, not wrong tokens
+        bad = list(getattr(self.engine, "corrupt_rows", []))
+        replayed = 0
+        if bad:
+            if self._reprefill is not None:
+                replayed = self._reprefill(bad)
+            self.telemetry.record_event(
+                self.step, "corruption", source="migration-wire",
+                rows=len(bad), replayed=replayed)
         self.telemetry.record_event(
             self.step, "migration", moved_rows=moved, skew=skew,
             slices=list(self.engine.slices),
@@ -202,7 +220,18 @@ class FleetManager:
         mode = self.recovery_mode
         if mode == "snapshot":
             if self.snapshots.available():
-                lost = self.snapshots.payload()
+                from repro.chaos.checksum import ChecksumError
+                try:
+                    lost = self.snapshots.payload()
+                except ChecksumError:
+                    # corrupted snapshot: refuse the restore — recover
+                    # exactly via re-prefill when the serving layer gave
+                    # us its callback, zeros otherwise (detected, never
+                    # silent garbage)
+                    self.telemetry.record_event(
+                        self.step, "corruption", source="snapshot",
+                        snapshot_step=self.snapshots.step)
+                    mode = "reprefill" if reprefill is not None else "zeros"
             else:
                 mode = "zeros"               # nothing snapshotted yet
         eng.remove_worker(widx, new_slices=new_slices, lost=lost)
@@ -211,6 +240,11 @@ class FleetManager:
             self.rebalancer.reset()
         rows = [mb * eng.mb_size + r for mb in range(eng.num_mb)
                 for r in range(*dead_slice)]
+        # rows whose migration wire payload failed its checksum fell
+        # back to `lost` during the repartition — fold them into the
+        # replay set so they also re-prefill exactly
+        rows += [r for r in getattr(eng, "corrupt_rows", [])
+                 if r not in rows]
         replayed = 0
         if mode == "reprefill":
             if reprefill is None:

@@ -15,11 +15,19 @@ cost the whole batch its progress.  Two recovery sources are supported:
   history; see ``ServingEngine._replay_rows``).  Exact, costs one
   prefill; the snapshot path costs host memory instead.
 
-Health checking is deliberately boring: an R-worker here is a thread, so
-death == ``not is_alive()``; a remote deployment would swap in a
-heartbeat with the same interface.  Failures are detected *between*
-decode steps — a worker dying mid-step surfaces as that step's collect
-timeout, after which the same recovery path applies.
+Health checking has two layers.  Between decode steps, death ==
+``not is_alive()`` (``dead_workers``, consumed by ``FleetManager.
+pre_step``).  *Mid-step*, the engine's collect loop runs per-worker
+heartbeat suspicion (see ``HeteroPipelineEngine._check_stall``): a
+pending worker that is dead, hung past ``suspect_after_s``, or idle
+with completions owed aborts the step with a typed ``StepFault``, and
+the serving layer's supervisor (``ServingEngine``) retries/fails over
+inline — same recovery path, no longer limited to step boundaries.
+
+Snapshot payloads are checksummed (blake2b, ``repro.chaos.checksum``)
+at capture time and verified at restore: a corrupted snapshot raises
+``ChecksumError`` and the manager degrades to zeros + re-prefill
+instead of installing garbage KV.
 """
 from __future__ import annotations
 
@@ -51,6 +59,7 @@ class KVSnapshotStore:
         self.interval = int(interval)
         self.step = -1                       # step of the stored snapshot
         self.data: Optional[Dict[int, Any]] = None
+        self.checksums: Dict[int, bytes] = {}   # lkey -> capture digest
 
     def available(self) -> bool:
         return self.data is not None
@@ -86,6 +95,13 @@ class KVSnapshotStore:
                 import jax
                 data[lk] = jax.tree.map(
                     lambda *xs: np.concatenate(xs, axis=0), *parts)
+        from repro.chaos.checksum import tree_digest
+        self.checksums = {lk: tree_digest(wire) for lk, wire in data.items()}
+        chaos = getattr(engine, "chaos", None)
+        if chaos is not None:
+            for lk in data:
+                if chaos.fire("wire_corrupt", where="snapshot", lkey=lk):
+                    data[lk] = chaos.corrupt_tree(data[lk])
         self.data, self.step = data, step
         # parked pages ride the tier transport instead of the wire
         # snapshot (they belong to no row): copy them to the host tier
@@ -99,6 +115,17 @@ class KVSnapshotStore:
                     alloc.flush_parked_to_tier()
 
     def payload(self) -> Dict[int, Any]:
+        """The stored wire payload, verified against its capture-time
+        checksums — raises ``ChecksumError`` on corruption so callers
+        degrade to zeros + re-prefill rather than restore garbage."""
         if self.data is None:
             raise RuntimeError("no snapshot taken yet")
+        from repro.chaos.checksum import ChecksumError, tree_digest
+        for lk, wire in self.data.items():
+            want = self.checksums.get(lk)
+            if want and tree_digest(wire) != want:
+                raise ChecksumError(
+                    f"KV snapshot (step {self.step}) failed its checksum "
+                    f"for layer key {lk} — refusing to restore corrupted "
+                    f"KV; recover via zeros + re-prefill instead")
         return self.data

@@ -84,3 +84,8 @@ class Observability:
         self.generated = r.counter("generated_tokens")
         self.prefix_hits = r.counter("prefix_hit_count")
         self.restores = r.counter("restored_count")
+        # self-healing: faults detected / recoveries completed by the
+        # step supervisor, plus time-to-recover per fault burst
+        self.faults = r.counter("fault_count")
+        self.recovered = r.counter("recovered_count")
+        self.mttr = r.histogram("mttr_s")

@@ -62,7 +62,7 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,7 @@ import numpy as np
 
 from repro.core.config import ModelConfig
 from repro.core.hetero import (ColocatedEngine, HeteroPipelineEngine,
-                               batch_slice, per_layer_state)
+                               StepFault, batch_slice, per_layer_state)
 from repro.core import decompose as D
 from repro.core.schedule import LoadController, microbatch_size, w_prime_max
 from repro.models import model as M
@@ -180,7 +180,12 @@ class ServingEngine:
                  profile_timing: bool = False, prefill_chunk: int = 0,
                  prefix_cache: bool = False, kv_tiering=None,
                  preempt_after: int = 0,
-                 observability=False):
+                 observability=False,
+                 chaos=None,
+                 suspect_after_s: float = 120.0,
+                 suspect_strikes: int = 2,
+                 max_step_retries: int = 4,
+                 retry_backoff_s: float = 0.02):
         if backend not in ("colocated", "hetero"):
             raise ValueError(
                 f"backend must be 'colocated' or 'hetero', got {backend!r}")
@@ -277,6 +282,19 @@ class ServingEngine:
         self.finished: List[Request] = []
         self._last_tok = np.zeros((batch,), np.int32)
         self.fleet = fleet
+        # self-healing supervision: chaos is the (optional) fault plan
+        # injected into every layer below; the retry/failover loop in
+        # _decode_supervised runs regardless (real faults need no plan)
+        self.chaos = chaos
+        self.max_step_retries = max(0, int(max_step_retries))
+        self.retry_backoff_s = max(0.0, float(retry_backoff_s))
+        self.faults = 0
+        self.recoveries = 0
+        # forensic log: one dict per detected fault ({step, kind, wids,
+        # transient, recovered, mttr_s}) — bench_chaos reads this
+        self.fault_events: List[Dict[str, Any]] = []
+        if self.kv_tier is not None and chaos is not None:
+            self.kv_tier.chaos = chaos
 
         if backend == "hetero":
             self.engine = HeteroPipelineEngine(
@@ -289,9 +307,13 @@ class ServingEngine:
                 kv_tier=self.kv_tier,
                 fleet=fleet, schedule=schedule,
                 collect_timeout_s=collect_timeout_s,
-                profile_timing=profile_timing)
+                profile_timing=profile_timing,
+                chaos=chaos, suspect_after_s=suspect_after_s,
+                suspect_strikes=suspect_strikes)
             self.num_mb = num_microbatches
             self.mb_size = batch // num_microbatches
+            # stall messages name the in-flight rids of each micro-batch
+            self.engine.rids_of = self._rids_of_mb
             for mb in range(self.num_mb):
                 self._hetero_init_empty(mb)
         else:
@@ -1056,6 +1078,174 @@ class ServingEngine:
         if self.load_ctl is not None and self._w_lim0 is not None:
             self.load_ctl.w_lim = self._w_lim0 * max(0.0, weight_frac)
 
+    # ------------------------------------------------------------------ #
+    # self-healing: the step supervisor.  decode_step aborts with a typed
+    # StepFault (dead / hung / suspected-lost worker, transient I/O or
+    # pool hiccup) after fencing the completion sink; this layer owns
+    # the token history, so it can always rebuild a consistent KV state
+    # and retry the SAME step with the SAME tokens (sampling RNG is only
+    # consumed after decode_step returns) — recovery is token-exact.
+    # ------------------------------------------------------------------ #
+    def _rids_of_mb(self, mb: int) -> List[int]:
+        """Request ids resident in micro-batch ``mb`` — wired into the
+        pipelined engine so its timeout messages can name the affected
+        requests, not just worker/layer coordinates."""
+        lo = int(mb) * self.mb_size
+        return [r.rid for r in self.slots[lo:lo + self.mb_size]
+                if r is not None]
+
+    def _decode_supervised(self, toks) -> jnp.ndarray:
+        """Run the pipelined decode step under the supervisor: catch
+        StepFault, heal (backoff-retry transients, fail over dead/hung
+        workers, re-prefill every live row), and retry until the step
+        lands or the retry budget is spent.  Non-StepFault exceptions
+        propagate untouched — they are bugs, not faults."""
+        split = [toks[m * self.mb_size:(m + 1) * self.mb_size]
+                 for m in range(self.num_mb)]
+        attempt, t_first = 0, 0.0
+        while True:
+            try:
+                parts = self.engine.decode_step(split)
+            except StepFault as fault:
+                if attempt == 0:
+                    t_first = time.monotonic()
+                attempt += 1
+                self._heal_step_fault(fault, attempt)
+                continue
+            if attempt:
+                self._note_recovered(attempt, time.monotonic() - t_first)
+            return jnp.concatenate(parts, axis=0)
+
+    def _heal_step_fault(self, fault: StepFault, attempt: int) -> None:
+        """One recovery round for an aborted decode step.  Re-raises
+        when the fault is not healable (deterministic worker error, no
+        survivor to adopt rows, retry budget exhausted)."""
+        self.faults += 1
+        implicated = tuple(sorted(set(fault.dead_wids)
+                                  | set(fault.hung_wids)))
+        self.fault_events.append({
+            "step": self.step_idx, "attempt": attempt,
+            "kind": type(fault).__name__, "implicated": list(implicated),
+            "lost": list(fault.lost_wids),
+            "transient": bool(fault.transient), "msg": str(fault)})
+        if self.obs is not None:
+            self.obs.faults.inc()
+            for r in self.slots:
+                if r is not None:
+                    r.mark("fault", self.step_idx)
+        if self.fleet is not None:
+            self.fleet.telemetry.record_event(
+                self.step_idx, "fault", fault_kind=type(fault).__name__,
+                attempt=attempt, implicated=list(implicated),
+                transient=bool(fault.transient))
+        # a deterministic worker-side error (no dead/hung worker to
+        # remove, not marked transient) would fail identically on
+        # retry — surface it like the unsupervised engine did
+        if fault.wid is not None and not fault.transient \
+                and not implicated:
+            raise fault
+        if attempt > self.max_step_retries:
+            raise fault
+        # suspicion is not conviction: a worker flagged hung may merely
+        # be stalled on one slow item (host jitter, worker-side JIT
+        # compile).  Grant a grace window — one that a chaos/real hang
+        # outlasts but a straggler does not — and spare any worker that
+        # finishes its item or shows a fresh heartbeat.  A spared
+        # worker costs only the step retry, not a failover.
+        to_remove = []
+        grace = max(self.engine.suspect_after_s, 0.05)
+        for wid in implicated:
+            w = next((w for w in self.engine.workers if w.wid == wid),
+                     None)
+            if w is None:
+                continue                    # already failed over
+            if wid in fault.hung_wids and w.is_alive():
+                deadline = time.monotonic() + grace
+                spared = False
+                while time.monotonic() < deadline:
+                    if not w.processing or (time.monotonic()
+                                            - w.heartbeat) <= grace:
+                        spared = True
+                        break
+                    time.sleep(0.01)
+                if spared:
+                    continue
+            to_remove.append(wid)
+        # survivors may still be chewing stale queued items of the
+        # aborted step; their posts are fenced off, but their KV
+        # appends are not — wait for quiescence before exporting or
+        # overwriting any state
+        self._quiesce_workers(skip=to_remove)
+        for wid in to_remove:
+            widx = next((i for i, w in enumerate(self.engine.workers)
+                         if w.wid == wid), None)
+            if widx is None:
+                continue
+            self.engine.workers[widx].kill()
+            if len(self.engine.workers) <= 1:
+                raise fault      # no survivor to adopt its rows
+            if self.fleet is not None:
+                self.fleet.handle_failure(
+                    widx, reprefill=self._replay_rows,
+                    on_topology=self._recost_admission)
+            else:
+                self.engine.remove_worker(widx)
+        if not to_remove:
+            # transient (dropped completion, pool/tier hiccup, spared
+            # straggler): short escalating backoff before the retry
+            time.sleep(min(0.5,
+                           self.retry_backoff_s * (2 ** (attempt - 1))))
+        self._resync_after_fault()
+
+    def _quiesce_workers(self, skip=(), timeout_s: float = 5.0) -> None:
+        """Wait (bounded) until live workers have drained their input
+        queues and stepped off any in-flight item.  Implicated workers
+        are skipped — a hung one would pin the wait for its full sleep."""
+        deadline = time.monotonic() + timeout_s
+        for w in self.engine.workers:
+            if w.wid in skip or not w.is_alive():
+                continue
+            while ((not w.inq.empty()
+                    or getattr(w, "processing", False))
+                   and time.monotonic() < deadline):
+                time.sleep(0.001)
+
+    def _resync_after_fault(self) -> None:
+        """Rebuild a cross-layer-consistent KV state after an aborted
+        step: the abort left some layers with this step's append and
+        some without, so re-prefill EVERY live row from token history
+        (orphaned partial appends are overwritten, lengths reset), then
+        re-arm chunked prefill from each sequence's streamed position."""
+        rows = [r for r, req in enumerate(self.slots) if req is not None]
+        if rows:
+            self._replay_rows(rows)
+        fresh = [r for r, req in enumerate(self.slots)
+                 if req is not None and req.status is Status.PREFILLING
+                 and req.prefill_pos == 0]
+        if fresh:
+            self.engine.begin_prefill_rows(fresh)
+        if self._uses_chunks:
+            # the aborted step consumed the queued chunks without
+            # applying their progress — requeue from prefill_pos
+            self.engine._prefill_inbox.clear()
+            self._queue_prefill_chunks()
+
+    def _note_recovered(self, attempts: int, mttr_s: float) -> None:
+        self.recoveries += 1
+        self.fault_events.append({
+            "step": self.step_idx, "kind": "recovered",
+            "attempts": attempts, "mttr_s": mttr_s})
+        if self.obs is not None:
+            self.obs.recovered.inc()
+            self.obs.mttr.observe(mttr_s)
+            for r in self.slots:
+                if r is not None:
+                    r.mark("recovered", self.step_idx)
+        if self.fleet is not None:
+            self.fleet.telemetry.record_event(
+                self.step_idx, "recovered", attempts=attempts,
+                mttr_s=mttr_s)
+
     def step(self) -> StepRecord:
         pc = time.perf_counter
         fleet_wall = prefill_wall = 0.0
@@ -1105,10 +1295,7 @@ class ServingEngine:
         t0 = pc()
         toks = jnp.asarray(self._last_tok[:, None])
         if self.backend == "hetero":
-            parts = self.engine.decode_step(
-                [toks[m * self.mb_size:(m + 1) * self.mb_size]
-                 for m in range(self.num_mb)])
-            logits = jnp.concatenate(parts, axis=0)
+            logits = self._decode_supervised(toks)
         else:
             # keep lengths frozen for inactive rows (avoid cache drift)
             logits = self.engine.decode_step(toks)
@@ -1239,6 +1426,8 @@ class ServingEngine:
             sum(r is not None for r in self.slots))
         out["resident_tokens"] = float(self.resident_len())
         out["preemptions_count"] = float(self.preemptions)
+        out["fault_count"] = float(self.faults)
+        out["recovered_count"] = float(self.recoveries)
         for k, v in self.hotpath_stats().items():
             out[f"hotpath_{k}"] = float(v)
         if self.prefix_cache:

@@ -102,7 +102,7 @@ import hashlib
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -345,6 +345,10 @@ class TierEntry:
     payload: Dict[int, Dict[str, np.ndarray]]   # layer idx -> pool arrays
     tier: str = "dram"
     tokens: int = 0
+    # blake2b over the payload tree, stamped at put() time and verified
+    # at pop(): host-side bit rot restores as a detected miss (the row
+    # re-prefills) instead of silently decoding garbage
+    checksum: bytes = b""
 
 
 def _payload_nbytes(payload: Dict[int, Dict[str, np.ndarray]]) -> int:
@@ -365,12 +369,18 @@ class HostTier:
     R-worker threads swap out during decode growth while the engine
     thread restores at admission."""
 
-    def __init__(self, cfg: Optional[TierConfig] = None):
+    def __init__(self, cfg: Optional[TierConfig] = None,
+                 chaos: Any = None):
         self.cfg = cfg or TierConfig()
         self.entries: "OrderedDict[bytes, TierEntry]" = OrderedDict()
         self._lock = threading.RLock()
+        # chaos.FaultPlan (or None): injected I/O failures fire at the
+        # TOP of put()/pop(), before any stats/state mutation, so an
+        # aborted transfer leaves the tier exactly as it was
+        self.chaos = chaos
         self.stats = {"swapped_out": 0, "restored": 0, "spilled": 0,
                       "dropped": 0, "bytes_out": 0, "bytes_in": 0,
+                      "put_failed": 0, "get_failed": 0, "corrupt": 0,
                       "sim_seconds": 0.0}
 
     def _account(self, nbytes: int, tier: str) -> None:
@@ -383,6 +393,17 @@ class HostTier:
         pools can park the same chain; identical digests carry identical
         bytes, so dropping the duplicate loses nothing).  A full DRAM
         tier spills its LRU entries to disk — never drops payloads."""
+        if self.chaos is not None and self.chaos.fire("tier_put"):
+            with self._lock:
+                self.stats["put_failed"] += 1
+            from repro.chaos.plan import ChaosIOError
+            raise ChaosIOError("injected host-tier write failure")
+        if not entry.checksum:
+            from repro.chaos.checksum import payload_checksum
+            entry.checksum = payload_checksum(entry.payload)
+        if self.chaos is not None and self.chaos.fire("tier_corrupt"):
+            # bit rot AFTER the checksum was stamped — pop() detects it
+            entry.payload = self.chaos.corrupt_tree(entry.payload)
         with self._lock:
             nbytes = _payload_nbytes(entry.payload)
             self.stats["swapped_out"] += 1
@@ -409,11 +430,27 @@ class HostTier:
             return self.entries.get(digest)
 
     def pop(self, entry: TierEntry) -> TierEntry:
-        """Stream a page back: drop every alias digest and account the
-        restore at the entry's tier bandwidth."""
+        """Stream a page back: drop every alias digest, verify the
+        payload checksum, and account the restore at the entry's tier
+        bandwidth.  A corrupted entry is removed from the store and
+        raises ChecksumError — the caller treats it as a miss."""
+        if self.chaos is not None and self.chaos.fire("tier_get"):
+            with self._lock:
+                self.stats["get_failed"] += 1
+            from repro.chaos.plan import ChaosIOError
+            raise ChaosIOError("injected host-tier read failure")
         with self._lock:
             for d in entry.digests:
                 self.entries.pop(d, None)
+            if entry.checksum:
+                from repro.chaos.checksum import (ChecksumError,
+                                                  payload_checksum)
+                if payload_checksum(entry.payload) != entry.checksum:
+                    self.stats["corrupt"] += 1
+                    raise ChecksumError(
+                        "host-tier entry failed its payload checksum "
+                        f"({entry.tokens} tokens, tier={entry.tier}) — "
+                        "dropped; the row re-prefills")
             nbytes = _payload_nbytes(entry.payload)
             self.stats["restored"] += 1
             self.stats["bytes_in"] += nbytes
@@ -466,8 +503,15 @@ class PagedAllocator:
 
     def __init__(self, rows: int, num_pages: int, page: int,
                  max_pages_per_seq: int, prefix_cache: bool = False,
-                 tier: Optional[HostTier] = None):
+                 tier: Optional[HostTier] = None,
+                 chaos: Any = None):
         self.rows, self.num_pages, self.page = rows, num_pages, page
+        # chaos.FaultPlan (or None): the "pool" site injects TRANSIENT
+        # exhaustion into decode growth — deliberately not a MemoryError
+        # (the real-exhaustion freeze fallback would silently degrade
+        # the row); it propagates to the worker's error post and the
+        # step supervisor retries token-exactly
+        self.chaos = chaos
         self.max_pages = max_pages_per_seq
         self.tables = np.full((rows, max_pages_per_seq), -1, np.int32)
         self.lengths = np.zeros((rows,), np.int64)
@@ -529,8 +573,19 @@ class PagedAllocator:
             payload = {li: {name: np.asarray(arr[pid])
                             for name, arr in pool.items()}
                        for li, pool in pools.items()}
-            self.tier.put(TierEntry(digests=digests, payload=payload,
-                                    tokens=self.page))
+            try:
+                self.tier.put(TierEntry(digests=digests, payload=payload,
+                                        tokens=self.page))
+            except Exception:
+                # a failed tier write must NOT lose the page from both
+                # sides: fall through to drop_page + return, so the
+                # device page is still reclaimed (pool accounting stays
+                # conserved) and only the host copy is lost — a later
+                # probe of this chain misses and the row re-prefills.
+                # (Before this guard the exception escaped with the page
+                # already out of `parked` but never returned: gone from
+                # the device pool AND absent from the tier.)
+                pass
         self.prefix.drop_page(pid)
         return pid
 
@@ -571,8 +626,11 @@ class PagedAllocator:
             payload = {li: {name: np.asarray(arr[pid])
                             for name, arr in pool.items()}
                        for li, pool in pools.items()}
-            self.tier.put(TierEntry(digests=digests, payload=payload,
-                                    tokens=self.page))
+            try:
+                self.tier.put(TierEntry(digests=digests, payload=payload,
+                                        tokens=self.page))
+            except Exception:
+                continue    # snapshot copy lost; device page untouched
             n += 1
         return n
 
@@ -745,6 +803,10 @@ class PagedAllocator:
         policy-admitted load; ``admit`` (admission time, synchronous)
         still raises on exhaustion."""
         cap = self.max_pages * self.page
+        if self.chaos is not None and self.chaos.fire("pool"):
+            from repro.chaos.plan import ChaosPoolExhausted
+            raise ChaosPoolExhausted(
+                "injected transient pool exhaustion (decode growth)")
         changed = False
         rows = self.active & ~self.frozen
         if mask is not None:
@@ -776,6 +838,10 @@ class PagedAllocator:
         the serving layer's admission backpressure makes that
         unreachable under policy-admitted load."""
         cap = self.max_pages * self.page
+        if self.chaos is not None and self.chaos.fire("pool"):
+            from repro.chaos.plan import ChaosPoolExhausted
+            raise ChaosPoolExhausted(
+                "injected transient pool exhaustion (chunk append)")
         changed = False
         for row in np.nonzero(np.asarray(counts) > 0)[0]:
             row = int(row)
@@ -885,7 +951,16 @@ class PagedAllocator:
             pid = self._take_page()
         except MemoryError:
             return None
-        entry = self.tier.pop(entry)
+        try:
+            entry = self.tier.pop(entry)
+        except Exception:
+            # restore I/O failure or checksum corruption: hand the page
+            # just taken back to the free list and report a miss — the
+            # caller re-prefills the suffix.  (Before this guard the
+            # exception escaped with `pid` held by nobody: not free, not
+            # parked, not in any table — a permanent pool leak.)
+            self.free.append(pid)
+            return None
         for d in entry.digests:
             self.prefix.put(d, pid)
         self.parked[pid] = None

@@ -50,6 +50,35 @@ def random_spec(rng, cfg, n, p_lo=3, p_hi=15, max_new=5, spread=10):
              max_new, int(rng.integers(0, spread))) for _ in range(n)]
 
 
+# ---------------------------------------------------------------------------
+# chaos harness helpers (tests/test_chaos.py and benchmarks/bench_chaos.py
+# drive the same fault vocabulary)
+# ---------------------------------------------------------------------------
+# supervision kwargs for fault-injection serves: an aggressive suspicion
+# threshold so hang/crash detection fits in test time (the production
+# default is 120s so worker-side JIT compiles are never misclassified)
+CHAOS_KW = dict(suspect_after_s=0.6, collect_timeout_s=30.0)
+
+
+def fault_specs(fault, wid=1):
+    """The chaos matrix's named fault classes as FaultSpec lists.  The
+    ``after`` offsets sit past the JIT warmup window — to the heartbeat
+    a compiling worker is indistinguishable from a hung one."""
+    from repro.chaos import FaultSpec
+    return {
+        "crash": [FaultSpec(site="r_step", kind="crash", wid=wid,
+                            after=40)],
+        "hang": [FaultSpec(site="r_step", kind="hang", wid=wid, after=40,
+                           hang_s=2.5)],
+        "error": [FaultSpec(site="r_step", kind="error", wid=wid,
+                            after=40)],
+        "drop": [FaultSpec(site="completion", kind="drop", after=15)],
+        "dup": [FaultSpec(site="completion", kind="dup", after=15)],
+        "pool": [FaultSpec(site="pool", after=16)],
+        "tier_put": [FaultSpec(site="tier_put", times=2)],
+    }[fault]
+
+
 def serve_trace(params, cfg, spec, batch=4, cache_len=48, max_steps=400,
                 preempt_at=None, **kw):
     """Serve (prompt, max_new, arrive_step) specs on a ServingEngine
