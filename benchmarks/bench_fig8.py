@@ -3,7 +3,6 @@ which justifies the paper's reduced-layer evaluation methodology (and
 ours: smoke models are reduced the same way)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -4,16 +4,12 @@ micro-benchmark of T(B) and R on THIS host (the paper's methodology:
 'based on profiling result of a micro-benchmark')."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import bench_model, csv_row, timeit
 from repro.core import perfmodel as P
 from repro.core.config import get_arch
-from repro.models import layers as L
 
 
 def run(print_fn=print):

@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import bench_model, csv_row
 from repro.core.hetero import HeteroPipelineEngine

@@ -9,8 +9,6 @@ Two views:
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from benchmarks.common import bench_model, csv_row
 from repro.core import schedule as S
@@ -70,7 +68,6 @@ def run(print_fn=print):
     # decode-only step time: StepRecord.wall is split since PR 4, so
     # admission/prefill bursts no longer poison the step-latency rows
     # (baseline reset — rows before the split are not comparable)
-    wg = np.mean([x.decode_wall for x in greedy if x.active])
     ws = np.mean([x.decode_wall for x in sls_r if x.active])
     out["engine"] = (ps / pg,)
     print_fn(csv_row("sls_engine_peak_resident", ws * 1e6,

@@ -17,7 +17,6 @@ import numpy as np
 
 from benchmarks.common import bench_model, csv_row
 from repro.core.hetero import ColocatedEngine, HeteroPipelineEngine
-from repro.models import model as M
 
 
 def _tok_s(step_fn, batch, steps=20, repeats=3):

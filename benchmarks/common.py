@@ -6,7 +6,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 

@@ -18,9 +18,7 @@ methodology).
 from __future__ import annotations
 
 import json
-import math
 import os
-from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.core.config import SHAPES, ModelConfig, get_arch

@@ -1,0 +1,31 @@
+"""repro.analysis — codebase-invariant lint suite + lock sanitizer.
+
+Static half: ``python -m repro.analysis`` runs the RA0xx checkers
+(see ``--list``) over ``src/`` with ``tests/``/``benchmarks/`` as
+cross-reference evidence.  Dynamic half: :mod:`repro.analysis.
+lockwitness` instruments every ``make_lock()`` lock in the stack when
+``REPRO_LOCK_WITNESS`` is set and reports acquisition-order
+inversions and hold-time outliers.
+"""
+from repro.analysis.core import (Checker, Finding, Project,  # noqa: F401 - public API re-exports
+                                 SourceFile, Suppression,
+                                 SuppressionHygiene, report_json,
+                                 run_checks)
+from repro.analysis.lockwitness import (WITNESS, LockWitness,  # noqa: F401 - public API re-exports
+                                        WitnessedLock, make_lock)
+from repro.analysis.ra001_locks import LockDiscipline  # noqa: F401 - public API re-exports
+from repro.analysis.ra002_jit import JitPurity  # noqa: F401 - public API re-exports
+from repro.analysis.ra003_simtime import SimTimeDiscipline  # noqa: F401 - public API re-exports
+from repro.analysis.ra004_chaos import ChaosSiteCrossCheck  # noqa: F401 - public API re-exports
+from repro.analysis.ra005_metrics import MetricsKeySchema  # noqa: F401 - public API re-exports
+
+ALL_CHECKERS = (LockDiscipline, JitPurity, SimTimeDiscipline,
+                ChaosSiteCrossCheck, MetricsKeySchema)
+
+__all__ = [
+    "ALL_CHECKERS", "Checker", "ChaosSiteCrossCheck", "Finding",
+    "JitPurity", "LockDiscipline", "LockWitness", "MetricsKeySchema",
+    "Project", "SimTimeDiscipline", "SourceFile", "Suppression",
+    "SuppressionHygiene", "WITNESS", "WitnessedLock", "make_lock",
+    "report_json", "run_checks",
+]

@@ -1,0 +1,109 @@
+"""CLI: ``python -m repro.analysis [paths...] [options]``.
+
+Defaults to analyzing ``src/`` with ``tests/`` + ``benchmarks/`` as
+cross-reference evidence, rooted at the repo root (located by walking
+up from this file past ``src/``).  Exit status: 0 when no findings
+(always, unless ``--strict``); under ``--strict`` any finding — or a
+suppression-hygiene violation — exits 1.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List
+
+from repro.analysis import (ALL_CHECKERS, Project, SuppressionHygiene,
+                            report_json, run_checks)
+
+
+def _repo_root() -> Path:
+    here = Path(__file__).resolve()
+    for parent in here.parents:
+        if parent.name == "src":
+            return parent.parent
+    return Path.cwd()
+
+
+def main(argv: List[str] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="codebase-invariant lint suite (RA0xx checks)")
+    parser.add_argument(
+        "paths", nargs="*", type=Path,
+        help="files/dirs to analyze (default: <repo>/src)")
+    parser.add_argument(
+        "--root", type=Path, default=None,
+        help="repo root for relative paths (default: autodetected)")
+    parser.add_argument(
+        "--ref", action="append", type=Path, default=None,
+        help="cross-reference roots, repeatable (default: tests, "
+             "benchmarks)")
+    parser.add_argument(
+        "--select", default=None, metavar="RA001,RA004",
+        help="run only these checks")
+    parser.add_argument(
+        "--disable", default=None, metavar="RA002",
+        help="skip these checks")
+    parser.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 on any finding")
+    parser.add_argument(
+        "--json", type=Path, default=None, metavar="OUT",
+        help="write machine-readable findings + artifacts ('-' for "
+             "stdout)")
+    parser.add_argument(
+        "--list", action="store_true", help="list checks and exit")
+    args = parser.parse_args(argv)
+
+    checkers = [cls() for cls in ALL_CHECKERS]
+    if args.list:
+        for ch in checkers + [SuppressionHygiene()]:
+            print(f"{ch.code}  {ch.name:<14} {ch.describe}")
+        return 0
+    if args.select:
+        wanted = {c.strip().upper() for c in args.select.split(",")}
+        checkers = [ch for ch in checkers if ch.code in wanted]
+        unknown = wanted - {ch.code for ch in checkers} - {"RA000"}
+        if unknown:
+            parser.error(f"unknown check(s): {sorted(unknown)}")
+    if args.disable:
+        off = {c.strip().upper() for c in args.disable.split(",")}
+        checkers = [ch for ch in checkers if ch.code not in off]
+    # the meta-check runs unless explicitly disabled
+    if not (args.disable and "RA000" in
+            {c.strip().upper() for c in args.disable.split(",")}):
+        checkers.append(SuppressionHygiene())
+
+    root = (args.root or _repo_root()).resolve()
+    src_paths = args.paths or [root / "src"]
+    ref_paths = args.ref if args.ref is not None else [
+        p for p in (root / "tests", root / "benchmarks") if p.is_dir()]
+    missing = [p for p in list(src_paths) + list(ref_paths)
+               if not (p if p.is_absolute() else root / p).exists()]
+    if missing:
+        parser.error(f"path(s) not found: {[str(p) for p in missing]}")
+
+    project = Project(root, src_paths, ref_paths)
+    report = run_checks(project, checkers)
+
+    json_to_stdout = args.json is not None and str(args.json) == "-"
+    if args.json:
+        payload = report_json(report, args.strict)
+        if json_to_stdout:
+            print(payload)
+        else:
+            args.json.write_text(payload + "\n")
+    if not json_to_stdout:          # keep stdout machine-parseable
+        for f in report["findings"]:
+            print(f.render())
+    n, s = len(report["findings"]), len(report["suppressed"])
+    files = len(project.src_files)
+    print(f"repro.analysis: {files} file(s), "
+          f"{len(checkers)} check(s), {n} finding(s)"
+          + (f", {s} suppressed" if s else ""), file=sys.stderr)
+    return 1 if (args.strict and n) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

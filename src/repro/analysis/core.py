@@ -1,0 +1,275 @@
+"""The lint framework under ``python -m repro.analysis``.
+
+This package encodes *this repo's own* concurrency / JIT / schema
+invariants as AST checkers (see ``python -m repro.analysis --list``).
+General-style linting stays in ruff; these checks know about the
+hetero serving stack — which classes own locks, which callables get
+traced by ``jax.jit``, which stats keys the obs schema blesses — and
+flag violations a generic linter cannot see.
+
+Framework pieces:
+
+- :class:`SourceFile` — one parsed file: AST + per-line ``# noqa:
+  RA0xx`` suppressions (parsed with :mod:`tokenize`, so strings that
+  merely *contain* "noqa" do not suppress anything).
+- :class:`Project` — the file set a run analyzes (``src`` roots that
+  get findings, plus ``tests``/``benchmarks`` roots that only serve as
+  cross-reference evidence, e.g. RA004's "every chaos site has a test").
+- :class:`Checker` — base class; subclasses set ``code``/``name``/
+  ``describe`` and implement ``run(project) -> [Finding]``.  A checker
+  may deposit machine-readable artifacts (e.g. RA001's lock-order
+  graph) in ``self.artifacts`` for the JSON report.
+- :func:`run_checks` — runs a checker list, splits suppressed findings
+  out, assembles the report dict the CLI renders/serializes.
+
+A finding is suppressed by ``# noqa: RA001`` (or a comma list, or bare
+``# noqa``) on the *first physical line* of the flagged statement.
+Suppressions are expected to carry a justification in the trailing
+comment text — RA000 (the meta-check, always on) flags bare
+suppressions that don't.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_NOQA_RE = re.compile(
+    r"#\s*noqa(?P<codes>:\s*[A-Z]+[0-9]+(?:\s*,\s*[A-Z]+[0-9]+)*)?"
+    r"(?P<rest>.*)", re.IGNORECASE)
+
+
+@dataclass
+class Finding:
+    """One rule violation at a source location."""
+    check: str                  # "RA001"
+    path: str                   # repo-relative where possible
+    line: int
+    col: int
+    message: str
+
+    def key(self) -> Tuple:
+        return (self.path, self.line, self.col, self.check)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.check} " \
+               f"{self.message}"
+
+    def as_dict(self) -> Dict:
+        return {"check": self.check, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+@dataclass
+class Suppression:
+    line: int
+    codes: Optional[Set[str]]   # None = bare/blanket form (all codes)
+    justified: bool             # trailing text beyond the code list
+
+
+class SourceFile:
+    """One parsed source file plus its suppression table."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree = ast.parse(self.text, filename=str(path))
+        except SyntaxError as e:          # surfaced as a finding upstream
+            self.parse_error = f"{e.msg} (line {e.lineno})"
+        self.suppressions: Dict[int, Suppression] = self._parse_noqa()
+
+    def _parse_noqa(self) -> Dict[int, Suppression]:
+        out: Dict[int, Suppression] = {}
+        try:
+            tokens = tokenize.generate_tokens(
+                io.StringIO(self.text).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _NOQA_RE.search(tok.string)
+                if not m:
+                    continue
+                codes: Optional[Set[str]] = None
+                if m.group("codes"):
+                    codes = {c.strip().upper() for c in
+                             m.group("codes").lstrip(":").split(",")}
+                rest = (m.group("rest") or "").strip(" -—:")
+                out[tok.start[0]] = Suppression(
+                    line=tok.start[0], codes=codes, justified=bool(rest))
+        except tokenize.TokenizeError:
+            pass
+        return out
+
+    def suppressed(self, code: str, line: int) -> bool:
+        s = self.suppressions.get(line)
+        if s is None:
+            return False
+        return s.codes is None or code in s.codes
+
+
+class Project:
+    """The file universe of one analysis run.
+
+    ``src_files`` receive findings; ``ref_files`` (tests, benchmarks)
+    are parsed only as cross-reference evidence.  Paths are resolved
+    against ``root`` and deduplicated; non-Python and unreadable files
+    are skipped silently (the CLI validates existence up front)."""
+
+    def __init__(self, root: Path, src_paths: Sequence[Path],
+                 ref_paths: Sequence[Path] = ()):
+        self.root = root
+        self.src_files: List[SourceFile] = self._load(src_paths)
+        self.ref_files: List[SourceFile] = self._load(ref_paths)
+
+    def _load(self, paths: Sequence[Path]) -> List[SourceFile]:
+        seen: Set[Path] = set()
+        out: List[SourceFile] = []
+        for p in paths:
+            p = p if p.is_absolute() else self.root / p
+            files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+            for f in files:
+                f = f.resolve()
+                if f in seen or f.suffix != ".py":
+                    continue
+                seen.add(f)
+                try:
+                    rel = str(f.relative_to(self.root))
+                except ValueError:
+                    rel = str(f)
+                try:
+                    out.append(SourceFile(f, rel))
+                except (OSError, UnicodeDecodeError):
+                    continue
+        return out
+
+    def all_files(self) -> List[SourceFile]:
+        return self.src_files + self.ref_files
+
+    def find(self, rel_suffix: str) -> Optional[SourceFile]:
+        for sf in self.all_files():
+            if sf.rel.endswith(rel_suffix):
+                return sf
+        return None
+
+
+class Checker:
+    """Base class: one RA0xx rule over a :class:`Project`."""
+
+    code = "RA000"
+    name = "base"
+    describe = ""
+
+    def __init__(self):
+        # machine-readable extras for the JSON report (e.g. the RA001
+        # lock-order graph); populated during run()
+        self.artifacts: Dict = {}
+
+    def run(self, project: Project) -> List[Finding]:
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+    @staticmethod
+    def dotted(node: ast.AST) -> Optional[str]:
+        """'a.b.c' for a Name/Attribute chain, else None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        return None
+
+
+class SuppressionHygiene(Checker):
+    """RA000: every ``# noqa: RA0xx`` must carry a justification and a
+    code list — blanket unsuppression-proof ``# noqa`` hides future
+    findings on the same line."""
+
+    code = "RA000"
+    name = "suppression-hygiene"
+    describe = ("# noqa suppressions of RA checks must name codes and "
+                "carry a one-line justification")
+
+    def run(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in project.src_files:
+            for s in sf.suppressions.values():
+                covers_ra = s.codes is None or any(
+                    c.startswith("RA") for c in s.codes)
+                if not covers_ra:
+                    continue
+                if s.codes is None:
+                    out.append(Finding(
+                        self.code, sf.rel, s.line, 0,
+                        "bare '# noqa' also mutes every RA check — name "
+                        "the code(s), e.g. '# noqa: RA001 - <why>'"))
+                elif not s.justified:
+                    out.append(Finding(
+                        self.code, sf.rel, s.line, 0,
+                        f"suppression of {sorted(s.codes)} has no "
+                        f"justification — append '- <one-line reason>'"))
+        return out
+
+
+def run_checks(project: Project, checkers: Sequence[Checker]
+               ) -> Dict:
+    """Run ``checkers``, apply suppressions, return the report dict."""
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    by_rel = {sf.rel: sf for sf in project.src_files}
+    for ch in checkers:
+        for f in sorted(ch.run(project), key=Finding.key):
+            sf = by_rel.get(f.path)
+            # RA000 audits suppressions themselves, so it is exempt from
+            # them — a blanket suppression must not mute the finding
+            # that flags it
+            if f.check != "RA000" and sf is not None \
+                    and sf.suppressed(f.check, f.line):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    # files that failed to parse are findings of every run (a syntax
+    # error blinds all checkers for that file)
+    for sf in project.src_files:
+        if sf.parse_error:
+            findings.append(Finding(
+                "RA000", sf.rel, 1, 0,
+                f"file does not parse — all checks blind: "
+                f"{sf.parse_error}"))
+    findings.sort(key=Finding.key)
+    return {
+        "findings": findings,
+        "suppressed": suppressed,
+        "artifacts": {ch.code: ch.artifacts
+                      for ch in checkers if ch.artifacts},
+        "checks": [{"code": ch.code, "name": ch.name,
+                    "describe": ch.describe} for ch in checkers],
+    }
+
+
+def report_json(report: Dict, strict: bool) -> str:
+    return json.dumps({
+        "version": 1,
+        "strict": strict,
+        "checks": report["checks"],
+        "findings": [f.as_dict() for f in report["findings"]],
+        "suppressed": [f.as_dict() for f in report["suppressed"]],
+        "artifacts": report["artifacts"],
+    }, indent=2, default=str)
+
+
+def iter_strings(tree: ast.AST) -> Iterable[Tuple[str, int, int]]:
+    """Every string constant in ``tree`` as (value, line, col)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            yield node.value, node.lineno, node.col_offset

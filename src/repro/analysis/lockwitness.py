@@ -1,0 +1,193 @@
+"""Runtime lock-order sanitizer (the dynamic half of RA001).
+
+RA001 builds the *static* lock-order graph; this module witnesses the
+*actual* acquisition orders of an execution and reports:
+
+- **order inversions**: lock names A, B such that some thread was ever
+  seen acquiring B while holding A *and* some thread acquiring A while
+  holding B — the classic deadlock precondition lockdep looks for;
+- **self edges**: a thread acquiring a second *instance* of the same
+  lock name while holding one (two HostTiers, say) — ordered only by
+  accident;
+- **hold-time outliers**: acquisitions held longer than
+  ``REPRO_LOCK_HOLD_S`` (default 0.25 s) — a lock held across a sleep
+  or a device sync is how "concurrent" R-workers end up serialized.
+
+Zero-overhead when off: :func:`make_lock` returns a plain
+``threading.Lock``/``RLock`` unless ``REPRO_LOCK_WITNESS`` is set in
+the environment *at lock-construction time* (locks are created per
+instance, so setting the env var in a pytest session hook is early
+enough).  Lock names are class-level (``"CompletionSink._lock"``) so
+the witnessed graph is comparable with RA001's static one.
+
+Only stdlib imports — every lock-owning module in the stack imports
+this one, so it must sit at the bottom of the import graph.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+ENV_FLAG = "REPRO_LOCK_WITNESS"
+ENV_HOLD_S = "REPRO_LOCK_HOLD_S"
+_MAX_OUTLIERS = 50
+
+
+def enabled() -> bool:
+    return bool(os.environ.get(ENV_FLAG))
+
+
+class LockWitness:
+    """Process-wide recorder of lock acquisition orders and hold times.
+
+    All mutation happens under ``self._mu`` (a plain lock that is
+    itself never witnessed)."""
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._tls = threading.local()
+        # (held_name, acquired_name) -> count
+        self.edges: Dict[Tuple[str, str], int] = {}
+        # name -> [count, total_s, max_s]
+        self.holds: Dict[str, List[float]] = {}
+        # (name, duration_s, thread_name), capped
+        self.hold_outliers: List[Tuple[str, float, str]] = []
+        self.hold_threshold_s = float(
+            os.environ.get(ENV_HOLD_S, "0.25"))
+
+    # -- per-thread held stack ------------------------------------------------
+    def _stack(self) -> List["WitnessedLock"]:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def on_acquired(self, lock: "WitnessedLock") -> None:
+        st = self._stack()
+        with self._mu:
+            for held in st:
+                if held is lock:            # reentrant re-entry
+                    continue
+                key = (held.name, lock.name)
+                self.edges[key] = self.edges.get(key, 0) + 1
+        st.append(lock)
+
+    def on_released(self, lock: "WitnessedLock", held_s: float) -> None:
+        st = self._stack()
+        # locks are normally released LIFO but don't require it
+        for i in range(len(st) - 1, -1, -1):
+            if st[i] is lock:
+                del st[i]
+                break
+        with self._mu:
+            agg = self.holds.setdefault(lock.name, [0, 0.0, 0.0])
+            agg[0] += 1
+            agg[1] += held_s
+            agg[2] = max(agg[2], held_s)
+            if held_s > self.hold_threshold_s \
+                    and len(self.hold_outliers) < _MAX_OUTLIERS:
+                self.hold_outliers.append(
+                    (lock.name, held_s,
+                     threading.current_thread().name))
+
+    # -- reporting ------------------------------------------------------------
+    def inversions(self) -> List[Tuple[str, str]]:
+        with self._mu:
+            keys = set(self.edges)
+        out: Set[Tuple[str, str]] = set()
+        for a, b in keys:
+            if a == b:
+                out.add((a, b))             # distinct-instance self edge
+            elif (b, a) in keys:
+                out.add((min(a, b), max(a, b)))
+        return sorted(out)
+
+    def report(self) -> Dict:
+        with self._mu:
+            edges = [{"from": a, "to": b, "count": n}
+                     for (a, b), n in sorted(self.edges.items())]
+            holds = {name: {"count": int(c), "mean_s": t / c if c else 0.0,
+                            "max_s": m}
+                     for name, (c, t, m) in sorted(self.holds.items())}
+            outliers = [{"lock": n, "held_s": s, "thread": th}
+                        for n, s, th in self.hold_outliers]
+        return {"edges": edges, "inversions": self.inversions(),
+                "holds": holds, "hold_outliers": outliers,
+                "hold_threshold_s": self.hold_threshold_s}
+
+    def assert_clean(self) -> None:
+        """Raise if any order inversion was witnessed.  Hold-time
+        outliers are reported, not fatal — they are load-sensitive."""
+        inv = self.inversions()
+        if inv:
+            lines = "; ".join(f"{a} <-> {b}" for a, b in inv)
+            raise AssertionError(
+                f"lock-order inversion(s) witnessed: {lines} — two "
+                f"threads acquired these locks in opposite orders "
+                f"(deadlock precondition); full graph: {self.report()}")
+
+    def reset(self) -> None:
+        with self._mu:
+            self.edges.clear()
+            self.holds.clear()
+            self.hold_outliers.clear()
+
+
+class WitnessedLock:
+    """Drop-in Lock/RLock that reports to a :class:`LockWitness`."""
+
+    def __init__(self, name: str, reentrant: bool,
+                 witness: LockWitness):
+        self.name = name
+        self.reentrant = reentrant
+        self._inner = threading.RLock() if reentrant \
+            else threading.Lock()
+        self._witness = witness
+        self._tls = threading.local()       # per-thread reentry depth
+
+    def _depth(self) -> int:
+        return getattr(self._tls, "depth", 0)
+
+    def acquire(self, blocking: bool = True,
+                timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            d = self._depth()
+            self._tls.depth = d + 1
+            if d == 0:                      # outermost acquisition only
+                self._tls.t0 = time.perf_counter()
+                self._witness.on_acquired(self)
+        return ok
+
+    def release(self) -> None:
+        d = self._depth()
+        if d == 1:
+            held = time.perf_counter() - getattr(self._tls, "t0", 0.0)
+            self._witness.on_released(self, held)
+        self._tls.depth = max(0, d - 1)
+        self._inner.release()
+
+    def __enter__(self) -> "WitnessedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# the process-wide witness all make_lock() locks report to
+WITNESS = LockWitness()
+
+
+def make_lock(name: str, reentrant: bool = False,
+              witness: Optional[LockWitness] = None) -> Any:
+    """Create the lock guarding one shared structure.
+
+    ``name`` should be class-scoped (``"HostTier._lock"``) so witnessed
+    orders line up with RA001's static node ids.  Plain stdlib lock
+    unless the witness env flag is set (or a witness is injected)."""
+    if witness is None and not enabled():
+        return threading.RLock() if reentrant else threading.Lock()
+    return WitnessedLock(name, reentrant, witness or WITNESS)

@@ -1,0 +1,421 @@
+"""RA002 — JIT purity & retrace hazards.
+
+The decode hot path is a handful of fused jitted callables
+(``_step_fn`` / ``_chunk_step_fn`` families, the R-worker dispatch
+jits, the Pallas kernels).  Three classes of bug hide in them and only
+surface as mysterious slowness or a tracer error deep in a serve:
+
+- **Impure trace bodies**: Python-state mutation (writes to closure /
+  ``self`` state), wall-clock or RNG calls (``time.*``, ``random.*``,
+  ``np.random.*``), and ``print`` execute at *trace* time only — the
+  compiled executable silently stops doing them, or does them once per
+  retrace.
+- **Host syncs on traced values**: ``.item()`` / ``.tolist()`` /
+  ``np.asarray`` / ``np.array`` / ``jax.device_get`` /
+  ``block_until_ready`` / ``float()/int()/bool()`` of a traced operand
+  either crash the trace (ConcretizationTypeError) or, worse, force a
+  device sync per step when the callable escapes jit.
+- **Cache-defeating call patterns**: ``jax.jit(lambda ...)(args)``
+  immediately invoked re-traces every call (a fresh function object is
+  a fresh cache key); a ``jax.jit(<local lambda/def>)`` constructed
+  inside a loop does the same unless stored in a cache.
+
+Jit targets are discovered project-wide first (``jax.jit(f)``,
+``jit``, ``pl.pallas_call(kernel, ...)``, and the repo's
+``_quiet_donation_jit`` wrapper), resolving dotted names through the
+import-alias table of each module so ``jax.jit(partial(M.prefill,
+...))`` in one file marks ``prefill`` in ``models/model.py`` as a jit
+target.  Locally-defined helper functions called from a jitted body
+(same module) are scanned transitively.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, Project, SourceFile
+
+_JIT_WRAPPERS = {"jax.jit", "jit", "pl.pallas_call", "pallas_call",
+                 "_quiet_donation_jit"}
+# module prefixes whose calls are trace-time impurities
+_IMPURE_CALL_PREFIXES = ("time.", "datetime.", "random.", "np.random.",
+                        "numpy.random.")
+_IMPURE_CALLS = {"print", "time", "perf_counter", "monotonic"}
+# attribute calls that force a host sync on a traced operand
+_HOST_SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+_HOST_SYNC_CALLS = {"np.asarray", "numpy.asarray", "np.array",
+                    "numpy.array", "jax.device_get", "device_get"}
+# attribute reads that are static under trace (no sync)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+# container-mutation methods: called on a closed-over name inside a
+# trace they run once at trace time, not per step
+_MUTATOR_METHODS = {"append", "extend", "insert", "add", "update",
+                    "setdefault", "pop", "popitem", "clear", "remove",
+                    "discard", "appendleft"}
+
+
+def _module_fqn(sf: SourceFile) -> Optional[str]:
+    """repro.* dotted module name from the repo-relative path."""
+    rel = sf.rel.replace("\\", "/")
+    if "/repro/" in rel:
+        rel = "repro/" + rel.split("/repro/", 1)[1]
+    elif rel.startswith("repro/"):
+        pass
+    else:
+        return None
+    mod = rel[:-3].replace("/", ".")
+    if mod.endswith(".__init__"):
+        mod = mod[: -len(".__init__")]
+    return mod
+
+
+def _import_aliases(tree: ast.AST, self_mod: Optional[str]
+                    ) -> Dict[str, str]:
+    """alias -> dotted module/name table for one module."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mod = node.module
+            if node.level and self_mod:
+                base = self_mod.split(".")[: -node.level]
+                mod = ".".join(base + [node.module])
+            for a in node.names:
+                out[a.asname or a.name] = f"{mod}.{a.name}"
+    return out
+
+
+def _unwrap_partial(call: ast.Call) -> Optional[ast.AST]:
+    name = Checker.dotted(call.func)
+    if name in ("partial", "functools.partial") and call.args:
+        return call.args[0]
+    return None
+
+
+class JitPurity(Checker):
+    code = "RA002"
+    name = "jit-purity"
+    describe = ("no Python-state mutation, wall-clock/RNG, host syncs, "
+                "or cache-defeating patterns inside jitted callables")
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        # pass A: discover jit-target FQNs + local targets per file
+        targets_fqn: Set[str] = set()
+        local_targets: Dict[str, List[Tuple[ast.AST, str]]] = {}
+        for sf in project.src_files:
+            if sf.tree is None:
+                continue
+            mod = _module_fqn(sf)
+            aliases = _import_aliases(sf.tree, mod)
+            self._discover(sf, mod, aliases, self._all_defs(sf.tree),
+                           targets_fqn,
+                           local_targets.setdefault(sf.rel, []),
+                           findings)
+        # pass B: check module-level defs that are jit targets by FQN
+        for sf in project.src_files:
+            if sf.tree is None:
+                continue
+            mod = _module_fqn(sf)
+            if mod is None:
+                continue
+            defs = self._module_defs(sf.tree)
+            for qual, fn in defs.items():
+                if f"{mod}.{qual}" in targets_fqn:
+                    local_targets[sf.rel].append((fn, qual))
+        # pass C: purity-check every collected target (+ local helpers)
+        for sf in project.src_files:
+            if sf.tree is None or not local_targets.get(sf.rel):
+                continue
+            helper_defs = self._all_defs(sf.tree)
+            seen: Set[int] = set()
+            for fn, label in local_targets[sf.rel]:
+                self._check_body(sf, fn, label, helper_defs, seen,
+                                 findings, depth=0)
+        self.artifacts["jit_targets"] = sorted(targets_fqn)
+        return findings
+
+    # -- discovery ------------------------------------------------------------
+    def _discover(self, sf: SourceFile, mod: Optional[str],
+                  aliases: Dict[str, str],
+                  all_defs: Dict[str, List[ast.FunctionDef]],
+                  targets_fqn: Set[str],
+                  local: List[Tuple[ast.AST, str]],
+                  findings: List[Finding]) -> None:
+        loops: List[Tuple[int, int]] = [
+            (n.lineno, n.end_lineno or n.lineno)
+            for n in ast.walk(sf.tree)
+            if isinstance(n, (ast.For, ast.While))]
+
+        def in_loop(line: int) -> bool:
+            return any(lo <= line <= hi for lo, hi in loops)
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = Checker.dotted(node.func)
+            # jax.jit(...)(...) immediately invoked — fresh cache key
+            # per call unless the inner callable is itself cached
+            if isinstance(node.func, ast.Call):
+                inner = Checker.dotted(node.func.func)
+                if inner in _JIT_WRAPPERS:
+                    arg0 = node.func.args[0] if node.func.args else None
+                    if isinstance(arg0, (ast.Lambda, ast.Call)):
+                        findings.append(Finding(
+                            self.code, sf.rel, node.lineno,
+                            node.col_offset,
+                            f"{inner}(<fresh callable>) immediately "
+                            f"invoked — a new function object per call "
+                            f"defeats the jit cache (retrace every "
+                            f"step); jit once and reuse"))
+            if fname not in _JIT_WRAPPERS or not node.args:
+                continue
+            arg = node.args[0]
+            unwrapped = _unwrap_partial(arg) if isinstance(arg, ast.Call) \
+                else None
+            target = unwrapped if unwrapped is not None else arg
+            if isinstance(target, ast.Lambda):
+                if in_loop(node.lineno):
+                    findings.append(Finding(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"{fname}(<lambda>) constructed inside a loop — "
+                        f"each iteration's lambda is a fresh jit cache "
+                        f"key; hoist or memoize it"))
+                local.append((target, f"<lambda@{node.lineno}>"))
+            elif isinstance(target, (ast.Name, ast.Attribute)):
+                dotted = Checker.dotted(target)
+                if dotted is None:
+                    continue
+                head, _, rest = dotted.partition(".")
+                if not rest and head not in aliases \
+                        and head in all_defs:
+                    # local (possibly nested) def — the fused-step idiom
+                    # is `def f(...): ... ; _quiet_donation_jit(f, ...)`
+                    # right below it; take the nearest preceding def
+                    fn = self._nearest_def(all_defs[head], node.lineno)
+                    local.append((fn, f"{head}@{fn.lineno}"))
+                    continue
+                base = aliases.get(head)
+                if base is not None:
+                    fqn = base + (("." + rest) if rest else "")
+                elif mod is not None and not rest:
+                    fqn = f"{mod}.{head}"        # module-local name
+                else:
+                    fqn = dotted
+                targets_fqn.add(fqn)
+            # unhashable static args defeat the cache outright
+            for kw in node.keywords:
+                if kw.arg in ("static_argnums", "static_argnames"):
+                    continue
+                if kw.arg == "donate_argnums":
+                    continue
+            for kw in node.keywords:
+                if kw.arg in ("static_argnums", "static_argnames") \
+                        and isinstance(kw.value, (ast.List, ast.Dict,
+                                                  ast.Set)):
+                    findings.append(Finding(
+                        self.code, sf.rel, kw.value.lineno,
+                        kw.value.col_offset,
+                        f"unhashable {kw.arg} literal "
+                        f"({type(kw.value).__name__.lower()}) — jax "
+                        f"requires hashables; use a tuple"))
+
+    @staticmethod
+    def _all_defs(tree: ast.AST) -> Dict[str, List[ast.FunctionDef]]:
+        """Every FunctionDef in the file (any nesting), by bare name,
+        sorted by line."""
+        out: Dict[str, List[ast.FunctionDef]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                out.setdefault(node.name, []).append(node)
+        for defs in out.values():
+            defs.sort(key=lambda d: d.lineno)
+        return out
+
+    @staticmethod
+    def _nearest_def(defs: List[ast.FunctionDef], line: int
+                     ) -> ast.FunctionDef:
+        """The def closest above ``line`` (else the first one)."""
+        best = defs[0]
+        for d in defs:
+            if d.lineno <= line:
+                best = d
+        return best
+
+    @staticmethod
+    def _module_defs(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+        """Top-level functions AND methods (qualified ``Cls.meth``)."""
+        out: Dict[str, ast.FunctionDef] = {}
+        for node in tree.body:                       # type: ignore[attr-defined]
+            if isinstance(node, ast.FunctionDef):
+                out[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        out[f"{node.name}.{item.name}"] = item
+                        out.setdefault(item.name, item)
+        return out
+
+    # -- purity check ---------------------------------------------------------
+    def _check_body(self, sf: SourceFile, fn: ast.AST, label: str,
+                    helper_defs: Dict[str, List[ast.FunctionDef]],
+                    seen: Set[int], findings: List[Finding],
+                    depth: int) -> None:
+        if id(fn) in seen or depth > 3:
+            return
+        seen.add(id(fn))
+        if isinstance(fn, ast.Lambda):
+            params = {a.arg for a in fn.args.args}
+            body_nodes: List[ast.AST] = [fn.body]
+            local_names = set(params)
+        else:
+            params = {a.arg for a in fn.args.args
+                      + fn.args.kwonlyargs}        # type: ignore[operator]
+            if fn.args.vararg:
+                params.add(fn.args.vararg.arg)
+            body_nodes = list(fn.body)
+            local_names = set(params)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                local_names.add(n.id)
+                elif isinstance(node, (ast.For,)):
+                    for n in ast.walk(node.target):
+                        if isinstance(n, ast.Name):
+                            local_names.add(n.id)
+
+        def check_node(node: ast.AST) -> None:
+            # nested defs: recurse with their own scope
+            if isinstance(node, (ast.FunctionDef, ast.Lambda)):
+                self._check_body(sf, node, f"{label}.<nested>",
+                                 helper_defs, seen, findings, depth + 1)
+                return
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                findings.append(Finding(
+                    self.code, sf.rel, node.lineno, node.col_offset,
+                    f"jitted callable {label} declares "
+                    f"{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                    f" — Python-state mutation runs at trace time only"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in tgts:
+                    root = t
+                    while isinstance(root, (ast.Attribute, ast.Subscript)):
+                        root = root.value
+                    if isinstance(root, ast.Name) \
+                            and root.id not in local_names \
+                            and root is not t:
+                        findings.append(Finding(
+                            self.code, sf.rel, t.lineno, t.col_offset,
+                            f"jitted callable {label} mutates closed-over "
+                            f"state '{Checker.dotted(t) or root.id}' — "
+                            f"happens at trace time only, silently "
+                            f"dropped from the compiled step"))
+            elif isinstance(node, ast.Call):
+                self._check_call(sf, node, label, params, findings,
+                                 local_names)
+                name = Checker.dotted(node.func)
+                if name in helper_defs and name not in params:
+                    helper = self._nearest_def(helper_defs[name],
+                                               node.lineno)
+                    self._check_body(sf, helper, f"{label}->{name}",
+                                     helper_defs, seen, findings,
+                                     depth + 1)
+            for child in ast.iter_child_nodes(node):
+                if not isinstance(child, (ast.FunctionDef, ast.Lambda)):
+                    check_node(child)
+                else:
+                    check_node(child)
+
+        for n in body_nodes:
+            check_node(n)
+
+    def _check_call(self, sf: SourceFile, node: ast.Call, label: str,
+                    params: Set[str], findings: List[Finding],
+                    local_names: Optional[Set[str]] = None) -> None:
+        name = Checker.dotted(node.func)
+        if name is None:
+            return
+        parts = name.split(".")
+        if local_names is not None and len(parts) == 2 \
+                and parts[1] in _MUTATOR_METHODS \
+                and parts[0] not in local_names and parts[0] != "self":
+            findings.append(Finding(
+                self.code, sf.rel, node.lineno, node.col_offset,
+                f"jitted callable {label} mutates closed-over "
+                f"'{parts[0]}' via .{parts[1]}() — runs at trace time "
+                f"only, silently dropped from the compiled step"))
+            return
+        if name in _IMPURE_CALLS or \
+                any(name.startswith(p) for p in _IMPURE_CALL_PREFIXES):
+            findings.append(Finding(
+                self.code, sf.rel, node.lineno, node.col_offset,
+                f"jitted callable {label} calls '{name}' — wall-clock/"
+                f"RNG/IO executes at trace time only (and re-executes "
+                f"per retrace), never per step"))
+            return
+        tail = name.split(".")[-1]
+        if tail in _HOST_SYNC_ATTRS:
+            findings.append(Finding(
+                self.code, sf.rel, node.lineno, node.col_offset,
+                f"jitted callable {label} calls '.{tail}()' — host sync "
+                f"on a traced value (ConcretizationTypeError under "
+                f"trace, a device round trip if it escapes)"))
+            return
+        if name in _HOST_SYNC_CALLS and node.args \
+                and self._touches_traced(node.args[0], params):
+            findings.append(Finding(
+                self.code, sf.rel, node.lineno, node.col_offset,
+                f"jitted callable {label} calls '{name}' on a traced "
+                f"operand — forces a host materialization inside the "
+                f"trace"))
+            return
+        if name in ("float", "int", "bool") and node.args \
+                and self._touches_traced(node.args[0], params):
+            findings.append(Finding(
+                self.code, sf.rel, node.lineno, node.col_offset,
+                f"jitted callable {label} applies '{name}()' to a "
+                f"traced operand — concretizes the tracer (host sync / "
+                f"trace error)"))
+
+    @staticmethod
+    def _touches_traced(expr: ast.AST, params: Set[str]) -> bool:
+        """True if ``expr`` references a parameter outside a static
+        attribute chain (``x.shape[0]`` is static; ``x[0]`` is not)."""
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Name) or node.id not in params:
+                continue
+            # climb: if any ancestor attribute in the chain is static
+            # metadata, the expression is trace-static.  ast has no
+            # parent links; approximate by textual check on the chain.
+            return not JitPurity._under_static_attr(expr, node)
+        return False
+
+    @staticmethod
+    def _under_static_attr(root: ast.AST, target: ast.Name) -> bool:
+        """True when ``target`` only appears as ``target.shape``/
+        ``.ndim``/``.dtype``/``.size`` chains inside ``root``."""
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.naked = False
+
+            def visit_Attribute(self, node: ast.Attribute):
+                if isinstance(node.value, ast.Name) \
+                        and node.value.id == target.id \
+                        and node.attr in _STATIC_ATTRS:
+                    return                      # static use, don't recurse
+                self.generic_visit(node)
+
+            def visit_Name(self, node: ast.Name):
+                if node.id == target.id:
+                    self.naked = True
+
+        v = V()
+        v.visit(root)
+        return not v.naked

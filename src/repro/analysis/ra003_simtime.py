@@ -1,0 +1,85 @@
+"""RA003 — sim-time discipline.
+
+The KV tiering layer models transfer cost in *simulated* seconds: the
+HostTier accumulates ``stats["sim_seconds"]`` from a bandwidth model
+(``_account``) instead of sleeping, so tests run at full speed and the
+modelled numbers stay deterministic.  A ``time.sleep`` (or any
+wall-clock read feeding the model) in one of those paths silently
+mixes the two time domains: tests get slow AND the modelled seconds
+stop matching what a real deployment would measure.
+
+Scope: any function whose body references the sim-time accumulator
+(``sim_seconds`` / ``_account``) — plus every method of a class any of
+whose methods does — is "sim-domain".  Inside sim-domain scopes we
+flag ``time.sleep``, ``time.time``/``perf_counter``/``monotonic``,
+``datetime.now``, and ``threading.Timer`` construction (real-time
+deferral inside a simulated-time path).
+
+Deliberate wall-clock simulation (the R-worker's chaos slowdown
+sleeps, supervision backoff) lives *outside* sim-domain scopes and is
+not flagged; anything intentional inside one takes a justified
+``# noqa: RA003``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.core import Checker, Finding, Project
+
+_SIM_MARKERS = {"sim_seconds", "_account", "sim_stream_s"}
+_WALL_CALLS = {"time.sleep", "time.time", "time.perf_counter",
+               "time.monotonic", "datetime.now", "datetime.datetime.now",
+               "datetime.utcnow", "threading.Timer", "Timer"}
+
+
+def _references_sim(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr in _SIM_MARKERS:
+            return True
+        if isinstance(node, ast.Constant) and node.value in _SIM_MARKERS:
+            return True
+        if isinstance(node, ast.Name) and node.id in _SIM_MARKERS:
+            return True
+    return False
+
+
+class SimTimeDiscipline(Checker):
+    code = "RA003"
+    name = "sim-time"
+    describe = ("no wall-clock (time.sleep/time.time/Timer) inside "
+                "sim_seconds-modelled paths")
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.src_files:
+            if sf.tree is None:
+                continue
+            sim_scopes: List[ast.FunctionDef] = []
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ClassDef):
+                    methods = [m for m in node.body
+                               if isinstance(m, ast.FunctionDef)]
+                    # one sim-domain method taints the whole class:
+                    # sibling methods share the same modelled clock
+                    if any(_references_sim(m) for m in methods):
+                        sim_scopes.extend(methods)
+            seen: Set[int] = set()
+            for fn in sim_scopes:
+                if id(fn) in seen:
+                    continue
+                seen.add(id(fn))
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = Checker.dotted(node.func)
+                    if name in _WALL_CALLS:
+                        findings.append(Finding(
+                            self.code, sf.rel, node.lineno,
+                            node.col_offset,
+                            f"'{name}' inside sim-time scope "
+                            f"'{fn.name}' — this path models transfer "
+                            f"cost in sim_seconds; wall-clock here "
+                            f"mixes time domains (slow tests, wrong "
+                            f"modelled numbers)"))
+        return findings

@@ -1,0 +1,177 @@
+"""RA004 — chaos-site cross-check.
+
+``FaultPlan.fire()`` accepts *any* string: a typo'd site never matches
+a spec and the injection point goes silently dead (and a test that
+spells a site wrong in its ``FaultSpec`` waits for a fault that never
+fires).  This check closes the loop three ways against the
+``FAULT_SITES`` registry in ``chaos/plan.py``:
+
+1. every ``fire("<site>", ...)`` literal in ``src/`` resolves to a
+   registered site;
+2. every ``FaultSpec(site="<site>")`` literal (src *and* tests)
+   resolves to a registered site;
+3. every registered site has at least one ``fire()`` injection point
+   in ``src/`` AND is referenced by at least one test/benchmark file
+   (as a FaultSpec site or a bare string constant) — a site nobody
+   injects or nobody exercises is dead weight.
+
+Non-literal site arguments (variables) are outside static reach and
+are skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, Project, SourceFile, \
+    iter_strings
+
+
+def _const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class ChaosSiteCrossCheck(Checker):
+    code = "RA004"
+    name = "chaos-sites"
+    describe = ("fire()/FaultSpec site literals resolve to FAULT_SITES; "
+                "every registered site is injected in src and exercised "
+                "by a test")
+
+    registry_file = "repro/chaos/plan.py"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        reg = project.find(self.registry_file)
+        sites = self._registry(reg) if reg is not None else None
+        if sites is None:
+            findings.append(Finding(
+                self.code, self.registry_file, 1, 0,
+                "FAULT_SITES registry not found — cannot cross-check "
+                "chaos sites"))
+            return findings
+
+        injections: Dict[str, List[str]] = {s: [] for s in sites}
+        test_refs: Dict[str, List[str]] = {s: [] for s in sites}
+
+        for sf in project.src_files:
+            if sf.tree is None or sf.rel.endswith(self.registry_file):
+                continue
+            for site, node in self._fire_sites(sf):
+                if site not in sites:
+                    findings.append(Finding(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"fire() site '{site}' is not in FAULT_SITES — "
+                        f"this injection point can never fire "
+                        f"(registered: {', '.join(sorted(sites))})"))
+                else:
+                    injections[site].append(f"{sf.rel}:{node.lineno}")
+            for site, node in self._spec_sites(sf):
+                if site not in sites:
+                    findings.append(Finding(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"FaultSpec site '{site}' is not in FAULT_SITES "
+                        f"— this spec never matches an injection point"))
+
+        for sf in project.ref_files:
+            if sf.tree is None:
+                continue
+            for site, node in self._spec_sites(sf):
+                if site not in sites:
+                    findings.append(Finding(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"FaultSpec site '{site}' is not in FAULT_SITES "
+                        f"— the test waits on a fault that never fires"))
+                else:
+                    test_refs[site].append(f"{sf.rel}:{node.lineno}")
+            # bare string mentions also count as exercise evidence
+            for value, line, _ in iter_strings(sf.tree):
+                if value in sites:
+                    test_refs[value].append(f"{sf.rel}:{line}")
+
+        for site in sorted(sites):
+            if not injections[site]:
+                findings.append(Finding(
+                    self.code, self.registry_file,
+                    sites[site], 0,
+                    f"registered site '{site}' has no fire() injection "
+                    f"point in src/ — dead registry entry"))
+            if not test_refs[site]:
+                findings.append(Finding(
+                    self.code, self.registry_file,
+                    sites[site], 0,
+                    f"registered site '{site}' is never referenced by "
+                    f"any test — injection point is unexercised"))
+
+        self.artifacts["sites"] = {
+            s: {"injection_points": sorted(set(injections[s])),
+                "test_refs": sorted(set(test_refs[s]))[:8]}
+            for s in sorted(sites)}
+        return findings
+
+    # -- extraction -----------------------------------------------------------
+    @staticmethod
+    def _registry(sf: SourceFile) -> Optional[Dict[str, int]]:
+        """site -> registry line, from the FAULT_SITES assignment."""
+        if sf.tree is None:
+            return None
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "FAULT_SITES"
+                    for t in node.targets):
+                if isinstance(node.value, (ast.Tuple, ast.List)):
+                    out: Dict[str, int] = {}
+                    for elt in node.value.elts:
+                        s = _const_str(elt)
+                        if s is not None:
+                            out[s] = elt.lineno
+                    return out
+        return None
+
+    @staticmethod
+    def _fire_sites(sf: SourceFile) -> List[Tuple[str, ast.Call]]:
+        out: List[Tuple[str, ast.Call]] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = Checker.dotted(node.func) or ""
+            if not name.endswith(".fire") and name != "fire":
+                continue
+            site_node: Optional[ast.AST] = node.args[0] if node.args \
+                else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site_node = kw.value
+            if site_node is None:
+                continue
+            s = _const_str(site_node)
+            if s is not None:
+                out.append((s, node))
+        return out
+
+    @staticmethod
+    def _spec_sites(sf: SourceFile) -> List[Tuple[str, ast.Call]]:
+        out: List[Tuple[str, ast.Call]] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = Checker.dotted(node.func) or ""
+            if name.split(".")[-1] != "FaultSpec":
+                continue
+            site_node: Optional[ast.AST] = node.args[0] if node.args \
+                else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site_node = kw.value
+            if site_node is None:
+                continue
+            s = _const_str(site_node)
+            if s is not None:
+                out.append((s, node))
+        return out
+
+    @staticmethod
+    def _sites_set(sites: Dict[str, int]) -> Set[str]:
+        return set(sites)

@@ -1,0 +1,151 @@
+"""RA005 — metrics-key schema conformance.
+
+``obs/schema.py`` defines the one naming convention for stats keys
+(unit suffix, optional stat suffix, namespace prefix).  The engine's
+``metrics()`` aggregator asserts conformance at runtime — but only for
+the surfaces a test happens to walk, and only after the key has
+already shipped.  This check moves that left: every *literal* key fed
+to a MetricsRegistry instrument (``.counter`` / ``.gauge`` /
+``.histogram``), written into a ``stats``-named dict (``self.stats``,
+``step_stats``, a ``*_stats()`` return), must either
+
+- satisfy :func:`repro.obs.schema.check_key`, or
+- be a registered legacy spelling (``LEGACY_ALIASES``), or
+- appear as a key of an ``extra_aliases`` dict literal passed to
+  :func:`repro.obs.schema.normalize` anywhere in the project (those
+  get rewritten before emission).
+
+The schema rules are *imported*, not re-implemented — the checker can
+never drift from the runtime check.  Non-literal keys are skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, Project, SourceFile
+
+_INSTRUMENTS = {"counter", "gauge", "histogram"}
+
+
+def _const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _is_stats_name(dotted: Optional[str]) -> bool:
+    if not dotted:
+        return False
+    leaf = dotted.split(".")[-1]
+    return leaf == "stats" or leaf.endswith("_stats")
+
+
+class MetricsKeySchema(Checker):
+    code = "RA005"
+    name = "metrics-keys"
+    describe = ("literal keys fed to MetricsRegistry/stats dicts "
+                "conform to the obs/schema.py suffix rules")
+
+    def run(self, project: Project) -> List[Finding]:
+        # imported lazily: obs modules import repro.analysis.lockwitness
+        # at module scope, so a top-level schema import here would close
+        # an import cycle through the package __init__
+        from repro.obs.schema import LEGACY_ALIASES, check_key
+        findings: List[Finding] = []
+        aliased: Set[str] = set(LEGACY_ALIASES)
+        for sf in project.src_files:
+            if sf.tree is not None:
+                aliased |= self._extra_alias_keys(sf)
+        checked = 0
+        for sf in project.src_files:
+            if sf.tree is None:
+                continue
+            for key, node, ctx in self._literal_keys(sf):
+                checked += 1
+                if check_key(key) or key in aliased:
+                    continue
+                findings.append(Finding(
+                    self.code, sf.rel, node.lineno, node.col_offset,
+                    f"stats key '{key}' ({ctx}) violates the unit-"
+                    f"suffix schema (repro/obs/schema.py) and has no "
+                    f"legacy alias — rename (e.g. '{key}_count') or "
+                    f"register an alias"))
+        self.artifacts["keys_checked"] = checked
+        self.artifacts["alias_table_size"] = len(aliased)
+        return findings
+
+    # -- collection -----------------------------------------------------------
+    def _literal_keys(self, sf: SourceFile
+                      ) -> List[Tuple[str, ast.AST, str]]:
+        out: List[Tuple[str, ast.AST, str]] = []
+
+        def dict_keys(d: ast.Dict, ctx: str) -> None:
+            for k in d.keys:
+                s = _const_str(k) if k is not None else None
+                if s is not None:
+                    out.append((s, k, ctx))
+
+        for node in ast.walk(sf.tree):
+            # registry.counter("key") / .gauge / .histogram
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _INSTRUMENTS and node.args:
+                s = _const_str(node.args[0])
+                if s is not None:
+                    out.append((s, node.args[0],
+                                f"registry .{node.func.attr}()"))
+            # stats = {...} / self.stats = {...} / *_stats = {...}
+            elif isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Dict):
+                for t in node.targets:
+                    if _is_stats_name(Checker.dotted(t)):
+                        dict_keys(node.value,
+                                  f"dict literal for "
+                                  f"{Checker.dotted(t)}")
+                        break
+            # stats["key"] = ... / stats["key"] += ...
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in tgts:
+                    if isinstance(t, ast.Subscript) \
+                            and _is_stats_name(Checker.dotted(t.value)):
+                        s = _const_str(t.slice)
+                        if s is not None:
+                            out.append((
+                                s, t.slice,
+                                f"subscript write to "
+                                f"{Checker.dotted(t.value)}"))
+            # return {...} inside def *_stats(...) / def metrics(...)
+            elif isinstance(node, ast.FunctionDef) and (
+                    node.name.endswith("_stats") or
+                    node.name == "metrics"):
+                for ret in ast.walk(node):
+                    if isinstance(ret, ast.Return) \
+                            and isinstance(ret.value, ast.Dict):
+                        dict_keys(ret.value,
+                                  f"return of {node.name}()")
+        return out
+
+    @staticmethod
+    def _extra_alias_keys(sf: SourceFile) -> Set[str]:
+        """Keys of every extra_aliases dict literal handed to
+        ``normalize()`` — those spellings are rewritten on emission."""
+        out: Set[str] = set()
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = Checker.dotted(node.func) or ""
+            if name.split(".")[-1] != "normalize":
+                continue
+            cands: List[ast.AST] = list(node.args[1:2])
+            cands += [kw.value for kw in node.keywords
+                      if kw.arg == "extra_aliases"]
+            for c in cands:
+                if isinstance(c, ast.Dict):
+                    for k in c.keys:
+                        s = _const_str(k) if k is not None else None
+                        if s is not None:
+                            out.add(s)
+        return out

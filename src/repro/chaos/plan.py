@@ -14,12 +14,13 @@ re-raises instead of retrying forever.
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.analysis.lockwitness import make_lock
 
 # The named injection sites, for reference (fire() accepts any string;
 # a typo'd site simply never fires, so tests assert on plan.fired).
@@ -90,7 +91,7 @@ class FaultPlan:
         self.specs: List[FaultSpec] = list(specs)
         self.seed = int(seed)
         self._rng = np.random.default_rng(0xC7A05 + self.seed)
-        self._lock = threading.Lock()
+        self._lock = make_lock("FaultPlan._lock")
         self.fired: List[Dict[str, Any]] = []
         self.enabled = True
         # sites with at least one spec — fire() sits on the R-worker

@@ -7,11 +7,9 @@ entries in ``SHAPES``.  Architectures register themselves via
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-import math
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer kinds (mixer part of a block).  The ffn part is configured separately.

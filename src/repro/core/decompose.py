@@ -37,7 +37,7 @@ storage rounding.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.lockwitness import make_lock
+
 def _quiet_donation_jit(f, donate_argnums):
     """jax.jit with donated dead inputs, suppressing the one expected
     compile-time warning.  Donation is best-effort: where no output
@@ -71,7 +73,7 @@ def _quiet_donation_jit(f, donate_argnums):
     return wrapped
 
 from repro.core import decompose as D
-from repro.core.config import DEC_XATTN, ModelConfig
+from repro.core.config import ModelConfig
 from repro.models import model as M
 
 
@@ -217,7 +219,7 @@ class CompletionSink:
         self.mb_size = int(mb_size)
         self.q: "queue.Queue" = queue.Queue()
         self.epoch = 0
-        self._lock = threading.Lock()
+        self._lock = make_lock("CompletionSink._lock")
         self._bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
 
     def _buffer(self, key, host: Dict[str, np.ndarray], fresh: bool = False):

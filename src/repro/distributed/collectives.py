@@ -14,7 +14,6 @@ layer — the flash-decoding reduction, nothing else.  Selected by rule
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

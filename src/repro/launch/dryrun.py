@@ -24,11 +24,10 @@ import re            # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 from dataclasses import replace    # noqa: E402
-from functools import partial      # noqa: E402
 
 import jax                         # noqa: E402
 import jax.numpy as jnp            # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core.config import (ASSIGNED_ARCHS, SHAPES, SKIPS, ModelConfig,
                                get_arch)                     # noqa: E402
@@ -191,7 +190,6 @@ def build_and_lower(arch: str, shape_name: str, mesh, strategy: str,
             with use_rules(mesh, rules):
                 return train_step(state, batch)
 
-        opt_sh = type("x", (), {})  # placeholder
         from repro.training.optimizer import AdamWState
         from repro.training.train import TrainState
         state_spec = TrainState(

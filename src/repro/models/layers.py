@@ -15,8 +15,6 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax import lax

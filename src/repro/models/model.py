@@ -21,9 +21,7 @@ is structural, not cosmetic.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -183,7 +181,6 @@ def init_params(rng, cfg: ModelConfig):
     params["rem"] = [
         _init_block(keys, cfg, pattern[i], 0, dtype) for i in range(rem)]
     if cfg.is_encdec:
-        enc_cfg = cfg
         params["encoder"] = {
             "stack": {"s0": _init_block(keys, cfg, ENC_ATTN,
                                         cfg.encoder_layers, dtype)},
@@ -391,7 +388,6 @@ def _cross_attention(p, x, st, ctx: Ctx, prefix="", feats=None):
 # non-attention mixers
 # ---------------------------------------------------------------------------
 def _rglru_mixer(p, x, st, ctx: Ctx):
-    cfg = ctx.cfg
     gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"])
                        .astype(F32)).astype(x.dtype)
     r = jnp.einsum("bsd,dw->bsw", x, p["w_in_rnn"])
@@ -747,7 +743,6 @@ def scatter_rows(state, sub, rows, sub_rows):
 
 def decode_step(params, cfg: ModelConfig, state, tokens, kv_chunk=1024):
     """One token per sequence.  tokens [B,1] -> (logits [B,V], new state)."""
-    b = tokens.shape[0]
     h = params["embed"][tokens]
     lengths = state["lengths"]
     qpos = lengths[:, None]

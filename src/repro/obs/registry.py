@@ -25,6 +25,8 @@ import math
 import threading
 from typing import Dict, List, Union
 
+from repro.analysis.lockwitness import make_lock
+
 
 class Counter:
     """Monotonically increasing value (events, tokens, bytes)."""
@@ -150,7 +152,7 @@ class MetricsRegistry:
     ``{key: float}`` dict following the schema conventions."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("MetricsRegistry._lock")
         self._metrics: Dict[str, Union[Counter, Gauge, Histogram]] = {}
 
     def _get(self, name: str, cls):

@@ -84,6 +84,9 @@ LEGACY_ALIASES: Dict[str, str] = {
     "sim_seconds": "sim_stream_s",
     "host_bytes": "host_tier_bytes",
     "preemptions": "preemptions_count",
+    "put_failed": "put_failed_count",
+    "get_failed": "get_failed_count",
+    "corrupt": "corrupt_count",
     # FleetTelemetry.summary()
     "migrations": "migrations_count",
     "failures": "failures_count",

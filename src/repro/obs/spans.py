@@ -18,16 +18,17 @@ by the caller, a tuple allocation, and a lock-guarded deque append.
 from __future__ import annotations
 
 import json
-import threading
 import time
 from collections import deque
 from typing import Dict, List, Optional
+
+from repro.analysis.lockwitness import make_lock
 
 
 class SpanTracer:
     def __init__(self, ring: int = 65536):
         self.t0 = time.perf_counter()
-        self._lock = threading.Lock()
+        self._lock = make_lock("SpanTracer._lock")
         self._spans = deque(maxlen=max(1, int(ring)))
         self.added = 0          # lifetime adds; dropped = added - len(spans)
 

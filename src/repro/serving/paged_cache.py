@@ -99,15 +99,14 @@ memory hierarchy behind the device pool, so a page can be NON-RESIDENT:
 from __future__ import annotations
 
 import hashlib
-import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.lockwitness import make_lock
 from repro.models import layers as L
 
 F32 = jnp.float32
@@ -182,7 +181,6 @@ def release_row(kv: PagedKV, row: int) -> PagedKV:
 def write_tokens(kv: PagedKV, k_new, v_new) -> PagedKV:
     """Append one token per row.  k_new/v_new [B, Hkv, Dh].
     Caller must have run ensure_capacity(row, lengths+1)."""
-    b = k_new.shape[0]
     page = kv.page_size
     pos = kv.lengths                                    # [B]
     slot_in_page = pos % page
@@ -373,7 +371,7 @@ class HostTier:
                  chaos: Any = None):
         self.cfg = cfg or TierConfig()
         self.entries: "OrderedDict[bytes, TierEntry]" = OrderedDict()
-        self._lock = threading.RLock()
+        self._lock = make_lock("HostTier._lock", reentrant=True)
         # chaos.FaultPlan (or None): injected I/O failures fire at the
         # TOP of put()/pop(), before any stats/state mutation, so an
         # aborted transfer leaves the tier exactly as it was

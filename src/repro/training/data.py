@@ -11,7 +11,6 @@ Also supports memory-mapped token files for real corpora (``file=``).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Iterator, Optional
 

@@ -1,8 +1,7 @@
 """AdamW + schedules, pure-jax pytree implementation (no optax dep)."""
 from __future__ import annotations
 
-import math
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -2,8 +2,7 @@
 axis annotations)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

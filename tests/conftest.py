@@ -10,6 +10,18 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _lock_witness_sanitizer():
+    """When REPRO_LOCK_WITNESS is set, every make_lock() lock in the
+    stack is instrumented; at session end, fail if any acquisition-
+    order inversion was witnessed (see repro/analysis/lockwitness.py).
+    A no-op (plain stdlib locks) when the env flag is unset."""
+    yield
+    if os.environ.get("REPRO_LOCK_WITNESS"):
+        from repro.analysis.lockwitness import WITNESS
+        WITNESS.assert_clean()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

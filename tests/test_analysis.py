@@ -1,0 +1,399 @@
+"""The RA0xx checkers: each fails on its bad fixture, passes on its
+clean one, and honours ``# noqa`` suppressions; the CLI runs strict-
+clean on the real tree (the merge gate)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (ALL_CHECKERS, ChaosSiteCrossCheck,
+                            JitPurity, LockDiscipline,
+                            MetricsKeySchema, Project,
+                            SimTimeDiscipline, SuppressionHygiene,
+                            run_checks)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def project_from(tmp_path, src: dict, ref: dict = None):
+    """Build a throwaway Project from {relpath: source} dicts."""
+    sroot = tmp_path / "src"
+    for rel, text in src.items():
+        p = sroot / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    rroot = tmp_path / "tests"
+    rroot.mkdir(exist_ok=True)
+    for rel, text in (ref or {}).items():
+        (rroot / rel).write_text(textwrap.dedent(text))
+    return Project(tmp_path, [sroot], [rroot])
+
+
+def run_one(checker_cls, project):
+    report = run_checks(project, [checker_cls()])
+    return [f for f in report["findings"] if f.check == checker_cls.code]
+
+
+# ---------------------------------------------------------------------------
+# RA001 — lock discipline
+# ---------------------------------------------------------------------------
+BAD_LOCKS = """
+    import threading
+
+    class Sink:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.bufs = {}
+        def deliver(self, tier, k, v):
+            with self._lock:
+                self.bufs[k] = v
+                tier.stash(k, v)       # acquires Tier._lock under ours
+        def fast_path(self, k, v):
+            self.bufs[k] = v           # guarded attr, no lock held
+
+    class Tier:
+        def __init__(self):
+            self._lock = threading.Lock()
+        def stash(self, k, v):
+            with self._lock:
+                pass
+        def drain(self, sink, k):
+            with self._lock:
+                sink.deliver(None, k, 0)   # inverse order -> cycle
+"""
+
+CLEAN_LOCKS = """
+    import threading
+
+    class Sink:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.bufs = {}
+        def deliver(self, k, v):
+            with self._lock:
+                self.bufs[k] = v
+        def snapshot(self):
+            with self._lock:
+                return dict(self.bufs)
+"""
+
+
+def test_ra001_bad_fixture(tmp_path):
+    found = run_one(LockDiscipline,
+                    project_from(tmp_path, {"locks.py": BAD_LOCKS}))
+    msgs = " | ".join(f.message for f in found)
+    assert "cycle" in msgs, msgs
+    assert "without holding" in msgs          # lock-free guarded mutation
+
+
+def test_ra001_clean_fixture(tmp_path):
+    assert run_one(LockDiscipline,
+                   project_from(tmp_path, {"locks.py": CLEAN_LOCKS})) == []
+
+
+def test_ra001_lock_graph_artifact(tmp_path):
+    ch = LockDiscipline()
+    ch.run(project_from(tmp_path, {"locks.py": BAD_LOCKS}))
+    g = ch.artifacts["lock_graph"]
+    assert "Sink._lock" in g["nodes"] and "Tier._lock" in g["nodes"]
+    pairs = {(e["from"], e["to"]) for e in g["edges"]}
+    assert ("Sink._lock", "Tier._lock") in pairs
+    assert ("Tier._lock", "Sink._lock") in pairs
+
+
+# ---------------------------------------------------------------------------
+# RA002 — jit purity
+# ---------------------------------------------------------------------------
+BAD_JIT = """
+    import time
+    import jax
+    import numpy as np
+
+    seen = []
+
+    def make_step():
+        def f(x, state):
+            t = time.perf_counter()     # wall clock under trace
+            seen.append(t)              # closure mutation
+            s = float(x)                # concretize traced operand
+            return x + np.asarray(x) + s
+        return jax.jit(f)
+
+    def hot(xs):
+        return [jax.jit(lambda a: a + 1)(x) for x in xs]
+"""
+
+CLEAN_JIT = """
+    import jax
+    import jax.numpy as jnp
+
+    def make_step():
+        def f(x, state):
+            scale = x.shape[0]          # static metadata is fine
+            return jnp.tanh(x) * scale + state
+        return jax.jit(f)
+
+    _cache = {}
+    def cached(shape):
+        if shape not in _cache:
+            _cache[shape] = jax.jit(lambda a: a * 2)
+        return _cache[shape]
+"""
+
+
+def test_ra002_bad_fixture(tmp_path):
+    found = run_one(JitPurity,
+                    project_from(tmp_path, {"jit.py": BAD_JIT}))
+    msgs = " | ".join(f.message for f in found)
+    assert "time.perf_counter" in msgs
+    assert "closed-over" in msgs
+    assert "float()" in msgs
+    assert "np.asarray" in msgs
+    assert "defeats the jit cache" in msgs or "fresh jit cache" in msgs
+
+
+def test_ra002_clean_fixture(tmp_path):
+    assert run_one(JitPurity,
+                   project_from(tmp_path, {"jit.py": CLEAN_JIT})) == []
+
+
+# ---------------------------------------------------------------------------
+# RA003 — sim-time discipline
+# ---------------------------------------------------------------------------
+BAD_SIM = """
+    import time
+
+    class Tier:
+        def __init__(self):
+            self.stats = {"sim_seconds": 0.0}
+        def put(self, nbytes, bw):
+            time.sleep(nbytes / bw)          # wall clock in sim domain
+            self.stats["sim_seconds"] += nbytes / bw
+"""
+
+CLEAN_SIM = """
+    import time
+
+    class Tier:
+        def __init__(self):
+            self.stats = {"sim_seconds": 0.0}
+        def put(self, nbytes, bw):
+            self.stats["sim_seconds"] += nbytes / bw
+
+    class WallClockWorker:                   # not sim-domain: fine
+        def step(self):
+            time.sleep(0.001)
+"""
+
+
+def test_ra003_bad_fixture(tmp_path):
+    found = run_one(SimTimeDiscipline,
+                    project_from(tmp_path, {"sim.py": BAD_SIM}))
+    assert len(found) == 1 and "time.sleep" in found[0].message
+
+
+def test_ra003_clean_fixture(tmp_path):
+    assert run_one(SimTimeDiscipline,
+                   project_from(tmp_path, {"sim.py": CLEAN_SIM})) == []
+
+
+# ---------------------------------------------------------------------------
+# RA004 — chaos-site cross-check
+# ---------------------------------------------------------------------------
+REGISTRY = """
+    FAULT_SITES = (
+        "r_step",
+        "ghost_site",
+    )
+"""
+
+BAD_CHAOS = {
+    "repro/chaos/plan.py": REGISTRY,
+    "engine.py": """
+        def step(plan):
+            plan.fire("r_stpe")        # typo'd site
+    """,
+}
+BAD_CHAOS_REF = {
+    "test_x.py": """
+        def test_r_step():
+            assert "r_step"
+    """,
+}
+
+CLEAN_CHAOS = {
+    "repro/chaos/plan.py": """
+        FAULT_SITES = (
+            "r_step",
+        )
+    """,
+    "engine.py": """
+        def step(plan):
+            plan.fire("r_step")
+    """,
+}
+
+
+def test_ra004_bad_fixture(tmp_path):
+    found = run_one(ChaosSiteCrossCheck,
+                    project_from(tmp_path, BAD_CHAOS, BAD_CHAOS_REF))
+    msgs = " | ".join(f.message for f in found)
+    assert "'r_stpe' is not in FAULT_SITES" in msgs
+    assert "'ghost_site' has no fire() injection point" in msgs
+    assert "'ghost_site' is never referenced by any test" in msgs
+    # r_step HAS an injection point but its only caller is the typo'd
+    # one, so it keeps its test ref and loses its injection
+    assert "'r_step' has no fire() injection point" in msgs
+
+
+def test_ra004_clean_fixture(tmp_path):
+    found = run_one(ChaosSiteCrossCheck,
+                    project_from(tmp_path, CLEAN_CHAOS, BAD_CHAOS_REF))
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# RA005 — metrics-key schema
+# ---------------------------------------------------------------------------
+BAD_KEYS = """
+    class W:
+        def __init__(self, registry):
+            self.stats = {"throughput": 0.0}      # no unit suffix
+            registry.counter("decode_latency")    # no unit suffix
+        def bump(self):
+            self.stats["queue_depth"] = 1         # no unit suffix
+"""
+
+CLEAN_KEYS = """
+    class W:
+        def __init__(self, registry):
+            self.stats = {"throughput_rate": 0.0,
+                          "hits": 0}              # legacy alias: ok
+            registry.counter("decode_latency_s")
+        def bump(self):
+            self.stats["queue_depth_count"] = 1
+"""
+
+
+def test_ra005_bad_fixture(tmp_path):
+    found = run_one(MetricsKeySchema,
+                    project_from(tmp_path, {"w.py": BAD_KEYS}))
+    keys = {f.message.split("'")[1] for f in found}
+    assert keys == {"throughput", "decode_latency", "queue_depth"}
+
+
+def test_ra005_clean_fixture(tmp_path):
+    assert run_one(MetricsKeySchema,
+                   project_from(tmp_path, {"w.py": CLEAN_KEYS})) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+SUPPRESSED_SIM = """
+    import time
+
+    class Tier:
+        def __init__(self):
+            self.stats = {"sim_seconds": 0.0}
+        def put(self, nbytes, bw):
+            time.sleep(0)  # noqa: RA003 - deliberate yield, not a model path
+            self.stats["sim_seconds"] += nbytes / bw
+"""
+
+BARE_SUPPRESSED_SIM = SUPPRESSED_SIM.replace(
+    "# noqa: RA003 - deliberate yield, not a model path", "# noqa")
+
+
+def test_noqa_suppresses_finding(tmp_path):
+    project = project_from(tmp_path, {"sim.py": SUPPRESSED_SIM})
+    report = run_checks(project, [SimTimeDiscipline()])
+    assert report["findings"] == []
+    assert len(report["suppressed"]) == 1
+    assert report["suppressed"][0].check == "RA003"
+
+
+def test_bare_noqa_flagged_by_hygiene(tmp_path):
+    project = project_from(tmp_path, {"sim.py": BARE_SUPPRESSED_SIM})
+    report = run_checks(project,
+                        [SimTimeDiscipline(), SuppressionHygiene()])
+    # the RA003 finding is muted, but RA000 flags the bare noqa itself
+    checks = {f.check for f in report["findings"]}
+    assert checks == {"RA000"}
+
+
+def test_unjustified_code_suppression_flagged(tmp_path):
+    text = SUPPRESSED_SIM.replace(
+        "# noqa: RA003 - deliberate yield, not a model path",
+        "# noqa: RA003")
+    report = run_checks(project_from(tmp_path, {"sim.py": text}),
+                        [SimTimeDiscipline(), SuppressionHygiene()])
+    msgs = " | ".join(f.message for f in report["findings"])
+    assert "no justification" in msgs
+
+
+def test_wrong_code_does_not_suppress(tmp_path):
+    text = SUPPRESSED_SIM.replace("RA003", "RA001")
+    report = run_checks(project_from(tmp_path, {"sim.py": text}),
+                        [SimTimeDiscipline()])
+    assert len(report["findings"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd or REPO, env=env)
+
+
+def test_cli_strict_clean_on_real_tree():
+    """The merge gate: the suite runs clean on this repository."""
+    r = _cli("--strict")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_json_report_and_strict_exit(tmp_path):
+    bad = tmp_path / "src"
+    bad.mkdir()
+    (bad / "w.py").write_text(textwrap.dedent(BAD_KEYS))
+    out = tmp_path / "findings.json"
+    r = _cli("--root", str(tmp_path), str(bad), "--ref", str(bad),
+             "--select", "RA005", "--strict", "--json", str(out))
+    assert r.returncode == 1
+    payload = json.loads(out.read_text())
+    assert payload["strict"] is True
+    assert {f["check"] for f in payload["findings"]} == {"RA005"}
+
+
+def test_cli_select_and_disable(tmp_path):
+    bad = tmp_path / "src"
+    bad.mkdir()
+    (bad / "w.py").write_text(textwrap.dedent(BAD_KEYS))
+    # RA004 is disabled too: this throwaway tree has no chaos registry
+    r = _cli("--root", str(tmp_path), str(bad), "--ref", str(bad),
+             "--disable", "RA004,RA005", "--strict")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_list():
+    r = _cli("--list")
+    for code in ("RA001", "RA002", "RA003", "RA004", "RA005", "RA000"):
+        assert code in r.stdout
+
+
+def test_all_checkers_registered():
+    assert [c.code for c in ALL_CHECKERS] == \
+        ["RA001", "RA002", "RA003", "RA004", "RA005"]
+
+
+@pytest.mark.parametrize("cls", ALL_CHECKERS)
+def test_checkers_have_metadata(cls):
+    assert cls.code.startswith("RA") and cls.name and cls.describe

@@ -2,7 +2,6 @@
 must reproduce the full-sequence training forward logits, for EVERY
 architecture family (this exercises KV caches, ring buffers, recurrent
 states, conv streaming, cross-attn state, early fusion...)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

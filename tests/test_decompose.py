@@ -7,7 +7,6 @@ import pytest
 
 from conftest import tiny_cfg
 from repro.core import decompose as D
-from repro.core.config import ASSIGNED_ARCHS
 from repro.core.hetero import per_layer_params, per_layer_state
 from repro.models import model as M
 

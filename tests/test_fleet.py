@@ -5,7 +5,6 @@ The migration wire format must be exact: a migrated or recovered engine
 produces the same tokens an uninterrupted run would."""
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

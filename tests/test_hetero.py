@@ -1,8 +1,6 @@
 """The heterogeneous S-/R-worker pipeline must be bit-compatible (up to
 float assoc) with the colocated single-device engine."""
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from conftest import STORAGE_KW, tiny_cfg

@@ -1,7 +1,6 @@
 """Pallas kernel validation (interpret mode on CPU) against the pure-jnp
 oracle, swept over shapes, dtypes, GQA ratios, and masking features —
 as required for every kernel in kernels/."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Layer-level unit tests: chunked flash attention vs naive, masks,
 GQA grouping, norms, rope, convs."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

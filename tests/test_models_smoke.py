@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from conftest import tiny_cfg
-from repro.core.config import ASSIGNED_ARCHS, get_arch, SHAPES
+from repro.core.config import ASSIGNED_ARCHS, get_arch
 from repro.models import model as M
 from repro.training.train import make_train_step
 

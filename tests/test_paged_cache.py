@@ -1,6 +1,5 @@
 """Paged KV-cache: allocator invariants + attention equivalence vs the
 linear cache, including hypothesis-driven alloc/free fuzzing."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 pipeline and the colocated oracle to fp tolerance on ragged batches, the
 paged kernel must match its jnp reference, and the serving engine must
 return every page when sequences finish."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,5 @@
 """Performance model (§4.3 eq. 7-11) consistency tests, including the
 paper's own Table 2/3 magnitudes."""
-import math
-
 import pytest
 
 from repro.core import perfmodel as P

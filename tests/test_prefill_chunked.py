@@ -7,14 +7,13 @@ whole-prompt path TOKEN-EXACTLY (greedy), across storage backends,
 ragged/non-divisible prompt lengths, mid-prefill migration, and the
 admission/step-accounting fixes that ride along."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from conftest import random_spec, serve_trace, tiny_cfg
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
-from repro.serving.request import Request, Status
+from repro.serving.request import Request
 
 
 # --------------------------------------------------------------------------- #

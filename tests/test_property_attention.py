@@ -3,7 +3,6 @@ system's central invariant chain:  Pallas kernel == chunked flash == naive
 softmax attention, under random shapes, GQA ratios, masks and windows."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.kernels import ops

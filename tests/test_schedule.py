@@ -1,8 +1,6 @@
 """SLS schedule + Algorithm 1 properties (paper §4.2, eq. 5-6)."""
 import math
 
-import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.core import schedule as S

@@ -5,7 +5,6 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from conftest import tiny_cfg
 from repro.core.config import get_arch
 from repro.distributed import sharding as SH
 from repro.distributed.api import logical_to_spec

@@ -2,7 +2,6 @@
 pipeline — admit, prefill, pipelined hetero decode with SLS, sample —
 produces the same text as a plain single-device generate loop, and the
 schedule behaves as the paper predicts."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
