@@ -1,0 +1,126 @@
+"""Speculative decoding A/B: tokens/s and accepted-tokens-per-step,
+spec-on vs vanilla decode on the SAME trace and engine geometry.
+
+The acceptance-favorable regime the paper's speedup model assumes:
+GREEDY self-speculation (the target model drafts for itself, so every
+draft token matches the verify argmax and acceptance is ~1) with the
+draft length k chosen by the perf model (``perfmodel.optimal_spec_k``).
+Each serving step then commits ~k+1 tokens for ONE pipelined verify
+sweep over the R-side KV plus k cheap S-resident drafter decodes —
+versus one token per pipelined step for the vanilla engine.  The win
+is the per-step pipeline overhead (S<->R round trips per layer)
+amortized over k+1 tokens; the measured acceptance rate and
+accepted/step are emitted next to the model's predictions so drift is
+visible in the JSON trajectory.
+
+Paired A/B: both modes serve the identical trace on the same engine
+geometry; a warmup wave (same prompt shapes) absorbs JIT compilation,
+then a fresh wave of the same requests is timed steady-state.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_model, csv_row
+from repro.core import perfmodel as P
+from repro.serving.engine import ServingEngine, SpecConfig
+from repro.serving.request import Request
+
+
+def _serve(params, cfg, prompts, max_new, spec):
+    eng = ServingEngine(params, cfg, batch=4, cache_len=96,
+                        backend="hetero", num_r_workers=2,
+                        num_microbatches=2, paged_kv=True, page_size=8,
+                        spec_decode=spec)
+    try:
+        # warmup wave: identical shapes, absorbs every trace/compile
+        # (prefill pads, verify chunk callables, drafter fns)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        eng.run(max_steps=4000)
+        if len(eng.finished) != len(prompts):
+            raise RuntimeError(
+                f"warmup: only {len(eng.finished)}/{len(prompts)} finished")
+        # timed wave: same requests again on the warm engine
+        base_steps = eng.step_idx
+        base_spec = dict(eng.spec_stats)
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=len(prompts) + i, prompt=p,
+                               max_new_tokens=max_new))
+        eng.run(max_steps=8000)
+        wall = time.perf_counter() - t0
+        done = [r for r in eng.finished if r.rid >= len(prompts)]
+        if len(done) != len(prompts):
+            raise RuntimeError(
+                f"only {len(done)}/{len(prompts)} finished")
+        toks = sum(len(r.generated) for r in done)
+        st = {k2: eng.spec_stats[k2] - base_spec[k2]
+              for k2 in eng.spec_stats}
+        return dict(wall=wall, toks=toks,
+                    steps=eng.step_idx - base_steps, spec=st)
+    finally:
+        eng.close()
+
+
+def run(print_fn=print):
+    from benchmarks.common import smoke
+    # layers=4 in the full run: the spec win is per-step S<->R pipeline
+    # overhead amortized over k+1 tokens, and each vanilla step pays
+    # layers x microbatches round trips while the drafter stays S-local
+    # — shallow models understate the regime the paper targets
+    cfg, params = bench_model(layers=2 if smoke() else 4, d_model=128)
+    rng = np.random.default_rng(5)
+    n_req = 4 if smoke() else 8
+    max_new = 6 if smoke() else 32
+
+    # k from the plan: greedy self-speculation is the alpha ~ 1 regime;
+    # the drafter shares the target's weights so draft_frac is the
+    # S-side decode cost relative to a full pipelined step (small — the
+    # drafter never crosses to the R-workers)
+    alpha, draft_frac = 0.95, 0.05
+    k = P.optimal_spec_k(alpha, draft_frac=draft_frac)
+    predicted_a = P.spec_accepted_per_step(alpha, k)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(6, 16))).astype(np.int32)
+               for _ in range(n_req)]
+
+    res = {}
+    for mode, spec in (("vanilla", None), ("spec", SpecConfig(k=k))):
+        res[mode] = _serve(params, cfg, prompts, max_new, spec)
+
+    v, s = res["vanilla"], res["spec"]
+    tps_v = v["toks"] / max(v["wall"], 1e-9)
+    tps_s = s["toks"] / max(s["wall"], 1e-9)
+    st = s["spec"]
+    accept = st["accepted_tokens"] / max(1, st["drafted_tokens"])
+    per_step = s["toks"] / max(1, st["steps"])
+    print_fn(csv_row("spec_plan_k", float(k),
+                     f"alpha={alpha} draft_frac={draft_frac}"))
+    print_fn(csv_row("spec_accept_rate", accept,
+                     f"{st['accepted_tokens']}/{st['drafted_tokens']} "
+                     f"drafted (greedy self-spec: expect ~1)"))
+    print_fn(csv_row("spec_tokens_per_step", per_step,
+                     f"predicted {predicted_a:.2f} (alpha={alpha} k={k})"))
+    print_fn(csv_row("vanilla_tokens_per_s", tps_v,
+                     f"{v['toks']} tok in {v['wall']:.2f}s "
+                     f"({v['steps']} steps)"))
+    print_fn(csv_row("spec_tokens_per_s", tps_s,
+                     f"{s['toks']} tok in {s['wall']:.2f}s "
+                     f"({st['steps']} steps)"))
+    speedup = tps_s / max(tps_v, 1e-9)
+    print_fn(csv_row("spec_vs_vanilla_speedup_x", speedup,
+                     "paired A/B, same trace; target >= 1.3x at "
+                     "acceptance-favorable settings"))
+    if not smoke() and speedup < 1.3:
+        # the acceptance criterion for this regime — fail loudly in the
+        # full perf run (smoke keeps CI about code paths, not timing)
+        raise RuntimeError(
+            f"spec speedup {speedup:.2f}x < 1.3x target "
+            f"(accept={accept:.2f}, {per_step:.2f} tok/step)")
+
+
+if __name__ == "__main__":
+    run()

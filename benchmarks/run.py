@@ -32,6 +32,8 @@ BENCHES = [
     ("fleet", "benchmarks.bench_fleet", "Fleet skew/rebalance/recovery"),
     ("tiering", "benchmarks.bench_tiering",
      "KV lifecycle tiering: restore-vs-reprefill TTFT, multi-turn"),
+    ("spec", "benchmarks.bench_spec",
+     "Speculative decoding: accepted/step + tokens/s vs vanilla"),
     ("strategies", "benchmarks.bench_strategies", "§Perf strategy A/B tables"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline (from dry-run)"),
     ("hotpath", "benchmarks.bench_hotpath", "Hot-path overhead + OoO A/B"),

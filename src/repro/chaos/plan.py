@@ -32,6 +32,7 @@ FAULT_SITES = (
     "tier_put",      # HostTier.put raises ChaosIOError
     "tier_get",      # HostTier.pop raises ChaosIOError
     "pool",          # PagedAllocator growth raises ChaosPoolExhausted
+    "verify",        # spec-decode verify step aborts before commit
 )
 
 

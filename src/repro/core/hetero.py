@@ -671,6 +671,50 @@ class RWorker(threading.Thread):
         return self._paged_chunk_fn()(r_in, self.state[layer],
                                       self._chunk_tables[mb])
 
+    def _paged_verify_fn(self):
+        if "paged_verify" not in self._jit_cache:
+            from repro.serving import paged_cache as PC
+            f = partial(PC.r_attention_paged_verify,
+                        window=self.cfg.window,
+                        softcap=self.cfg.attn_logit_softcap,
+                        kv_chunk=self.kv_chunk)
+            self._jit_cache["paged_verify"] = jax.jit(
+                lambda r_in, pool, tables: f(r_in, pool, tables))
+        return self._jit_cache["paged_verify"]
+
+    def _step_paged_verify(self, layer: int, r_in):
+        """Speculative-decode verify append+attend on paged storage:
+        grow the shared block tables for the k+1 candidate tokens on
+        the micro-batch's first paged layer, then scatter+attend via
+        the multi-token verify kernel.
+
+        Allocator/table bookkeeping is keyed SEPARATELY from the
+        prefill-chunk path ((mb, "verify") clones, ("v", mb) table
+        snapshot): one decode step may legally carry BOTH a prefill
+        chunk and a verify work for the same micro-batch — they touch
+        disjoint rows, but each needs its own post-append table
+        snapshot."""
+        from repro.serving import paged_cache as PC
+        mb = layer // self.cfg.num_layers
+        alloc = self.allocators[mb]
+        if layer == self._first_paged_key(mb):
+            alloc.append_chunk(np.asarray(r_in["lengths"]),
+                               np.asarray(r_in["valid"]).sum(axis=1))
+            self._step_clones[(mb, "verify")] = alloc.take_clones()
+            used = int((alloc.tables >= 0).sum(axis=1).max())
+            k = 1
+            while k < used:
+                k *= 2
+            self._chunk_tables[("v", mb)] = alloc.tables_device()[
+                :, :min(k, alloc.max_pages)]
+        clones = self._step_clones.get((mb, "verify"))
+        if clones:
+            self.state[layer] = PC.clone_pool_pages(self.state[layer],
+                                                    clones)
+        r_in = {k: v for k, v in r_in.items() if k != "verify"}
+        return self._paged_verify_fn()(r_in, self.state[layer],
+                                       self._chunk_tables[("v", mb)])
+
     def _first_paged_key(self, mb: int) -> int:
         if self._first_paged.get(mb) is None:
             self._first_paged[mb] = min(
@@ -747,11 +791,17 @@ class RWorker(threading.Thread):
         try:
             t0 = time.perf_counter()
             # a chunked-prefill payload is recognized by its validity
-            # mask — same inbox, same tags, different (multi-token) op
+            # mask — same inbox, same tags, different (multi-token) op.
+            # A verify payload (speculative decode) additionally carries
+            # the "verify" marker: dense/int8 storage runs it through
+            # the very same chunk ops (bit-identical math), only paged
+            # storage routes to the multi-token verify kernel.
             is_chunk = isinstance(r_in, dict) and "valid" in r_in
+            is_verify = is_chunk and "verify" in r_in
             if layer in self.paged_keys:
-                step = self._step_paged_chunk if is_chunk else \
-                    self._step_paged
+                step = (self._step_paged_verify if is_verify
+                        else self._step_paged_chunk if is_chunk
+                        else self._step_paged)
                 r_out, new_state = step(layer, r_in)
             else:
                 r_out, new_state = self._fn(kind, phase, chunk=is_chunk)(
@@ -856,6 +906,10 @@ class _PrefillChunk:
     new_lens: Any                # np[int] base+count per entry of rows
     logits: Any = None           # [mb_size, vocab] once the last layer lands
     vmb: int = -1
+    # speculative-decode verify work: same chunk machinery, but the final
+    # callable returns ALL positions' logits ([mb_size, C, vocab]) and the
+    # R-side paged op routes to the multi-token verify kernel
+    verify: bool = False
 
 
 class HeteroPipelineEngine:
@@ -1199,14 +1253,18 @@ class HeteroPipelineEngine:
             self._jit_chunk_start[key] = f
         return f
 
-    def _chunk_step_fn(self, li: int, phase: int, c: int):
+    def _chunk_step_fn(self, li: int, phase: int, c: int,
+                       verify: bool = False):
         """Fused chunk layer transition, mirroring :meth:`_step_fn`'s
         "phase"/"fused"/"final" shapes.  "final" gathers each row's
         LAST VALID chunk position and returns its logits [mb_size, V]
         (rows with no valid tokens return garbage the caller ignores).
+        With ``verify`` (speculative-decode scoring) the final instead
+        returns EVERY position's logits [mb_size, C, V] — the accept
+        walk needs the target distribution at each candidate offset.
         S-side conv freezing is row-gated inside s_pre_chunk_stateful,
         so no extra masking is needed here."""
-        key = (li, phase, c, self._topo())
+        key = (li, phase, c, verify, self._topo())
         ent = self._jit_chunk_step.get(key)
         if ent is None:
             kind, _ = self.layers[li]
@@ -1222,6 +1280,13 @@ class HeteroPipelineEngine:
                     return po.carry, shard_rin(r_in, slices)
 
                 ent = (_quiet_donation_jit(f, (1, 2)), "phase")
+            elif last and verify:
+                def f(params, p, carry, r_out, base, valid):
+                    ctx = self._chunk_ctx(cfg, base, c)
+                    h = D.s_advance_chunk(kind, phase, p, carry, r_out, ctx)
+                    return M._logits(params, h=h, cfg=cfg)
+
+                ent = (_quiet_donation_jit(f, (2, 3)), "final")
             elif last:
                 def f(params, p, carry, r_out, base, valid):
                     ctx = self._chunk_ctx(cfg, base, c)
@@ -1247,8 +1312,8 @@ class HeteroPipelineEngine:
         return ent
 
     # -- chunked-prefill work queue ------------------------------------------
-    def queue_prefill_chunk(self, mb: int, rows, tokens, bases, counts
-                            ) -> _PrefillChunk:
+    def queue_prefill_chunk(self, mb: int, rows, tokens, bases, counts,
+                            verify: bool = False) -> _PrefillChunk:
         """Queue one chunk of prompt prefill for local ``rows`` of
         micro-batch ``mb``: ``tokens`` [n, C] right-padded, ``bases``
         [n] per-row KV offsets (tokens already prefilled), ``counts``
@@ -1275,7 +1340,7 @@ class HeteroPipelineEngine:
             mb=int(mb), tokens=jnp.asarray(tok), base=jnp.asarray(base),
             valid=jnp.asarray(val), rows=rows,
             new_lens=np.asarray(bases, np.int64)
-            + np.asarray(counts, np.int64))
+            + np.asarray(counts, np.int64), verify=bool(verify))
         self._prefill_inbox.append(work)
         return work
 
@@ -1383,15 +1448,21 @@ class HeteroPipelineEngine:
             dead_wids=dead, hung_wids=hung, lost_wids=lost,
             transient=not dead and not hung, step_no=step_no) from None
 
-    def decode_step(self, tokens_per_mb: Sequence[jnp.ndarray]):
+    def decode_step(self, tokens_per_mb: Optional[Sequence[jnp.ndarray]]):
         """One new token for every sequence of every micro-batch —
         event-driven: advance whichever micro-batch's R-results land
         first (``schedule="ooo"``) or in issue order (``"fifo"``).
 
-        tokens_per_mb: list of [mb_size, 1] int32.
-        Returns list of logits [mb_size, vocab].
+        tokens_per_mb: list of [mb_size, 1] int32, or None to run a
+        CHUNK-ONLY step (speculative-decode verify: the queued verify/
+        prefill works execute through the same sink machinery, no decode
+        micro-batches are started, and no decode length bump happens).
+        Returns list of logits [mb_size, vocab] (list of None when
+        chunk-only).
         """
-        assert len(tokens_per_mb) == self.num_mb
+        run_decode = tokens_per_mb is not None
+        if run_decode:
+            assert len(tokens_per_mb) == self.num_mb
         pc = time.perf_counter
         stats = {"dispatch_s": 0.0, "collect_s": 0.0, "s_dispatch_s": 0.0,
                  "r_wait_s": 0.0, "ooo_advances": 0.0, "prefill_s": 0.0,
@@ -1424,7 +1495,7 @@ class HeteroPipelineEngine:
             works.append(wk)
         self.prefill_results = []
         chunk_carries: Dict[int, Any] = {}
-        active = self.num_mb + len(works)
+        active = (self.num_mb if run_decode else 0) + len(works)
 
         def dispatch(mb: int, li: int, phase: int, shards) -> None:
             t0 = pc()
@@ -1437,6 +1508,10 @@ class HeteroPipelineEngine:
                 fifo.append((mb, li, phase))
             kind, _ = self.layers[li]
             real_mb = mb if mb < self.num_mb else works[mb - self.num_mb].mb
+            if mb >= self.num_mb and works[mb - self.num_mb].verify:
+                # mark verify shards so the R-worker routes them to the
+                # multi-token verify op (key presence, like "valid")
+                shards = tuple(dict(s, verify=True) for s in shards)
             lkey = self._lkey(real_mb, li)
             for w, shard in zip(self.workers, shards):
                 w.inq.put((tag, lkey, kind, phase, shard, sink))
@@ -1496,7 +1571,8 @@ class HeteroPipelineEngine:
                          or all(lg is not None for lg in logits_out))
             t0 = pc()
             r_out = sink.gather((epoch, parity, vmb, li, phase))
-            fn, mode = self._chunk_step_fn(li, phase, wk.tokens.shape[1])
+            fn, mode = self._chunk_step_fn(li, phase, wk.tokens.shape[1],
+                                           verify=wk.verify)
             p = self.layers[li][1]
             if mode == "phase":
                 carry, shards = fn(p, chunk_carries[vmb], r_out,
@@ -1521,7 +1597,7 @@ class HeteroPipelineEngine:
                     stats["prefill_s"] += pc() - t0
                 active -= 1
 
-        for mb in range(self.num_mb):
+        for mb in range(self.num_mb if run_decode else 0):
             t0 = pc()
             carry, shards, new_s = self._start_fn(0)(
                 self.params, self.layers[0][1], tokens_per_mb[mb],
@@ -1631,9 +1707,13 @@ class HeteroPipelineEngine:
         for mb in range(self.num_mb):
             outs.append(logits_out[mb])
             # inactive rows (released / mid-prefill) did not append a
-            # token; their lengths are owned by the prefill path
-            self.mb_lengths[mb] = (self.mb_lengths[mb]
-                                   + self.mb_active[mb].astype(jnp.int32))
+            # token; their lengths are owned by the prefill path.  A
+            # chunk-only (verify) step bumps nothing: candidate-token
+            # lengths are applied from the works loop below.
+            if run_decode:
+                self.mb_lengths[mb] = (self.mb_lengths[mb]
+                                       + self.mb_active[mb]
+                                       .astype(jnp.int32))
         for wk in works:
             # apply chunk progress AFTER the event loop: mb_lengths is
             # an input of every in-flight fused callable, so it must
@@ -1809,6 +1889,34 @@ class HeteroPipelineEngine:
             return
         w, mb, local = self.worker_for(row)
         w.release_rows(mb, [local])
+
+    def truncate_rows(self, rows, new_lens) -> None:
+        """Roll global batch rows back to ``new_lens`` tokens — the
+        speculative-decode rejection path: a verify step appended k+1
+        candidate tokens, the sampler committed a prefix, and the
+        rejected tail must disappear before the next step reads.
+
+        Paged storage releases the pages backing only-rejected positions
+        (``PagedAllocator.truncate``: refcount ladder, partition
+        invariant preserved); dense storage just lowers ``mb_lengths``
+        — stale ring entries past the new length sit outside every
+        chunk-path read mask and are overwritten by the next verify
+        step's write region (which starts at the new length).  Must run
+        between decode steps."""
+        by_mb: Dict[int, List[Tuple[int, int]]] = {}
+        for row, nl in zip(rows, new_lens):
+            mb, local = divmod(int(row), self.mb_size)
+            by_mb.setdefault(mb, []).append((local, int(nl)))
+            if self.paged_kv:
+                w, _, wlocal = self.worker_for(int(row))
+                alloc = w.allocators.get(mb)
+                if alloc is not None:
+                    alloc.truncate(wlocal, int(nl))
+        for mb, pairs in by_mb.items():
+            lens = np.array(self.mb_lengths[mb])
+            for local, nl in pairs:
+                lens[local] = nl
+            self.mb_lengths[mb] = jnp.asarray(lens, jnp.int32)
 
     def paged_resident_bytes(self) -> float:
         """KV bytes currently backed by allocated pages across R-workers

@@ -271,7 +271,9 @@ def optimal_workers(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware,
 def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
          latency_slo: Optional[float] = None, worker_mem: float = 256e9,
          page: int = 0, prefix_hit_rate: float = 0.0,
-         prefix_len: int = 0, tier_gbps: float = 0.0) -> Dict[str, float]:
+         prefix_len: int = 0, tier_gbps: float = 0.0,
+         spec_alpha: float = 0.0,
+         spec_draft_frac: float = 0.15) -> Dict[str, float]:
     """Full §4.3 planning pass -> {batch, workers, workers_mem_min, ...}.
 
     ``page > 0`` plans for paged R-worker KV: R gains the amortized
@@ -293,6 +295,13 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
     shortest prefix worth restoring instead of re-prefilling) that the
     serving engine's restore gating and the LoadController's
     prefix-hit shift consult.
+
+    ``spec_alpha > 0`` plans for speculative decoding at that expected
+    per-token acceptance rate: the plan gains ``spec_k`` (the draft
+    length maximizing :func:`spec_speedup` with a drafter costing
+    ``spec_draft_frac`` of a target step), ``spec_accepted_per_step``
+    and ``spec_speedup`` — ``ServingEngine.from_plan(spec_k="plan")``
+    consumes ``spec_k``.
     """
     if latency_slo is not None:
         b = max_batch_for_slo(cfg, hw_s, seq_len, latency_slo)
@@ -329,7 +338,59 @@ def plan(cfg: ModelConfig, hw_s: Hardware, hw_r: Hardware, seq_len: int,
         out["kv_recompute_s"] = kv_recompute_time(cfg, hw_s, n)
         out["kv_restore_break_even"] = kv_restore_break_even(
             cfg, hw_s, tier_gbps, page=page)
+    if spec_alpha > 0:
+        sk = optimal_spec_k(spec_alpha, spec_draft_frac)
+        out["spec_k"] = float(sk)
+        out["spec_accepted_per_step"] = spec_accepted_per_step(
+            spec_alpha, sk)
+        out["spec_speedup"] = spec_speedup(spec_alpha, sk,
+                                           spec_draft_frac)
     return out
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding (draft k tokens on the S-resident drafter, verify
+# them in ONE multi-token pipeline step): the R-Part streams each cached
+# token ONCE per verify step instead of once per generated token, so the
+# bandwidth-bound R side amortizes by the expected accepted length
+# ---------------------------------------------------------------------------
+def spec_accepted_per_step(alpha: float, k: int) -> float:
+    """Expected committed tokens per verify step with per-token draft
+    acceptance rate ``alpha`` and ``k`` drafted tokens: the truncated
+    geometric mean (1 - alpha^(k+1)) / (1 - alpha) — between 1 (every
+    draft rejected still commits the corrected token) and k+1 (all
+    drafts accepted plus the bonus token)."""
+    k = max(0, int(k))
+    a = min(max(float(alpha), 0.0), 1.0)
+    if k == 0:
+        return 1.0
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def spec_speedup(alpha: float, k: int, draft_frac: float = 0.15) -> float:
+    """Tokens-per-wall-time ratio of speculative over vanilla decode:
+    A(alpha, k) committed tokens per step, paid for with k drafter
+    steps at ``draft_frac`` of a target step each plus the one verify
+    step (whose S/R cost is roughly a vanilla step's — the verify
+    attention sweeps the same KV once, batched over k+1 positions)."""
+    return spec_accepted_per_step(alpha, k) / (1.0 + max(0, int(k))
+                                               * max(0.0, draft_frac))
+
+
+def optimal_spec_k(alpha: float, draft_frac: float = 0.15,
+                   k_max: int = 8) -> int:
+    """The draft length maximizing :func:`spec_speedup` — short when
+    acceptance is poor or the drafter expensive, capped at ``k_max``
+    (deep drafts hit diminishing geometric returns and grow the
+    rejected-KV rollback)."""
+    best_k, best = 1, -1.0
+    for k in range(1, max(1, int(k_max)) + 1):
+        s = spec_speedup(alpha, k, draft_frac)
+        if s > best:
+            best_k, best = k, s
+    return best_k
 
 
 # ---------------------------------------------------------------------------

@@ -98,5 +98,69 @@ def paged_decode_attention_int8(q, pk_q, pk_s, pv_q, pv_s, tables, lengths,
         sink=sink, softcap=softcap)
 
 
+# ---------------------------------------------------------------------------
+# speculative-decode verify: T candidate tokens scored per row in one KV
+# sweep.  The paged fp path has a dedicated Pallas kernel (the multi-token
+# generalization of paged_decode_attention); the dense and int8 paths run
+# the flash reference on both backends — multi-query flash lowers to clean
+# XLA and the KV-bandwidth win comes from the single sweep, not the kernel.
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "kv_chunk",
+                                   "use_kernel", "interpret"))
+def verify_attention(q, k, v, pos, lengths, *, window: int = 0, sink: int = 0,
+                     softcap: float = 0.0, kv_chunk: int = 1024,
+                     use_kernel: str = "auto", interpret: bool = True):
+    """Dense multi-token verify.  q [B,T,Hq,Dh]; k,v [B,S,Hkv,Dh];
+    pos [B,S] int32; lengths [B] int32 base -> [B,T,Hq,Dh]."""
+    del use_kernel, interpret
+    return _ref.verify_attention_ref(q, k, v, pos, lengths, window=window,
+                                     sink=sink, softcap=softcap,
+                                     kv_chunk=kv_chunk)
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "kv_chunk",
+                                   "use_kernel", "interpret"))
+def verify_attention_int8(q, k_q, k_scale, v_q, v_scale, pos, lengths, *,
+                          window: int = 0, sink: int = 0, softcap: float = 0.0,
+                          kv_chunk: int = 1024, use_kernel: str = "auto",
+                          interpret: bool = True):
+    del use_kernel, interpret
+    return _ref.verify_attention_int8_ref(
+        q, k_q, k_scale, v_q, v_scale, pos, lengths, window=window,
+        sink=sink, softcap=softcap, kv_chunk=kv_chunk)
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "kv_chunk",
+                                   "use_kernel", "interpret"))
+def paged_verify_attention(q, pages_k, pages_v, tables, lengths, *,
+                           window: int = 0, sink: int = 0,
+                           softcap: float = 0.0, kv_chunk: int = 1024,
+                           use_kernel: str = "auto", interpret: bool = True):
+    """Block-table multi-token verify.  q [B,T,Hq,Dh]; pages_k/v
+    [P,page,Hkv,Dh]; tables [B,MP] int32; lengths [B] base -> [B,T,Hq,Dh]."""
+    if use_kernel == "pallas" or (use_kernel == "auto" and _on_tpu()):
+        return _pa.paged_verify_attention(
+            q, pages_k, pages_v, tables, lengths, window=window, sink=sink,
+            softcap=softcap, interpret=interpret and not _on_tpu())
+    return _ref.paged_verify_attention_ref(
+        q, pages_k, pages_v, tables, lengths, window=window, sink=sink,
+        softcap=softcap, kv_chunk=kv_chunk)
+
+
+@partial(jax.jit, static_argnames=("window", "sink", "softcap", "kv_chunk",
+                                   "use_kernel", "interpret"))
+def paged_verify_attention_int8(q, pk_q, pk_s, pv_q, pv_s, tables, lengths,
+                                *, window: int = 0, sink: int = 0,
+                                softcap: float = 0.0, kv_chunk: int = 1024,
+                                use_kernel: str = "auto",
+                                interpret: bool = True):
+    """Int8 pools gather into a per-sequence slab (as the decode int8 path
+    does) and run the dense int8 verify reference over it."""
+    del use_kernel, interpret
+    return _ref.paged_verify_attention_int8_ref(
+        q, pk_q, pk_s, pv_q, pv_s, tables, lengths, window=window,
+        sink=sink, softcap=softcap, kv_chunk=kv_chunk)
+
+
 quantize_kv = _qk.quantize_kv
 dequantize_kv = _qk.dequantize_kv

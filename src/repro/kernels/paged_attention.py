@@ -157,3 +157,125 @@ def paged_decode_attention(q, pages_k, pages_v, tables, lengths, *,
     )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
       qg, pages_k, pages_v)
     return out.reshape(b, hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# speculative-decode verify: T queries per sequence against the same paged
+# KV in ONE pool sweep.  This is the whole point of spec decode on the
+# R-side — the per-token cost is the KV-bandwidth pass, and verifying k+1
+# candidate positions amortizes that pass (k+1)-fold.  The layout folds the
+# T query tokens into the head-group dimension ([B, Hkv, T*G, Dh]) so every
+# page is still DMA'd exactly once per (row, kv-head); only the causal mask
+# becomes per-query: query t of row b sits at absolute position
+# ``lengths[b] + t`` (lengths = token count before the verify step), so the
+# mask is ``pos <= lengths[b] + t`` per scratch row.  T == 1 is bit-exact
+# with the decode kernel above.
+# ---------------------------------------------------------------------------
+def _verify_kernel(tbl_ref,         # SMEM [B, MP] int32 block table
+                   len_ref,         # SMEM [B] int32 base positions
+                   q_ref,           # [1, 1, T*G, Dh]
+                   k_ref,           # [1, page, 1, Dh]  (page tables[b, i])
+                   v_ref,           # [1, page, 1, Dh]
+                   o_ref,           # [1, 1, T*G, Dh]
+                   m_s, l_s, acc,   # VMEM scratch: [T*G,1], [T*G,1], [T*G,Dh]
+                   *, scale: float, window: int, sink: int, softcap: float,
+                   page: int, blocks: int, g: int):
+    bi = pl.program_id(0)
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [T*G, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [page, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    tg = q.shape[0]
+    # scratch row i = query token i // g of head-group lane i % g
+    qt = jax.lax.broadcasted_iota(jnp.int32, (tg, 1), 0) // g
+    qpos = len_ref[bi] + qt                              # [T*G, 1]
+    mapped = tbl_ref[bi, sb] >= 0
+    pos = sb * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [T*G, page]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = mapped & (pos[None, :] <= qpos)
+    if window > 0:
+        in_win = pos[None, :] > qpos - window
+        if sink > 0:
+            in_win |= (pos < sink)[None, :]
+        valid &= in_win
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(sb == blocks - 1)
+    def _done():
+        out = acc[...] / jnp.maximum(l_s[...], 1e-30)
+        out = jnp.where(m_s[...] > NEG_INF / 2, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_verify_attention(q, pages_k, pages_v, tables, lengths, *,
+                           window: int = 0, sink: int = 0,
+                           softcap: float = 0.0, interpret: bool = True):
+    """q [B,T,Hq,Dh]; pages_k/v [P,page,Hkv,Dh]; tables [B,MP] int32
+    (-1 = unmapped); lengths [B] int32 base positions (query t attends
+    positions <= lengths[b] + t).  Returns o [B,T,Hq,Dh] in q.dtype."""
+    b, t, hq, dh = q.shape
+    n_pages, page, hkv, _ = pages_k.shape
+    mp = tables.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    # fold tokens into the head-group axis: [B, Hkv, T*G, Dh]
+    qg = q.reshape(b, t, hkv, g, dh).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, hkv, t * g, dh)
+
+    def _page_spec():
+        return pl.BlockSpec(
+            (1, page, 1, dh),
+            lambda bi, hi, si, tbl, ln: (jnp.maximum(tbl[bi, si], 0), 0,
+                                         hi, 0))
+
+    kern = functools.partial(
+        _verify_kernel, scale=1.0 / math.sqrt(dh), window=window, sink=sink,
+        softcap=softcap, page=page, blocks=mp, g=g)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, t * g, dh), lambda bi, hi, si, tbl, ln:
+                         (bi, hi, 0, 0)),
+            _page_spec(),
+            _page_spec(),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t * g, dh), lambda bi, hi, si, tbl, ln:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, dh), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, t * g, dh), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, pages_k, pages_v)
+    return out.reshape(b, hkv, t, g, dh).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, t, hq, dh)

@@ -73,3 +73,59 @@ def paged_decode_attention_int8_ref(q, pk_q, pk_s, pv_q, pv_s, tables,
     return decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, pos, lengths,
                                      window=window, sink=sink,
                                      softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# speculative-decode verify variants: T queries per row in one KV sweep.
+# Query t of row b sits at absolute position lengths[b] + t (``lengths`` is
+# the row's token count BEFORE this verify step — the base the k+1 candidate
+# tokens were just written at), so the causal mask generalizes decode's
+# ``pos <= lengths`` to ``pos <= lengths + t`` per query.  T == 1 degenerates
+# exactly to the decode references above.
+# ---------------------------------------------------------------------------
+def verify_attention_ref(q, k, v, pos, lengths, *, window: int = 0,
+                         sink: int = 0, softcap: float = 0.0,
+                         kv_chunk: int = 1024):
+    """q [B,T,Hq,Dh]; k,v [B,S,Hkv,Dh]; pos [B,S]; lengths [B]
+    -> [B,T,Hq,Dh]."""
+    t = q.shape[1]
+    qpos = (lengths[:, None].astype(jnp.int32)
+            + jnp.arange(t, dtype=jnp.int32)[None, :])
+    return L.flash_attention(q, k, v, qpos, pos, causal=True, window=window,
+                             sink=sink, softcap=softcap,
+                             kv_chunk=max(k.shape[1], kv_chunk))
+
+
+def verify_attention_int8_ref(q, k_q, k_scale, v_q, v_scale, pos, lengths,
+                              *, window: int = 0, sink: int = 0,
+                              softcap: float = 0.0, kv_chunk: int = 1024):
+    k = dequantize_kv(k_q, k_scale).astype(q.dtype)
+    v = dequantize_kv(v_q, v_scale).astype(q.dtype)
+    return verify_attention_ref(q, k, v, pos, lengths, window=window,
+                                sink=sink, softcap=softcap,
+                                kv_chunk=kv_chunk)
+
+
+def paged_verify_attention_ref(q, pages_k, pages_v, tables, lengths, *,
+                               window: int = 0, sink: int = 0,
+                               softcap: float = 0.0, kv_chunk: int = 1024):
+    """q [B,T,Hq,Dh]; pages_k/v [P,page,Hkv,Dh]; tables [B,MP];
+    lengths [B] -> [B,T,Hq,Dh]."""
+    k, pos = paged_gather(pages_k, tables)
+    v, _ = paged_gather(pages_v, tables)
+    return verify_attention_ref(q, k.astype(q.dtype), v.astype(q.dtype),
+                                pos, lengths, window=window, sink=sink,
+                                softcap=softcap, kv_chunk=kv_chunk)
+
+
+def paged_verify_attention_int8_ref(q, pk_q, pk_s, pv_q, pv_s, tables,
+                                    lengths, *, window: int = 0,
+                                    sink: int = 0, softcap: float = 0.0,
+                                    kv_chunk: int = 1024):
+    k_q, pos = paged_gather(pk_q, tables)
+    k_s, _ = paged_gather(pk_s, tables)
+    v_q, _ = paged_gather(pv_q, tables)
+    v_s, _ = paged_gather(pv_s, tables)
+    return verify_attention_int8_ref(q, k_q, k_s, v_q, v_s, pos, lengths,
+                                     window=window, sink=sink,
+                                     softcap=softcap, kv_chunk=kv_chunk)

@@ -89,3 +89,8 @@ class Observability:
         self.faults = r.counter("fault_count")
         self.recovered = r.counter("recovered_count")
         self.mttr = r.histogram("mttr_s")
+        # speculative decoding: tokens the drafter proposed vs draft
+        # tokens the verifier committed (their ratio is the measured
+        # acceptance rate the perfmodel's spec_alpha should match)
+        self.spec_drafted = r.counter("spec_drafted_tokens")
+        self.spec_accepted = r.counter("spec_accepted_tokens")

@@ -22,8 +22,8 @@ Event = Tuple[str, int, float, object]   # (name, step, perf_counter_t, extra)
 # canonical event vocabulary (order here is documentation, not enforcement
 # — preemption legitimately loops a request back to submitted/admitted)
 EVENTS = ("submitted", "admitted", "prefix_hit", "restored",
-          "prefill_chunk", "first_token", "token", "preempted", "parked",
-          "migrated", "finished")
+          "prefill_chunk", "first_token", "token", "draft", "verify",
+          "accept", "preempted", "parked", "migrated", "finished")
 
 
 def first_t(events: List[Event], name: str) -> Optional[float]:

@@ -77,7 +77,7 @@ from repro.models import model as M
 from repro.obs import Observability, coerce_obs_config, schema
 from repro.obs.drift import DriftMonitor
 from repro.serving.request import Request, Status
-from repro.serving.sampler import sample
+from repro.serving.sampler import sample, spec_accept
 
 
 def _pad_pow2(n: int, lo: int = 1) -> int:
@@ -110,6 +110,30 @@ class StepRecord:
         return self.prefill_wall + self.decode_wall + self.fleet_wall
 
 
+@dataclass
+class SpecConfig:
+    """Speculative decoding through the hetero pipeline.
+
+    Each decode step drafts ``k`` tokens per sequence GREEDILY on an
+    S-worker-resident drafter (a plain dense-state model — no R-worker
+    round-trips), then verifies all k+1 candidates (the pending token
+    plus the drafts) in ONE pipelined step as a verify chunk: the
+    R-Part sweeps each row's cached KV once for the whole candidate
+    block instead of once per token, which is the entire point on a
+    bandwidth-bound R side.  Accepted prefixes commit via modified
+    rejection sampling (sampler.spec_accept — greedy traces bit-exact,
+    sampled traces token-exact in expectation) and the rejected tail's
+    KV is rolled back (``HeteroPipelineEngine.truncate_rows``).
+
+    ``draft_cfg``/``draft_params`` select the drafter model; both None
+    means SELF-speculation (the target model drafts for itself —
+    acceptance ~1, useful for tests and acceptance-favorable benches).
+    """
+    k: int = 4
+    draft_cfg: Optional[ModelConfig] = None
+    draft_params: Any = None
+
+
 class ServingEngine:
     @classmethod
     def from_plan(cls, params, cfg, *, seq_len: int, hw_s=None, hw_r=None,
@@ -132,9 +156,19 @@ class ServingEngine:
         prefix_len = kw.pop("prefix_len", 0)
         if not kw.get("prefix_cache"):
             prefix_hit = 0.0        # no cache, no dedup to plan for
+        # spec_k="plan" lets the model pick the draft length maximizing
+        # spec_speedup at the expected acceptance rate (spec_alpha —
+        # mirror of prefill_chunk="plan"); an int passes through
+        spec_k = kw.pop("spec_k", None)
+        spec_alpha = kw.pop("spec_alpha", 0.8)
         plan = P.plan(cfg, hw_s, hw_r, seq_len=seq_len,
                       latency_slo=latency_slo, page=page,
-                      prefix_hit_rate=prefix_hit, prefix_len=prefix_len)
+                      prefix_hit_rate=prefix_hit, prefix_len=prefix_len,
+                      spec_alpha=spec_alpha if spec_k == "plan" else 0.0)
+        if spec_k == "plan":
+            kw["spec_decode"] = SpecConfig(k=int(plan["spec_k"]))
+        elif spec_k:
+            kw["spec_decode"] = SpecConfig(k=int(spec_k))
         batch = int(min(max_batch, max(2, plan["batch"])))
         if batch % 2:
             batch += 1
@@ -179,6 +213,7 @@ class ServingEngine:
                  collect_timeout_s: float = 600.0,
                  profile_timing: bool = False, prefill_chunk: int = 0,
                  prefix_cache: bool = False, kv_tiering=None,
+                 spec_decode: Optional[SpecConfig] = None,
                  preempt_after: int = 0,
                  observability=False,
                  chaos=None,
@@ -221,6 +256,27 @@ class ServingEngine:
                     "arch with window=0: recurrent/windowed/cross-"
                     "attention R-state cannot be shared page-wise, so "
                     "the skipped-prefill admission would be wrong")
+        if spec_decode is not None:
+            from repro.core.config import ATTN as _ATTN
+            if backend != "hetero":
+                raise ValueError(
+                    "spec_decode requires backend='hetero' — the verify "
+                    "step rides the pipelined chunk machinery")
+            if spec_decode.k < 1:
+                raise ValueError(
+                    f"spec_decode.k must be >= 1, got {spec_decode.k}")
+            if any(kk != _ATTN for kk in cfg.layer_pattern) \
+                    or cfg.window > 0 or cfg.is_encdec:
+                raise ValueError(
+                    "spec_decode requires a pure self-attention arch "
+                    "with window=0: rejected-KV rollback is positional "
+                    "truncation, which recurrent/windowed/cross-"
+                    "attention R-state does not support")
+            if (spec_decode.draft_cfg is None) \
+                    != (spec_decode.draft_params is None):
+                raise ValueError(
+                    "spec_decode needs BOTH draft_cfg and draft_params "
+                    "(or neither, for self-speculation)")
         if prefill_chunk:
             if backend != "hetero":
                 raise ValueError(
@@ -254,10 +310,13 @@ class ServingEngine:
         self.paged_kv = paged_kv and backend == "hetero"
         self.prefill_chunk = int(prefill_chunk)
         self.prefix_cache = bool(prefix_cache)
+        self.spec = spec_decode
         # prefix-hit admissions stream their uncached suffix through the
         # chunk machinery even when prefill_chunk=0 (one whole-suffix
-        # chunk), so the chunk plumbing runs whenever either is on
-        self._uses_chunks = bool(prefill_chunk) or self.prefix_cache
+        # chunk), so the chunk plumbing runs whenever either is on;
+        # spec decode's verify steps ARE chunk work, so it joins too
+        self._uses_chunks = bool(prefill_chunk) or self.prefix_cache \
+            or self.spec is not None
         self.prefix_stats = {"hits": 0, "misses": 0, "cached_tokens": 0,
                              "prompt_tokens": 0}
         # auto-preemption: after this many consecutive steps in which
@@ -322,6 +381,33 @@ class ServingEngine:
             self.engine.state = M.init_decode_state(cfg, batch, cache_len)
             self.num_mb = 1
             self.mb_size = batch
+
+        # speculative decoding: the S-resident drafter — a plain dense-
+        # state model advanced with the single-device callables, no
+        # R-worker involvement.  Capacity cache_len + k so throwaway
+        # draft runs near capacity never wrap the ring.  ``_spec_dirty``
+        # drives lazy resync: a row is dirty whenever its token history
+        # changed outside the commit path (admission, fault replay) and
+        # is re-fed feed_tokens[:-1] before the next draft.
+        self._spec_dirty: set = set()
+        # plain counters (always on, unlike obs): bench_spec and the
+        # acceptance-rate assertions read these
+        self.spec_stats = {"drafted_tokens": 0, "accepted_tokens": 0,
+                           "steps": 0}
+        if self.spec is not None:
+            self._spec_cfg = self.spec.draft_cfg or cfg
+            self._spec_params = (params if self.spec.draft_params is None
+                                 else self.spec.draft_params)
+            self._spec_cache = cache_len + self.spec.k
+            self._spec_state = M.init_decode_state(
+                self._spec_cfg, batch, self._spec_cache)
+            self._spec_decode_fn = jax.jit(partial(
+                M.decode_step, cfg=self._spec_cfg))
+            self._spec_commit_fn = jax.jit(partial(
+                M.prefill_chunk, cfg=self._spec_cfg))
+            self._spec_sync_fn = jax.jit(partial(
+                M.prefill, cfg=self._spec_cfg,
+                cache_len=self._spec_cache))
 
         if admission == "loadctl":
             s = max(1, target_len)
@@ -394,30 +480,41 @@ class ServingEngine:
                  for a in w.allocators.values()]
         return min(pools) if pools else None
 
+    def _length_cap_reason(self) -> Optional[str]:
+        """The reason prompt + max_new_tokens must fit cache_len on
+        this engine configuration, or None when the dense ring may
+        legally wrap (monolithic dense serving; windowed archs wrap by
+        design).  One helper so every configuration that cannot honor
+        an over-length request rejects it with the SAME message — the
+        two former copies of this check had drifted apart."""
+        if self.spec is not None:
+            return ("speculative decoding rolls rejected tokens back "
+                    "by positional KV truncation, which a wrapped ring "
+                    "would corrupt")
+        if self.prefill_chunk and self.cfg.window == 0:
+            # chunked prefill streams KV incrementally and relies on
+            # the ring never wrapping (windowed archs wrap by design
+            # and are exempt); the monolithic path's silent wrap is
+            # not reproducible chunk-wise
+            return "required with prefill_chunk > 0"
+        if self.paged_kv and self._paged_pool_min() is not None:
+            # the dense ring silently wraps past cache_len; the paged
+            # path would silently drop tokens past capacity
+            return "the paged path would drop tokens past capacity"
+        return None
+
     def submit(self, req: Request) -> None:
-        # guards apply only when something is actually paged — on archs
-        # where paging fell back to dense (windowed attention) the ring
-        # legally wraps past cache_len
-        if self.prefill_chunk and self.cfg.window == 0 \
+        reason = self._length_cap_reason()
+        if reason is not None \
                 and req.prompt_len + req.max_new_tokens > self.cache_len:
-            # chunked prefill streams KV incrementally and relies on the
-            # ring never wrapping (windowed archs wrap by design and are
-            # exempt); the monolithic path's silent wrap is not
-            # reproducible chunk-wise, so reject up front
+            # the request could never finish within the cache: reject
+            # up front instead of wrapping/dropping KV mid-serve
             raise ValueError(
                 f"request {req.rid}: prompt ({req.prompt_len}) + "
                 f"max_new_tokens ({req.max_new_tokens}) exceeds cache_len "
-                f"({self.cache_len}) — required with prefill_chunk > 0")
+                f"({self.cache_len}) — {reason}")
         pool_min = self._paged_pool_min() if self.paged_kv else None
         if pool_min is not None:
-            if req.prompt_len + req.max_new_tokens > self.cache_len:
-                # the dense ring silently wraps past cache_len; the paged
-                # path would silently drop tokens past capacity — reject
-                # the impossible request up front instead
-                raise ValueError(
-                    f"request {req.rid}: prompt ({req.prompt_len}) + "
-                    f"max_new_tokens ({req.max_new_tokens}) exceeds "
-                    f"cache_len ({self.cache_len})")
             need = self._paged_pages_for(req)
             if need > pool_min:
                 # pool capacity is static — fail at submit, not from a
@@ -603,6 +700,29 @@ class ServingEngine:
         return toks
 
     # -- park / retire / preempt ------------------------------------------ #
+    def _finish_row(self, row: int, r: Request, reason: str) -> None:
+        """THE finish site: every path that ends a sequence (monolithic
+        admit, chunked-prefill token 0, the decode token loop, the
+        spec-decode commit walk) funnels through here exactly once, so
+        the finish bookkeeping — status, step, reason, slot release,
+        page retirement, observability — can never half-happen or
+        double-record.  ``reason`` comes from
+        :meth:`Request.finish_reason_for`, whose precedence rule makes
+        a stop token landing exactly at the max_new_tokens cap report
+        "stop" (token semantics outrank budget exhaustion)."""
+        r.status = Status.DONE
+        r.finish_step = self.step_idx
+        r.finish_reason = reason
+        self.finished.append(r)
+        self.slots[row] = None
+        self._retire_row(row, r)
+        if self.obs is not None:
+            self._obs_finish(r)
+        if self._uses_chunks:
+            # freed slots stop decoding entirely (no KV append, no
+            # length bump) until readmission re-prefills them
+            self.engine.set_row_active(row, False)
+
     def _retire_row(self, row: int, req: Request) -> None:
         """A finished sequence's pages: with tiering, PARK the written
         chain (prompt + generated minus the never-appended last token)
@@ -859,16 +979,9 @@ class ServingEngine:
             self._last_tok[rows[i]] = t0
             if self.obs is not None:
                 self._obs_first_token(r, rows[i])
-            if r.is_finished(t0):
-                r.status = Status.DONE
-                r.finish_step = self.step_idx
-                self.finished.append(r)
-                self.slots[rows[i]] = None
-                self._retire_row(rows[i], r)
-                if self.obs is not None:
-                    self._obs_finish(r)
-                if self._uses_chunks:
-                    self.engine.set_row_active(rows[i], False)
+            reason = r.finish_reason_for(t0)
+            if reason is not None:
+                self._finish_row(rows[i], r, reason)
             else:
                 self.slots[rows[i]] = r
                 if self._uses_chunks:
@@ -878,6 +991,9 @@ class ServingEngine:
                     # KV forever (the chunked path re-activates in
                     # _process_prefill_results)
                     self.engine.set_row_active(rows[i], True)
+                if self.spec is not None:
+                    # the drafter has no KV for this fresh history yet
+                    self._spec_dirty.add(rows[i])
         if self.prefix_cache:
             for row, r in zip(rows, reqs):
                 if self.slots[row] is not None:
@@ -981,6 +1097,8 @@ class ServingEngine:
         decode step just executed; sequences whose last chunk arrived
         sample token 0 from its logits and join the decode batch."""
         for wk in self.engine.prefill_results:
+            if wk.verify:
+                continue      # spec-decode verify work: _spec_step's
             logits = wk.logits
             sampled = None
             for i, local in enumerate(wk.rows):
@@ -1015,16 +1133,15 @@ class ServingEngine:
                 self._last_tok[row] = tok0
                 if self.obs is not None:
                     self._obs_first_token(r, row)
-                if r.is_finished(tok0):
-                    r.status = Status.DONE
-                    r.finish_step = self.step_idx
-                    self.finished.append(r)
-                    self.slots[row] = None
-                    self._retire_row(row, r)
-                    if self.obs is not None:
-                        self._obs_finish(r)
+                reason = r.finish_reason_for(tok0)
+                if reason is not None:
+                    self._finish_row(row, r, reason)
                 else:
                     self.engine.set_row_active(row, True)
+                    if self.spec is not None:
+                        # streamed straight to the R-workers — the
+                        # drafter never saw this history
+                        self._spec_dirty.add(row)
                     if self.prefix_cache:
                         # the written chain's pages are complete now —
                         # index them so later admissions can share
@@ -1032,6 +1149,230 @@ class ServingEngine:
                         # to KV, hence the [:-1])
                         self.engine.register_prefix(
                             row, r.feed_tokens[:-1])
+
+    # ------------------------------------------------------------------ #
+    # speculative decoding: each serving step drafts up to k tokens per
+    # RUNNING row on the S-resident drafter, scores all k+1 candidates
+    # in ONE pipelined verify chunk (their KV appended on the R-workers
+    # by the multi-token verify op), commits a token-exact prefix via
+    # rejection sampling, and truncates the rejected tail's KV.  The
+    # drafter itself never speculates into its own state: it drafts on
+    # a throwaway copy and replays only committed tokens, so rejection
+    # rolls back R-worker KV alone.
+    # ------------------------------------------------------------------ #
+    def _spec_rows(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.status is Status.RUNNING]
+
+    def _spec_sync_rows(self, live) -> None:
+        """Re-feed dirty rows' WRITTEN history (feed_tokens[:-1], the
+        same chain the R-workers hold) through the drafter so its KV
+        agrees with the target's before drafting resumes."""
+        rows = [row for row, _ in live if row in self._spec_dirty]
+        if not rows:
+            return
+        lens = [self.slots[row].feed_len - 1 for row in rows]
+        n_pad = _pad_pow2(len(rows))
+        s_pad = _pad_pow2(max(lens), 8)
+        toks = np.zeros((n_pad, s_pad), np.int32)
+        plens = np.zeros((n_pad,), np.int32)
+        for i, (row, ln) in enumerate(zip(rows, lens)):
+            toks[i, :ln] = self.slots[row].feed_tokens[:ln]
+            plens[i] = ln
+        _, sub = self._spec_sync_fn(self._spec_params,
+                                    tokens=jnp.asarray(toks),
+                                    prompt_lens=jnp.asarray(plens))
+        self._spec_state = M.scatter_rows(
+            self._spec_state, sub, np.asarray(rows),
+            np.arange(len(rows)))
+        self._spec_dirty.difference_update(rows)
+
+    def _spec_draft(self, live):
+        """Greedy-draft tokens on a THROWAWAY copy of the drafter state
+        (jax immutability makes the copy free): the real drafter only
+        advances through the commit path, so rejection never has S-side
+        KV to roll back.  Per-row draft length is capped so the
+        committed chain can never exceed prompt + max_new_tokens —
+        which submit() bounds by cache_len — hence verify appends
+        never overflow paged capacity or wrap the dense ring."""
+        k = self.spec.k
+        k_row = {row: max(0, min(k, r.max_new_tokens
+                                 - len(r.generated) - 1))
+                 for row, r in live}
+        drafts: Dict[int, List[int]] = {row: [] for row, _ in live}
+        kmax = max(k_row.values())
+        if kmax == 0:
+            return drafts, k_row
+        state = self._spec_state
+        cur = np.array(self._last_tok, np.int32)
+        for j in range(kmax):
+            logits, state = self._spec_decode_fn(
+                self._spec_params, state=state,
+                tokens=jnp.asarray(cur[:, None]))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for row, _ in live:
+                if j < k_row[row]:
+                    drafts[row].append(int(nxt[row]))
+            cur = nxt
+        return drafts, k_row
+
+    def _spec_queue_verify(self, live, drafts) -> None:
+        """Queue one verify chunk per micro-batch with resident rows:
+        candidates = [pending token c, draft_1..draft_kr], appended at
+        the row's current KV length.  Chunk width is the FIXED k+1 so
+        the fused verify callables trace once, not per draft length."""
+        per_mb: Dict[int, List[int]] = {}
+        for row, _r in live:
+            per_mb.setdefault(row // self.mb_size, []).append(row)
+        c = self.spec.k + 1
+        for mb, rows in per_mb.items():
+            toks = np.zeros((len(rows), c), np.int32)
+            bases, counts, locs = [], [], []
+            for i, row in enumerate(rows):
+                cand = [int(self._last_tok[row])] + drafts[row]
+                toks[i, :len(cand)] = cand
+                locs.append(row % self.mb_size)
+                bases.append(self.slots[row].feed_len - 1)
+                counts.append(len(cand))
+            self.engine.queue_prefill_chunk(mb, locs, toks, bases,
+                                            counts, verify=True)
+
+    def _spec_verify(self, live, drafts) -> List:
+        """Run the queued verify (and any prefill) chunks in a
+        chunk-only pipelined step under the step supervisor.  On a
+        StepFault the healer re-prefills every live row from token
+        history — discarding any orphaned candidate appends — and the
+        verify work is re-queued and re-run TOKEN-EXACTLY: drafts are
+        deterministic given the drafter state and the sampling RNG is
+        untouched until commit."""
+        attempt, t_first = 0, 0.0
+        while True:
+            if live:
+                self._spec_queue_verify(live, drafts)
+            try:
+                self.engine.decode_step(None)
+                if self.chaos is not None and live:
+                    fs = self.chaos.fire("verify", step=self.step_idx)
+                    if fs is not None:
+                        raise StepFault(
+                            "chaos: verify step aborted before commit",
+                            transient=True, step_no=self.step_idx)
+            except StepFault as fault:
+                if attempt == 0:
+                    t_first = time.monotonic()
+                attempt += 1
+                self._heal_step_fault(fault, attempt)
+                continue
+            if attempt:
+                self._note_recovered(attempt, time.monotonic() - t_first)
+            return [wk for wk in self.engine.prefill_results if wk.verify]
+
+    def _spec_commit_drafter(self, feeds: Dict[int, List[int]]) -> None:
+        """Advance the REAL drafter through each surviving row's
+        committed tokens with one batched ragged prefill_chunk
+        (chunk_pos -1 rows are untouched no-ops).  Fixed k+1 width —
+        one trace."""
+        c = self.spec.k + 1
+        toks = np.zeros((self.batch, c), np.int32)
+        pos = np.full((self.batch, c), -1, np.int32)
+        for row, feed in feeds.items():
+            base = int(np.asarray(self._spec_state["lengths"])[row])
+            toks[row, :len(feed)] = feed
+            pos[row, :len(feed)] = base + np.arange(len(feed))
+        _, self._spec_state = self._spec_commit_fn(
+            self._spec_params, state=self._spec_state,
+            tokens=jnp.asarray(toks), chunk_pos=jnp.asarray(pos))
+
+    def _spec_step(self) -> int:
+        """One speculative serving step: sync -> draft -> verify ->
+        accept/commit -> truncate.  Returns tokens committed batch-wide.
+        Greedy rows commit by a deterministic argmax walk (bit-exact
+        with non-speculative greedy decoding); sampled rows commit via
+        rejection sampling that preserves the target token distribution
+        exactly (tests/test_sampler.py's chi-squared check)."""
+        live = self._spec_rows()
+        if not live and not self.engine._prefill_inbox:
+            return 0
+        drafts: Dict[int, List[int]] = {}
+        k_row: Dict[int, int] = {}
+        if live:
+            self._spec_sync_rows(live)
+            drafts, k_row = self._spec_draft(live)
+        obs = self.obs
+        if obs is not None:
+            for row, r in live:
+                r.mark("draft", self.step_idx, extra=k_row[row])
+                obs.spec_drafted.inc(k_row[row])
+        vworks = self._spec_verify(live, drafts)
+        lg_of: Dict[int, np.ndarray] = {}
+        for wk in vworks:
+            for i, local in enumerate(wk.rows):
+                row = wk.mb * self.mb_size + int(local)
+                cnt = len(drafts.get(row, ())) + 1
+                lg_of[row] = np.asarray(wk.logits[int(local), :cnt])
+        t_now = time.perf_counter() if obs is not None else 0.0
+        emitted = 0
+        trunc_rows: List[int] = []
+        trunc_lens: List[int] = []
+        finish: List[Tuple[int, Request, str]] = []
+        feeds: Dict[int, List[int]] = {}
+        for row, r in live:
+            lv = lg_of[row]                    # [k_row+1, V]
+            d = drafts[row]
+            base = r.feed_len - 1              # KV length before verify
+            if r.temperature > 0.0:
+                self.rng, sub = jax.random.split(self.rng)
+            else:
+                sub = self.rng                 # greedy walk draws nothing
+            toks, acc = spec_accept(lv, d, sub,
+                                    temperature=r.temperature,
+                                    top_k=r.top_k, top_p=r.top_p)
+            self.spec_stats["drafted_tokens"] += len(d)
+            self.spec_stats["accepted_tokens"] += acc
+            if obs is not None:
+                r.mark("verify", self.step_idx, extra=len(d) + 1)
+                r.mark("accept", self.step_idx, extra=acc)
+                obs.spec_accepted.inc(acc)
+            c0 = int(self._last_tok[row])
+            m, reason, walked = 0, None, []
+            for t in toks:
+                t = int(t)
+                r.generated.append(t)
+                walked.append(t)
+                m += 1
+                emitted += 1
+                if obs is not None:
+                    r.mark("token", self.step_idx, t_now)
+                    obs.generated.inc()
+                reason = r.finish_reason_for(t)
+                if reason is not None:
+                    break                      # stop token outranks cap
+            if obs is not None:
+                prev = self._tok_t[row]
+                if prev > 0.0:
+                    obs.inter_token.observe(t_now - prev)
+                self._tok_t[row] = t_now
+            # the committed chain's KV = feed_tokens[:-1] in both the
+            # live and early-finish cases: verify appended k_row+1
+            # candidates, positions base..base+m-1 hold [c0, accepted
+            # drafts] and the rest must disappear
+            trunc_rows.append(row)
+            trunc_lens.append(base + m)
+            if reason is not None:
+                finish.append((row, r, reason))
+            else:
+                self._last_tok[row] = walked[-1]
+                feeds[row] = [c0] + walked[:-1]
+        if trunc_rows:
+            # BEFORE retiring finished rows: tier parking exports the
+            # written chain, so the rejected tail must already be gone
+            self.engine.truncate_rows(trunc_rows, trunc_lens)
+        for row, r, reason in finish:
+            self._finish_row(row, r, reason)
+        if feeds:
+            self._spec_commit_drafter(feeds)
+        self.spec_stats["steps"] += 1
+        return emitted
 
     # ------------------------------------------------------------------ #
     def _replay_rows(self, rows) -> int:
@@ -1219,6 +1560,12 @@ class ServingEngine:
         rows = [r for r, req in enumerate(self.slots) if req is not None]
         if rows:
             self._replay_rows(rows)
+        if self.spec is not None:
+            # defensive: the drafter state was not touched by the fault
+            # (it lives on the S-worker), but replay is cheap relative
+            # to a recovery and guarantees draft/verify agreement on
+            # the row histories after any partial-append cleanup
+            self._spec_dirty.update(rows)
         fresh = [r for r, req in enumerate(self.slots)
                  if req is not None and req.status is Status.PREFILLING
                  and req.prefill_pos == 0]
@@ -1293,53 +1640,56 @@ class ServingEngine:
         prefill_wall += pc() - t0
 
         t0 = pc()
-        toks = jnp.asarray(self._last_tok[:, None])
-        if self.backend == "hetero":
-            logits = self._decode_supervised(toks)
-        else:
-            # keep lengths frozen for inactive rows (avoid cache drift)
-            logits = self.engine.decode_step(toks)
-        decode_wall = pc() - t0
-        if self.backend == "hetero":
-            # chunk work executed inside the pipelined step — S-side
-            # chunk callables plus event-loop waits that served only
-            # chunk work — is prefill time, not decode time
-            chunk_s = self.engine.last_step_stats.get("prefill_s", 0.0)
-            decode_wall -= min(chunk_s, decode_wall)
-            prefill_wall += chunk_s
-        new_tok = self._sample_tokens(
-            logits, [r if r is not None and r.status is Status.RUNNING
-                     else None for r in self.slots])
-
         obs = self.obs
-        t_now = pc() if obs is not None else 0.0
-        tokens_emitted = 0
-        for i, r in enumerate(self.slots):
-            if r is None or r.status is not Status.RUNNING:
-                continue              # PREFILLING rows own no decode token
-            tok = int(new_tok[i])
-            r.generated.append(tok)
-            self._last_tok[i] = tok
-            tokens_emitted += 1
-            if obs is not None:
-                r.mark("token", self.step_idx, t_now)
-                obs.generated.inc()
-                prev = self._tok_t[i]
-                if prev > 0.0:
-                    obs.inter_token.observe(t_now - prev)
-                self._tok_t[i] = t_now
-            if r.is_finished(tok):
-                r.status = Status.DONE
-                r.finish_step = self.step_idx
-                self.finished.append(r)
-                self.slots[i] = None
-                self._retire_row(i, r)
+        if self.spec is not None:
+            # speculative decoding replaces decode+sample wholesale:
+            # draft on the S-resident drafter, score candidates in one
+            # chunk-only pipelined step, commit via rejection sampling.
+            # The verify chunk's S-time IS decode work here, so the
+            # spec-off branch's chunk_s re-attribution is skipped
+            # (queued prefill chunks ride the same step and smear into
+            # decode_wall — acceptable at bench granularity).
+            tokens_emitted = self._spec_step()
+            decode_wall = pc() - t0
+        else:
+            toks = jnp.asarray(self._last_tok[:, None])
+            if self.backend == "hetero":
+                logits = self._decode_supervised(toks)
+            else:
+                # keep lengths frozen for inactive rows (avoid drift)
+                logits = self.engine.decode_step(toks)
+            decode_wall = pc() - t0
+            if self.backend == "hetero":
+                # chunk work executed inside the pipelined step —
+                # S-side chunk callables plus event-loop waits that
+                # served only chunk work — is prefill time, not decode
+                chunk_s = self.engine.last_step_stats.get(
+                    "prefill_s", 0.0)
+                decode_wall -= min(chunk_s, decode_wall)
+                prefill_wall += chunk_s
+            new_tok = self._sample_tokens(
+                logits, [r if r is not None and r.status is Status.RUNNING
+                         else None for r in self.slots])
+
+            t_now = pc() if obs is not None else 0.0
+            tokens_emitted = 0
+            for i, r in enumerate(self.slots):
+                if r is None or r.status is not Status.RUNNING:
+                    continue        # PREFILLING rows own no decode token
+                tok = int(new_tok[i])
+                r.generated.append(tok)
+                self._last_tok[i] = tok
+                tokens_emitted += 1
                 if obs is not None:
-                    self._obs_finish(r)
-                if self._uses_chunks:
-                    # freed slots stop decoding entirely (no KV append,
-                    # no length bump) until readmission re-prefills them
-                    self.engine.set_row_active(i, False)
+                    r.mark("token", self.step_idx, t_now)
+                    obs.generated.inc()
+                    prev = self._tok_t[i]
+                    if prev > 0.0:
+                        obs.inter_token.observe(t_now - prev)
+                    self._tok_t[i] = t_now
+                reason = r.finish_reason_for(tok)
+                if reason is not None:
+                    self._finish_row(i, r, reason)
         if self._uses_chunks:
             # AFTER the token loop: a sequence whose last chunk landed
             # this step gets token 0 from the chunk logits and decodes

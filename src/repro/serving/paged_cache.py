@@ -737,6 +737,47 @@ class PagedAllocator:
         self.frozen[row] = False
         self.lengths[row] = 0
 
+    def truncate(self, row: int, new_len: int) -> int:
+        """Roll ``row`` back to ``new_len`` tokens — the speculative-
+        decode rejection path: verify appended k+1 candidate tokens, the
+        sampler accepted a prefix, and the pages backing only rejected
+        positions must return to the pool (the partition invariant
+        counts them as free again, so admission capacity is not leaked
+        to tokens that were never emitted).
+
+        Table slots >= ceil(new_len/page) walk the same ladder as
+        :meth:`release` (refcount decrement; cached prefix pages park in
+        the LRU instead of freeing).  The kept partial page needs no
+        wipe: derived positions >= new_len fall outside every reader's
+        valid mask, and the next verify step's write region starts at
+        ``new_len`` — covering any stale slot before it becomes
+        visible.  Frozen rows only adjust ``lengths`` (their tables must
+        never change again).  Returns the number of table slots
+        dropped."""
+        new_len = max(0, int(new_len))
+        if not self.active[row] or new_len >= int(self.lengths[row]):
+            return 0
+        if self.frozen[row]:
+            self.lengths[row] = new_len
+            return 0
+        keep = -(-new_len // self.page)
+        slots = [s for s in range(keep, self.max_pages)
+                 if self.tables[row, s] >= 0]
+        if slots:
+            self._dev_tables = None
+        for s in slots:
+            pid = int(self.tables[row, s])
+            self.tables[row, s] = -1
+            self.refcount[pid] -= 1
+            if self.refcount[pid] > 0:
+                continue
+            if self.prefix is not None and self.prefix.is_cached(pid):
+                self.prefix.park(pid)
+            else:
+                self.free.append(pid)
+        self.lengths[row] = new_len
+        return len(slots)
+
     def park_row(self, row: int, tokens) -> bool:
         """Park-on-finish / park-on-preempt: index ``row``'s WRITTEN
         chain (``tokens``) and keep every refcount-zero page of it
@@ -1276,4 +1317,58 @@ def r_attention_paged_chunk(r_in: Dict, pool: Dict, tables, *,
     o = L.flash_attention(q, kd, vd, qpos, kpos, causal=True,
                           window=window, softcap=softcap,
                           kv_chunk=max(kd.shape[1], kv_chunk))
+    return {"o": o}, out
+
+
+def r_attention_paged_verify(r_in: Dict, pool: Dict, tables, *,
+                             window: int = 0, softcap: float = 0.0,
+                             kv_chunk: int = 1024,
+                             use_kernel: str = "auto") -> Tuple[Dict, Dict]:
+    """Speculative-decode verify R-Part over block tables: scatter the
+    k+1 candidate tokens' (k, v) into the mapped pages exactly as the
+    chunked-prefill op does (write-then-attend), then score every
+    candidate position against the whole cache in ONE pool sweep via the
+    multi-token verify kernel — the single KV-bandwidth pass that
+    amortizes FastDecode's per-token R-side cost (k+1)-fold.
+
+    r_in: q/k/v [B,C,...], lengths [B] (base = tokens before this step),
+    valid [B,C] (all-True on verified rows, all-False on bystanders),
+    plus the ``verify`` marker key the worker routes on.  Returns
+    ({"o": [B,C,Hq,Dh]}, pool).  C == 1 degenerates to the decode path's
+    numbers (same gather, same masks).
+    """
+    q = r_in["q"]
+    base, valid = r_in["lengths"], r_in["valid"]
+    quantized = "k_q" in pool
+    any_pages = pool["k_q"] if quantized else pool["k"]
+    num_pages, page = any_pages.shape[0], any_pages.shape[1]
+    mp = tables.shape[1]
+    b, c = q.shape[:2]
+    qpos = base[:, None] + jnp.arange(c)[None, :]
+    pidx = jnp.clip(qpos // page, 0, mp - 1)
+    ids = jnp.take_along_axis(tables, pidx, axis=1)          # [B, C]
+    ok = valid & (ids >= 0) & (qpos // page < mp)
+    ids = jnp.where(ok, ids, num_pages)                      # OOB -> drop
+    slot = (qpos % page).astype(jnp.int32)
+    out = dict(pool)
+    from repro.kernels import ops
+    if quantized:
+        k_q, k_s = ops.quantize_kv(r_in["k"])
+        v_q, v_s = ops.quantize_kv(r_in["v"])
+        out["k_q"] = pool["k_q"].at[ids, slot].set(k_q, mode="drop")
+        out["k_s"] = pool["k_s"].at[ids, slot].set(k_s, mode="drop")
+        out["v_q"] = pool["v_q"].at[ids, slot].set(v_q, mode="drop")
+        out["v_s"] = pool["v_s"].at[ids, slot].set(v_s, mode="drop")
+        o = ops.paged_verify_attention_int8(
+            q, out["k_q"], out["k_s"], out["v_q"], out["v_s"], tables,
+            base, window=window, softcap=softcap, kv_chunk=kv_chunk,
+            use_kernel=use_kernel)
+    else:
+        out["k"] = pool["k"].at[ids, slot].set(
+            r_in["k"].astype(pool["k"].dtype), mode="drop")
+        out["v"] = pool["v"].at[ids, slot].set(
+            r_in["v"].astype(pool["v"].dtype), mode="drop")
+        o = ops.paged_verify_attention(
+            q, out["k"], out["v"], tables, base, window=window,
+            softcap=softcap, kv_chunk=kv_chunk, use_kernel=use_kernel)
     return {"o": o}, out

@@ -30,6 +30,11 @@ class Request:
     top_p: float = 0.0                       # 0/1 = disabled
     status: Status = Status.QUEUED
     generated: List[int] = field(default_factory=list)
+    # why generation ended: "stop" (eos/stop token) or "length" (the
+    # max_new_tokens cap) — set exactly once, by the engine's single
+    # finish helper.  A stop token landing on the final allowed step is
+    # "stop" (see finish_reason_for), never both and never twice.
+    finish_reason: Optional[str] = None
     # step indices for latency accounting
     arrive_step: int = 0
     start_step: int = -1
@@ -84,8 +89,18 @@ class Request:
     def feed_len(self) -> int:
         return self.prompt_len + len(self.generated)
 
-    def is_finished(self, last_token: int) -> bool:
+    def finish_reason_for(self, last_token: int) -> Optional[str]:
+        """The single reason ``last_token`` (already appended to
+        ``generated``) ends this request, or None if generation
+        continues.  A stop/eos token arriving exactly on the final
+        allowed step reports "stop", not "length" — the token semantics
+        outrank the budget exhaustion it coincides with."""
         if is_stop_token(last_token, self.eos_token,
                          self.stop_tokens or ()):
-            return True
-        return len(self.generated) >= self.max_new_tokens
+            return "stop"
+        if len(self.generated) >= self.max_new_tokens:
+            return "length"
+        return None
+
+    def is_finished(self, last_token: int) -> bool:
+        return self.finish_reason_for(last_token) is not None

@@ -1,5 +1,6 @@
 """Token sampling (greedy / temperature / top-k / top-p), jit-friendly,
-plus stop-token handling for the serving engine.
+plus stop-token handling and the speculative-decode rejection sampler
+for the serving engine.
 
 ``top_p`` (nucleus sampling, Holtzman et al. 2019) keeps the smallest
 set of tokens whose cumulative probability reaches ``p`` and renormalizes
@@ -8,25 +9,29 @@ over it — composing with ``top_k`` (k-filter first, then the nucleus) and
 """
 from __future__ import annotations
 
-from typing import Iterable, Optional
+from typing import Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def sample(logits, rng, temperature: float = 0.0, top_k: int = 0,
-           top_p: float = 0.0):
-    """logits [B, V] -> tokens [B] int32.
+def _filter_logits(logits, top_k: int, top_p: float):
+    """Apply the top-k then top-p filters to (already temperature-scaled)
+    logits, marking dropped tokens -inf.
 
-    temperature <= 0 is greedy (argmax); otherwise logits/temperature
-    are filtered by top-k (keep the k best) and top-p (keep the nucleus
-    reaching cumulative probability p) before categorical sampling.
+    top-k semantics: ``top_k`` is clamped to the vocab size (``top_k >=
+    V`` keeps everything instead of relying on JAX's silent negative-
+    index clamping), and TIES AT THE KTH LOGIT ARE ALL KEPT — every
+    token whose logit equals the kth-largest value survives, so more
+    than k tokens can remain.  Keeping ties is deliberate: dropping an
+    arbitrary subset of equal-probability tokens would make the sampled
+    distribution depend on sort order.
     """
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
+    v = logits.shape[-1]
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        k = min(int(top_k), v)
+        kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if 0.0 < top_p < 1.0:
         desc = jnp.sort(logits, axis=-1)[:, ::-1]          # high -> low
@@ -39,7 +44,87 @@ def sample(logits, rng, temperature: float = 0.0, top_k: int = 0,
         thresh = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
                          keepdims=True)
         logits = jnp.where(logits < thresh, -jnp.inf, logits)
+    return logits
+
+
+def sample(logits, rng, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 0.0):
+    """logits [B, V] -> tokens [B] int32.
+
+    temperature <= 0 is greedy (argmax); otherwise logits/temperature
+    are filtered by top-k (keep the k best, ties at the kth logit all
+    kept — see :func:`_filter_logits`) and top-p (keep the nucleus
+    reaching cumulative probability p) before categorical sampling.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _filter_logits(logits / temperature, top_k, top_p)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def target_probs(logits, temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 0.0):
+    """The exact distribution :func:`sample` draws from, as explicit
+    probabilities [B, V] — the target distribution of the speculative-
+    decode rejection sampler.  temperature <= 0 returns a one-hot at
+    the argmax (greedy is a point mass)."""
+    if temperature <= 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1),
+                              logits.shape[-1], dtype=jnp.float32)
+    logits = _filter_logits(logits / temperature, top_k, top_p)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def spec_accept(logits, draft, rng, temperature: float = 0.0,
+                top_k: int = 0, top_p: float = 0.0
+                ) -> Tuple[List[int], int]:
+    """Modified rejection sampling for speculative decoding (Leviathan
+    et al. 2023), specialized to a GREEDY drafter — the draft
+    distribution q is a point mass at each drafted token, so:
+
+      * draft token d_j is accepted with probability
+        min(1, p(d_j)/q(d_j)) = p(d_j), where p is the request's full
+        sampling distribution (temperature/top-k/top-p applied);
+      * on rejection the corrected token is drawn from the residual
+        normalize(max(p - q, 0)) = p with d_j removed, renormalized;
+      * if every draft token is accepted, one bonus token is drawn from
+        p at the last scored position.
+
+    Each committed token is therefore distributed exactly as a vanilla
+    ``sample`` call at that position — token-exact in expectation.
+    Greedy requests (temperature <= 0) degenerate to deterministic
+    accept-iff-argmax-matches, bit-exact with the spec-off trace.
+
+    logits [k+1, V]: target logits at candidate offsets 0..k (offset j
+    scores the token AFTER d_1..d_j).  draft [k]: drafted tokens.
+    Returns (tokens, accepted): ``tokens`` (length accepted+1) is the
+    committed continuation; ``accepted`` counts kept draft tokens.
+    """
+    k = len(draft)
+    if temperature <= 0.0:
+        am = np.asarray(jnp.argmax(logits, axis=-1))
+        tokens: List[int] = []
+        for j in range(k):
+            if int(am[j]) != int(draft[j]):
+                return tokens + [int(am[j])], j
+            tokens.append(int(draft[j]))
+        return tokens + [int(am[k])], k
+    p = np.asarray(target_probs(logits, temperature, top_k, top_p),
+                   np.float32)                              # [k+1, V]
+    tokens = []
+    for j in range(k):
+        d = int(draft[j])
+        rng, sub = jax.random.split(rng)
+        if float(jax.random.uniform(sub)) < float(p[j, d]):
+            tokens.append(d)
+            continue
+        resid = jnp.asarray(p[j]).at[d].set(0.0)
+        rng, sub = jax.random.split(rng)
+        t = int(jax.random.categorical(sub, jnp.log(resid)))
+        return tokens + [t], j
+    rng, sub = jax.random.split(rng)
+    bonus = int(jax.random.categorical(sub, jnp.log(jnp.asarray(p[k]))))
+    return tokens + [bonus], k
 
 
 def is_stop_token(token: int, eos_token: Optional[int] = None,

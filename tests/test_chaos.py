@@ -345,3 +345,21 @@ def test_tree_digest_detects_bit_flips():
     z32 = np.zeros(4, np.float32)
     assert tree_digest(z32) != tree_digest(np.zeros(8, np.float16))
     assert tree_digest(z32) != tree_digest(z32.reshape(2, 2))
+
+
+def test_spec_verify_fault_heals_token_exact(setup):
+    """The speculative-decode verify step is a chaos site ("verify"):
+    an abort AFTER the candidate KV append but BEFORE commit must heal
+    token-exactly — the supervisor re-prefills every live row from
+    token history (discarding the orphaned candidate appends) and the
+    re-queued verify step commits the same tokens, because drafts are
+    deterministic given the drafter state and the sampling RNG is only
+    consumed at commit."""
+    from repro.serving.engine import SpecConfig
+    cfg, params, spec, oracle = setup
+    plan = FaultPlan([FaultSpec(site="verify", after=3, times=2)])
+    got = serve_trace(params, cfg, spec, backend="hetero",
+                      num_r_workers=2, spec_decode=SpecConfig(k=3),
+                      paged_kv=True, page_size=4, chaos=plan, **CHAOS_KW)
+    assert plan.count("verify") == 2, "verify fault never fired"
+    assert got == oracle

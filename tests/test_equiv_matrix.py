@@ -48,6 +48,41 @@ def test_serving_matrix_matches_colocated(setup, storage, prefill,
 
 
 # ---------------------------------------------------------------------------
+# the speculative-decoding dimension: speculation must be invisible too
+# ---------------------------------------------------------------------------
+SPEC_MATRIX = [(s, "ooo") for s in STORAGE_KW]
+SPEC_MATRIX += [("dense", "fifo"), ("paged", "fifo")]
+
+
+@pytest.mark.parametrize("storage,schedule", SPEC_MATRIX)
+def test_spec_decode_greedy_matches_colocated(setup, storage, schedule):
+    """Greedy serving with self-speculation on (draft k tokens on the
+    S-resident drafter, verify all candidates in one chunk, commit via
+    the deterministic accept walk, truncate the rejected KV) must
+    reproduce the non-speculative colocated oracle BIT-EXACTLY — the
+    tentpole invariant: speculation changes the schedule, never the
+    tokens."""
+    from repro.serving.engine import SpecConfig
+    cfg, params, spec, oracle = setup
+    got = serve_trace(params, cfg, spec, backend="hetero",
+                      num_r_workers=2, schedule=schedule,
+                      spec_decode=SpecConfig(k=3), **STORAGE_KW[storage])
+    assert got == oracle
+
+
+def test_spec_decode_composes_with_chunked_prefill(setup):
+    """Verify works and prefill chunks legally share one chunk-only
+    pipelined step (same micro-batch, disjoint rows) — tokens must
+    still match the oracle."""
+    from repro.serving.engine import SpecConfig
+    cfg, params, spec, oracle = setup
+    got = serve_trace(params, cfg, spec, backend="hetero",
+                      num_r_workers=2, prefill_chunk=5,
+                      spec_decode=SpecConfig(k=2), **STORAGE_KW["paged"])
+    assert got == oracle
+
+
+# ---------------------------------------------------------------------------
 # the shared-prefix dimension: sharing must be invisible to the tokens
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")

@@ -90,6 +90,88 @@ def test_quantize_roundtrip(rng):
     np.testing.assert_allclose(x2, x, atol=float(jnp.abs(x).max()) / 100)
 
 
+# ---------------------------------------------------------------------------
+# speculative-decode verify kernel: T queries per row in one KV sweep
+# ---------------------------------------------------------------------------
+def _verify_tables(rng, b, mp, page, lengths, t, num_pages):
+    """Contiguous-prefix tables covering lengths[b] + t tokens per row."""
+    tables = np.full((b, mp), -1, np.int32)
+    perm = list(rng.permutation(num_pages))
+    for row in range(b):
+        for k in range(-(-(int(lengths[row]) + t) // page)):
+            tables[row, k] = perm.pop()
+    return jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("t", [1, 3, 5])
+@pytest.mark.parametrize("kw", FEATS)
+def test_paged_verify_kernel_vs_oracle(t, kw, rng):
+    b, hkv, g, dh, page, mp = 3, 2, 3, 8, 4, 8
+    num_pages = b * mp
+    lengths = jnp.asarray([0, 7, 13], jnp.int32)
+    pk = _mk(rng, num_pages, page, hkv, dh)
+    pv = _mk(rng, num_pages, page, hkv, dh)
+    q = _mk(rng, b, t, hkv * g, dh)
+    tables = _verify_tables(rng, b, mp, page, np.asarray(lengths), t,
+                            num_pages)
+    o1 = ops.paged_verify_attention(q, pk, pv, tables, lengths,
+                                    use_kernel="pallas", **kw)
+    o2 = R.paged_verify_attention_ref(q, pk, pv, tables, lengths, **kw)
+    np.testing.assert_allclose(o1, o2, atol=3e-5)
+
+
+def test_paged_verify_t1_matches_decode_kernel(rng):
+    """k = 0 speculative decode degenerates to vanilla decode: the T == 1
+    verify pass must agree with the single-token decode kernel."""
+    b, hkv, g, dh, page, mp = 2, 2, 2, 16, 4, 6
+    num_pages = b * mp
+    lengths = jnp.asarray([5, 11], jnp.int32)
+    pk = _mk(rng, num_pages, page, hkv, dh)
+    pv = _mk(rng, num_pages, page, hkv, dh)
+    q = _mk(rng, b, hkv * g, dh)
+    tables = _verify_tables(rng, b, mp, page, np.asarray(lengths), 1,
+                            num_pages)
+    o_dec = ops.paged_decode_attention(q, pk, pv, tables, lengths,
+                                       use_kernel="pallas")
+    o_ver = ops.paged_verify_attention(q[:, None], pk, pv, tables, lengths,
+                                       use_kernel="pallas")[:, 0]
+    np.testing.assert_allclose(o_ver, o_dec, atol=3e-6)
+
+
+def test_paged_verify_kernel_unmapped_row_is_zero(rng):
+    b, t, hkv, g, dh, page, mp = 2, 3, 1, 2, 8, 4, 3
+    pk = _mk(rng, 6, page, hkv, dh)
+    pv = _mk(rng, 6, page, hkv, dh)
+    q = _mk(rng, b, t, hkv * g, dh)
+    tables = jnp.asarray([[0, 1, -1], [-1, -1, -1]], jnp.int32)
+    lengths = jnp.asarray([4, 99], jnp.int32)
+    for use in ("ref", "pallas"):
+        o = ops.paged_verify_attention(q, pk, pv, tables, lengths,
+                                       use_kernel=use)
+        assert float(jnp.abs(o[1]).max()) == 0.0
+        assert float(jnp.abs(o[0]).max()) > 0.0
+
+
+def test_verify_refs_match_per_position_decode(rng):
+    """Row-by-row oracle: position t of the verify output equals a decode
+    call with lengths + t, for dense fp and int8 storage."""
+    b, s, t, hq, hkv, dh = 2, 24, 3, 4, 2, 16
+    q = _mk(rng, b, t, hq, dh)
+    k, v = _mk(rng, b, s, hkv, dh), _mk(rng, b, s, hkv, dh)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    lengths = jnp.asarray([9, 17], jnp.int32)
+    o = ops.verify_attention(q, k, v, pos, lengths)
+    kq, ks = ops.quantize_kv(k)
+    vq, vs = ops.quantize_kv(v)
+    o8 = ops.verify_attention_int8(q, kq, ks, vq, vs, pos, lengths)
+    for j in range(t):
+        d = R.decode_attention_ref(q[:, j], k, v, pos, lengths + j)
+        np.testing.assert_allclose(o[:, j], d, atol=3e-6)
+        d8 = R.decode_attention_int8_ref(q[:, j], kq, ks, vq, vs, pos,
+                                         lengths + j)
+        np.testing.assert_allclose(o8[:, j], d8, atol=3e-6)
+
+
 def test_kernel_matches_model_decode_attention(rng, key):
     """kernel == layers.flash_attention == what the model executes."""
     from repro.models import layers as L

@@ -1,7 +1,8 @@
 """Property-based suite for the ref-counted copy-on-write PagedAllocator.
 
 Random ``admit`` / ``append_chunk`` / decode-grow / ``release`` /
-CoW-``adopt_prefix`` / migration sequences must preserve, after EVERY op:
+CoW-``adopt_prefix`` / spec-rejection-``truncate`` / migration sequences
+must preserve, after EVERY op:
 
   * refcount conservation — sum of refcounts == mapped table slots;
   * no double-free — the free list holds unique ids, disjoint from both
@@ -101,6 +102,15 @@ class Harness:
         self.a.take_clones()
         self.a.register_prefix(row, tokens)
 
+    def truncate(self, row, new_len):
+        """Spec-decode rejection: roll an active row back to a shorter
+        length — the dropped pages must rejoin the pool (or the LRU,
+        for cached prefix pages) without breaking any invariant."""
+        cur = int(self.a.lengths[row])
+        if not self.a.active[row] or cur <= 1:
+            return
+        self.a.truncate(row, 1 + new_len % cur)
+
     def migrate(self):
         """Reassign-and-reinstall: what a fleet topology change does —
         every surviving row re-admitted privately (sharing and the
@@ -156,7 +166,7 @@ class Harness:
 def _run_ops(ops, prefix_cache=True):
     h = Harness(prefix_cache)
     for op in ops:
-        kind = op[0] % 6
+        kind = op[0] % 7
         row = op[1] % ROWS
         fam = op[2] % len(FAMILIES)
         length = 1 + op[3] % CAP
@@ -170,13 +180,15 @@ def _run_ops(ops, prefix_cache=True):
             h.append_chunk(row, 1 + op[3] % (2 * PAGE))
         elif kind == 4:
             h.adopt(row, fam, length)
+        elif kind == 5:
+            h.truncate(row, op[3])
         else:
             h.migrate()
         h.check()
     return h
 
 
-_op = st.tuples(st.integers(0, 5), st.integers(0, ROWS - 1),
+_op = st.tuples(st.integers(0, 6), st.integers(0, ROWS - 1),
                 st.integers(0, 2), st.integers(0, CAP - 1))
 
 

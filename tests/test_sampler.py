@@ -10,7 +10,8 @@ from conftest import tiny_cfg
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
 from repro.serving.request import Request
-from repro.serving.sampler import is_stop_token, sample
+from repro.serving.sampler import (is_stop_token, sample, spec_accept,
+                                   target_probs)
 
 
 def _logits(rng, b=4, v=32):
@@ -74,6 +75,98 @@ def test_top_p_composes_with_top_k(rng):
                               top_k=4, top_p=0.8))
         for row in range(3):
             assert t[row] in topk[row]
+
+
+def test_top_k_at_or_above_vocab_is_no_filter(rng):
+    """Regression: top_k >= V must keep the whole vocabulary explicitly
+    (it used to lean on JAX's silent out-of-bounds index clamping)."""
+    lg = _logits(rng, b=3, v=8)
+    ref = sample(lg, jax.random.PRNGKey(0), temperature=1.0)
+    for k in (8, 9, 50):
+        got = sample(lg, jax.random.PRNGKey(0), temperature=1.0, top_k=k)
+        assert np.array_equal(got, ref)
+        np.testing.assert_allclose(target_probs(lg, 1.0, top_k=k),
+                                   target_probs(lg, 1.0), atol=0)
+
+
+def test_top_k_keeps_ties_at_kth_logit():
+    """Documented semantics: every token tied with the kth-largest logit
+    survives the filter, so the support can exceed k."""
+    lg = jnp.asarray([[3.0, 2.0, 2.0, 0.0, -1.0]], jnp.float32)
+    seen = {int(sample(lg, jax.random.PRNGKey(s), temperature=5.0,
+                       top_k=2)[0]) for s in range(60)}
+    assert seen == {0, 1, 2}    # both tied tokens kept, tail excluded
+
+
+def _np_target_probs(lg, temperature, top_k, top_p):
+    """Independent float32 numpy mirror of sampler.target_probs."""
+    lg = np.asarray(lg, np.float32) / np.float32(temperature)
+    v = lg.shape[-1]
+    if top_k > 0:
+        kth = np.sort(lg, -1)[:, -min(int(top_k), v)][:, None]
+        lg = np.where(lg < kth, -np.inf, lg)
+    if 0.0 < top_p < 1.0:
+        desc = np.sort(lg, -1)[:, ::-1]
+        e = np.exp(desc - desc[:, :1])
+        probs = e / e.sum(-1, keepdims=True)
+        cum = np.cumsum(probs, -1, dtype=np.float32)
+        keep = (cum - probs) < top_p
+        thresh = np.min(np.where(keep, desc, np.inf), -1, keepdims=True)
+        lg = np.where(lg < thresh, -np.inf, lg)
+    e = np.exp(lg - lg.max(-1, keepdims=True))
+    return e / e.sum(-1, keepdims=True)
+
+
+def test_target_probs_property_vs_numpy():
+    """Randomized (B, V, k, p) sweep: the jitted filter pipeline matches
+    an independent numpy implementation — support and probabilities."""
+    r = np.random.default_rng(0)
+    for _ in range(25):
+        b, v = int(r.integers(1, 5)), int(r.integers(2, 33))
+        k = int(r.integers(0, v + 4))           # includes k >= V
+        p = float(r.choice([0.0, round(float(r.uniform(0.2, 0.9)), 3)]))
+        temp = float(r.uniform(0.3, 2.5))
+        lg = r.standard_normal((b, v)).astype(np.float32)
+        got = np.asarray(target_probs(jnp.asarray(lg), temp, k, p))
+        want = _np_target_probs(lg, temp, k, p)
+        np.testing.assert_array_equal(got > 0, want > 0)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_spec_accept_greedy_bit_exact():
+    """temperature 0: accept while the draft matches argmax, then emit
+    the argmax at the first mismatch (or the bonus argmax) — the exact
+    tokens a spec-off greedy trace would produce."""
+    lg = jnp.asarray([[0., 1., 0.], [2., 0., 0.], [0., 0., 3.]],
+                     jnp.float32)                 # argmaxes: 1, 0, 2
+    assert spec_accept(lg, [1, 0], jax.random.PRNGKey(0)) == ([1, 0, 2], 2)
+    assert spec_accept(lg, [1, 2], jax.random.PRNGKey(0)) == ([1, 0], 1)
+    assert spec_accept(lg, [0, 0], jax.random.PRNGKey(0)) == ([1], 0)
+    # rng must be irrelevant for greedy
+    assert spec_accept(lg, [1, 2], jax.random.PRNGKey(9)) == ([1, 0], 1)
+
+
+def test_spec_accept_distribution_chi_squared():
+    """Token-exactness in expectation: whatever the drafter proposed, the
+    first committed token follows the vanilla sampling distribution at
+    that position (chi-squared, small V), and tokens filtered out of the
+    target distribution are never committed."""
+    lg = jnp.asarray([[0.5, -0.2, 1.1, 0.0, -1.0],
+                      [0.1, 0.4, -0.3, 0.8, 0.2]], jnp.float32)
+    kw = dict(temperature=1.3, top_k=4)           # drops token 4 of row 0
+    p0 = np.asarray(target_probs(lg[:1], **kw))[0]
+    n = 900
+    for d in (2, 4):    # the likeliest token, and a filtered-out token
+        counts = np.zeros(lg.shape[-1])
+        for s in range(n):
+            toks, acc = spec_accept(lg, [d], jax.random.PRNGKey(7000 * d + s),
+                                    **kw)
+            assert len(toks) == acc + 1 and acc in (0, 1)
+            counts[toks[0]] += 1
+        exp = p0 * n
+        assert counts[exp == 0].sum() == 0        # filtered never emitted
+        chi2 = ((counts[exp > 0] - exp[exp > 0]) ** 2 / exp[exp > 0]).sum()
+        assert chi2 < 25.0, (d, counts, exp)      # df=3, p<0.001 is 16.3
 
 
 def test_is_stop_token():

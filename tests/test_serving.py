@@ -105,3 +105,101 @@ def test_engine_from_plan(setup):
                        max_new_tokens=4))
     done = eng.run(max_steps=50)
     assert len(done) == 1 and len(done[0].generated) == 4
+
+
+# ---------------------------------------------------------------------------
+# admission length cap: one rule, one message, exact boundary
+# ---------------------------------------------------------------------------
+CAPPED_KW = {
+    "paged": dict(backend="hetero", num_r_workers=1, paged_kv=True,
+                  page_size=4),
+    "chunked": dict(backend="hetero", num_r_workers=1, prefill_chunk=4),
+    "spec": dict(backend="hetero", num_r_workers=1),
+}
+
+
+@pytest.mark.parametrize("mode", sorted(CAPPED_KW))
+def test_length_cap_boundary_and_unified_message(setup, mode):
+    """Every configuration that cannot let the ring wrap (paged KV,
+    chunked prefill, speculative decoding) must admit a request sized
+    EXACTLY to cache_len — prompt + max_new_tokens == cache_len — and
+    reject one token more with the single unified message (the two old
+    copies of this guard had drifted, giving different messages for the
+    same impossibility)."""
+    from repro.serving.engine import SpecConfig
+    cfg, params = setup
+    kw = dict(CAPPED_KW[mode])
+    if mode == "spec":
+        kw["spec_decode"] = SpecConfig(k=2)
+    cache_len = 16
+    eng = ServingEngine(params, cfg, batch=2, cache_len=cache_len,
+                        num_microbatches=2, **kw)
+    try:
+        prompt = np.arange(1, 9, dtype=np.int32)          # 8 tokens
+        fits = Request(rid=0, prompt=prompt,
+                       max_new_tokens=cache_len - len(prompt))
+        eng.submit(fits)                                   # == cap: fine
+        with pytest.raises(ValueError) as ei:
+            eng.submit(Request(rid=1, prompt=prompt,
+                               max_new_tokens=cache_len - len(prompt) + 1))
+        msg = str(ei.value)
+        assert f"exceeds cache_len ({cache_len})" in msg
+        assert "prompt (8)" in msg and "—" in msg          # reason attached
+        done = eng.run(max_steps=120)
+        assert [r.rid for r in done] == [0]
+        assert len(done[0].generated) == cache_len - len(prompt)
+        assert done[0].finish_reason == "length"
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# finish accounting: exactly one record, one reason — both orderings of
+# "stop token" vs "max_new_tokens cap" at the same step
+# ---------------------------------------------------------------------------
+def _probe_unique_tail(params, cfg, prompt, n=8):
+    """Serve greedily once and pick an index whose token first appears
+    there, so eos-at-that-index stops exactly at the cap."""
+    eng = ServingEngine(params, cfg, batch=2, cache_len=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=n))
+    g = eng.run(max_steps=100)[0].generated
+    for i in range(len(g) - 1, -1, -1):
+        if g[i] not in g[:i]:
+            return g, i
+    pytest.skip("trace has no first-occurrence token to pin")
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_stop_at_cap_records_once_with_stop_reason(setup, spec_k):
+    """A stop token landing exactly on the max_new_tokens-th token must
+    finish the request ONCE with finish_reason == "stop" (token
+    semantics outrank budget exhaustion); the same budget without a
+    stop token finishes with "length".  Regression: the engine's three
+    finish sites used to do their own bookkeeping — a cap+stop
+    coincidence depended on which site saw it first."""
+    from repro.serving.engine import SpecConfig
+    cfg, params = setup
+    prompt = np.asarray([7, 3, 11, 19], np.int32)
+    g, i = _probe_unique_tail(params, cfg, prompt)
+    kw = dict(backend="hetero", num_r_workers=1, num_microbatches=2) \
+        if spec_k else {}
+    if spec_k:
+        kw["spec_decode"] = SpecConfig(k=spec_k)
+    eng = ServingEngine(params, cfg, batch=2, cache_len=64, **kw)
+    try:
+        # ordering 1: stop token arrives exactly at the cap
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=i + 1,
+                           eos_token=g[i]))
+        # ordering 2: cap reached, no stop token anywhere
+        eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=i + 1))
+        done = eng.run(max_steps=150)
+        by = {r.rid: r for r in done}
+        assert sorted(by) == [0, 1]
+        assert [r.rid for r in done].count(0) == 1      # recorded once
+        assert by[0].generated == g[:i + 1] == by[1].generated
+        assert by[0].finish_reason == "stop"
+        assert by[1].finish_reason == "length"
+        assert by[0].status.name == "DONE" and by[1].status.name == "DONE"
+    finally:
+        if eng.backend == "hetero":
+            eng.close()
